@@ -1,0 +1,63 @@
+"""Paper sec. 3 — service architecture: API latency/throughput across
+transports and horizontal scaling (Uvicorn x N behind the proxy role).
+
+Columns: transport, workers, requests, wall_s, req_per_s.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.auth import TokenManager
+from repro.core.client import Client, Study, suggestions
+from repro.core.server import HopaasServer
+from repro.core.storage import InMemoryStorage
+from repro.core.transport import (DirectTransport, HttpServiceRunner,
+                                  HttpTransport, RoundRobinTransport)
+
+
+def _drive(transport, token, n_trials: int) -> float:
+    client = Client(transport, token)
+    study = Study(name="bench-api",
+                  properties={"x": suggestions.uniform(0.0, 1.0)},
+                  sampler={"name": "random"}, client=client)
+    t0 = time.time()
+    for _ in range(n_trials):
+        with study.trial() as t:
+            t.loss = (t.x - 0.3) ** 2
+    return time.time() - t0
+
+
+def run(n_trials: int = 200) -> list[dict]:
+    rows = []
+    tokens = TokenManager()
+    tok = tokens.issue("bench")
+
+    # in-process
+    server = HopaasServer(storage=InMemoryStorage(), tokens=tokens)
+    dt = _drive(DirectTransport(server), tok, n_trials)
+    rows.append({"transport": "direct", "workers": 1, "requests": 2 * n_trials,
+                 "wall_s": round(dt, 3), "req_per_s": round(2 * n_trials / dt, 1)})
+
+    # in-process, 4 workers round-robin on shared storage
+    storage = InMemoryStorage()
+    workers = [HopaasServer(storage=storage, tokens=tokens) for _ in range(4)]
+    dt = _drive(RoundRobinTransport(workers), tok, n_trials)
+    rows.append({"transport": "round-robin", "workers": 4,
+                 "requests": 2 * n_trials, "wall_s": round(dt, 3),
+                 "req_per_s": round(2 * n_trials / dt, 1)})
+
+    # real HTTP (the wire the paper uses), 1 and 4 backend workers
+    for n_workers in (1, 4):
+        storage = InMemoryStorage()
+        workers = [HopaasServer(storage=storage, tokens=tokens)
+                   for _ in range(n_workers)]
+        runner = HttpServiceRunner(workers).start()
+        try:
+            dt = _drive(HttpTransport(runner.host, runner.port), tok,
+                        n_trials)
+        finally:
+            runner.stop()
+        rows.append({"transport": "http", "workers": n_workers,
+                     "requests": 2 * n_trials, "wall_s": round(dt, 3),
+                     "req_per_s": round(2 * n_trials / dt, 1)})
+    return rows

@@ -1,0 +1,49 @@
+"""End-to-end: HOPAAS driving real JAX training (the paper's actual use).
+
+A small TPE study over (lr, weight_decay) of a reduced deepseek-7b,
+with median pruning via the trainer's ``should_prune`` hook.  Shows the
+best-found loss beats the median trial — the service is steering.
+
+Columns: trials, pruned, median_loss, best_loss, best_lr.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.auth import TokenManager
+from repro.core.client import Client, Study, suggestions
+from repro.core.server import HopaasServer
+from repro.core.transport import DirectTransport
+from repro.models import registry
+from repro.train.trainer import hopaas_objective
+
+
+def run(n_trials: int = 10, steps: int = 40) -> list[dict]:
+    mcfg = registry.get_config("deepseek-7b", smoke=True)
+    objective = hopaas_objective(mcfg, total_steps=steps, global_batch=8,
+                                 seq_len=32, report_every=10)
+    server = HopaasServer(tokens=TokenManager(), seed=3)
+    tok = server.tokens.issue("bench")
+    client = Client(DirectTransport(server), tok)
+    study = Study(name="hpo-train",
+                  properties={"lr": suggestions.loguniform(1e-5, 3e-2),
+                              "weight_decay": suggestions.loguniform(1e-4, 0.3)},
+                  sampler={"name": "tpe"},
+                  pruner={"name": "median", "n_warmup_steps": 10},
+                  client=client)
+    losses, n_pruned, best, best_lr = [], 0, float("inf"), None
+    for _ in range(n_trials):
+        trial = study.ask()
+        value = objective(trial.params, trial.should_prune)
+        if trial.pruned:
+            n_pruned += 1
+            study.tell(trial, value=value, state="pruned")
+            continue
+        study.tell(trial, value=value)
+        losses.append(value)
+        if value < best:
+            best, best_lr = value, trial.params["lr"]
+    return [{"trials": n_trials, "pruned": n_pruned,
+             "median_loss": round(float(np.median(losses)), 4),
+             "best_loss": round(best, 4),
+             "best_lr": None if best_lr is None else round(best_lr, 6)}]

@@ -1,0 +1,68 @@
+"""Roofline table — reads the dry-run JSON records (deliverable g).
+
+Produces the per-(arch x shape x mesh) table of the three roofline terms,
+the dominant bottleneck, the MODEL_FLOPS/HLO_FLOPs useful ratio, and the
+per-kind score.  Run ``repro.launch.dryrun`` first; columns are read from
+``experiments/dryrun/*.json``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run(mesh: str | None = "16x16") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(path))
+        if mesh is not None and d["mesh"] != mesh:
+            continue
+        r, m = d["roofline"], d["memory"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "mem_flash_ms": round(
+                r.get("memory_s_with_flash_kernel", r["memory_s"]) * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "hbm_util": round(m.get("hbm_utilization", 0.0), 3),
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "score": round(r["bytes_efficiency"] if d["kind"] == "decode"
+                           else r["roofline_fraction"], 4),
+        })
+    if not rows:
+        rows.append({"note": f"no dry-run records in {DRYRUN_DIR}; "
+                     "run `python -m repro.launch.dryrun --all` first"})
+    return rows
+
+
+def render_markdown(out_path: str = "experiments/roofline_table.md") -> str:
+    lines = ["# Roofline table (generated from the dry-run records)", "",
+             "Terms in ms/step per device; `mem_flash` = memory term with "
+             "attention-score traffic removed (the Pallas flash kernel's "
+             "effect); score = roofline_fraction (train/prefill) or "
+             "bytes_efficiency (decode).", ""]
+    for mesh in ("16x16", "2x16x16"):
+        rows = run(mesh)
+        if rows and "note" in rows[0]:
+            continue
+        cols = list(rows[0].keys())
+        lines += [f"## mesh {mesh}", "",
+                  "| " + " | ".join(cols) + " |",
+                  "|" + "---|" * len(cols)]
+        lines += ["| " + " | ".join(str(r[c]) for c in cols) + " |"
+                  for r in rows]
+        lines.append("")
+    text = "\n".join(lines)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return text
+
+
+if __name__ == "__main__":
+    render_markdown()
+    print("wrote experiments/roofline_table.md")

@@ -1,0 +1,73 @@
+"""Paper sec. 1/2 — Bayesian optimization "focuses on promising regions":
+best-found-value vs trial budget for every sampler backend on standard
+test functions.  TPE (the Optuna default the paper deploys) must beat
+random search.
+
+Columns: function, sampler, trials, best(median over seeds), vs_random.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.auth import TokenManager
+from repro.core.client import Client, Study, suggestions
+from repro.core.server import HopaasServer
+from repro.core.transport import DirectTransport
+
+FUNCS = {
+    "branin": {
+        "space": {"x": suggestions.uniform(-5.0, 10.0),
+                  "y": suggestions.uniform(0.0, 15.0)},
+        "f": lambda p: (p["y"] - 5.1 / (4 * math.pi ** 2) * p["x"] ** 2
+                        + 5 / math.pi * p["x"] - 6) ** 2
+        + 10 * (1 - 1 / (8 * math.pi)) * math.cos(p["x"]) + 10,
+        "optimum": 0.397887,
+    },
+    "rosenbrock2d": {
+        "space": {"x": suggestions.uniform(-2.0, 2.0),
+                  "y": suggestions.uniform(-1.0, 3.0)},
+        "f": lambda p: (1 - p["x"]) ** 2 + 100 * (p["y"] - p["x"] ** 2) ** 2,
+        "optimum": 0.0,
+    },
+    "logspace-quad": {
+        "space": {"lr": suggestions.loguniform(1e-6, 1e0)},
+        "f": lambda p: (math.log10(p["lr"]) + 3.0) ** 2,   # best at 1e-3
+        "optimum": 0.0,
+    },
+}
+
+SAMPLERS = ["random", "quasirandom", "tpe", "gp", "cmaes"]
+
+
+def _best_after(sampler: str, fname: str, n_trials: int, seed: int) -> float:
+    spec = FUNCS[fname]
+    server = HopaasServer(tokens=TokenManager(), seed=seed)
+    tok = server.tokens.issue("bench")
+    client = Client(DirectTransport(server), tok)
+    study = Study(name=f"{fname}-{sampler}-{seed}", properties=spec["space"],
+                  sampler={"name": sampler}, client=client)
+    best = float("inf")
+    for _ in range(n_trials):
+        with study.trial() as t:
+            t.loss = spec["f"](t.params)
+            best = min(best, t.loss)
+    return best
+
+
+def run(n_trials: int = 48, n_seeds: int = 3) -> list[dict]:
+    rows = []
+    for fname in FUNCS:
+        base = None
+        for sampler in SAMPLERS:
+            vals = [_best_after(sampler, fname, n_trials, s)
+                    for s in range(n_seeds)]
+            med = float(np.median(vals))
+            if sampler == "random":
+                base = med
+            rows.append({"function": fname, "sampler": sampler,
+                         "trials": n_trials,
+                         "best_median": round(med, 5),
+                         "vs_random": round(base / max(med, 1e-12), 2)})
+    return rows

@@ -1,0 +1,72 @@
+"""Benchmark harness — one table per paper claim (+ the roofline table).
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run --only api,samplers
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+
+TABLES = {
+    "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
+    "samplers": ("bench_samplers", "paper sec.1/2: BO beats random"),
+    "pruners": ("bench_pruners", "paper sec.2: pruning saves compute"),
+    "campaign": ("bench_campaign", "paper sec.4: elastic multi-worker campaign"),
+    "hpo_train": ("bench_hpo_train", "end-to-end: HOPAAS steering JAX training"),
+    "roofline": ("bench_roofline", "dry-run roofline terms (deliverable g)"),
+}
+
+
+def _fmt_table(rows: list[dict]) -> str:
+    if not rows:
+        return "(empty)"
+    cols = list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    lines = ["  ".join(str(c).ljust(widths[c]) for c in cols)]
+    lines.append("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        lines.append("  ".join(str(r.get(c, "")).ljust(widths[c])
+                               for c in cols))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table names")
+    ap.add_argument("--out", default="experiments/benchmarks")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(TABLES)
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for name, (module, caption) in TABLES.items():
+        if name not in only:
+            continue
+        print(f"\n=== {name}: {caption} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{module}")
+            rows = mod.run()
+        except Exception as e:   # keep the harness going
+            failures.append((name, repr(e)))
+            print(f"  FAILED: {e!r}")
+            continue
+        print(_fmt_table(rows))
+        print(f"  ({time.time() - t0:.1f}s)")
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+    if failures:
+        print("\nFAILURES:", failures)
+        return 1
+    print("\nall benchmark tables written to", args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

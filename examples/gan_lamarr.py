@@ -1,0 +1,149 @@
+"""GAN hyperparameter campaign — the paper's sec. 4 workload class.
+
+Lamarr parameterizes the LHCb detector response with GANs; "adversarial
+models are particularly sensitive to the choice of the hyperparameter
+configuration".  This example trains a real (small) JAX GAN on a
+synthetic multi-modal "detector response" distribution and lets HOPAAS
+steer (lr_g, lr_d, latent, width) with TPE + median pruning on an
+intermediate two-sample metric.
+
+  PYTHONPATH=src python examples/gan_lamarr.py [--trials 6] [--steps 300]
+"""
+import argparse
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.auth import TokenManager
+from repro.core.client import Client, Study, suggestions
+from repro.core.report import format_report
+from repro.core.server import HopaasServer
+from repro.core.transport import DirectTransport
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ------------------------------------------------------------------ #
+# the "detector": a 2-D, 8-mode ring mixture (stand-in for the high-level
+# response distributions Lamarr parameterizes)
+# ------------------------------------------------------------------ #
+def sample_real(key, n):
+    k1, k2 = jax.random.split(key)
+    mode = jax.random.randint(k1, (n,), 0, 8)
+    ang = 2 * math.pi * mode.astype(jnp.float32) / 8
+    centers = jnp.stack([2 * jnp.cos(ang), 2 * jnp.sin(ang)], -1)
+    return centers + 0.15 * jax.random.normal(k2, (n, 2))
+
+
+def mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        params.append({"w": jax.random.normal(sub, (a, b)) / jnp.sqrt(a),
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.leaky_relu(x, 0.2)
+    return x
+
+
+def mmd(x, y, sigma=1.0):
+    """Gaussian-kernel MMD^2 — the pruning/objective metric."""
+    def k(a, b):
+        d = jnp.sum((a[:, None] - b[None]) ** 2, -1)
+        return jnp.exp(-d / (2 * sigma ** 2))
+    return k(x, x).mean() + k(y, y).mean() - 2 * k(x, y).mean()
+
+
+def train_gan(params_hp, report, steps, seed=0):
+    latent = int(params_hp["latent"])
+    width = int(params_hp["width"])
+    key = jax.random.key(seed)
+    kg, kd, key = jax.random.split(key, 3)
+    G = mlp_init(kg, [latent, width, width, 2])
+    D = mlp_init(kd, [2, width, width, 1])
+    og = AdamWConfig(lr=params_hp["lr_g"], b1=0.5, b2=0.9, weight_decay=0.0,
+                     grad_clip=0.0)
+    od = AdamWConfig(lr=params_hp["lr_d"], b1=0.5, b2=0.9, weight_decay=0.0,
+                     grad_clip=0.0)
+    sg, sd = adamw_init(G, og), adamw_init(D, od)
+    B = 128
+
+    @jax.jit
+    def step(G, D, sg, sd, key):
+        kz, kr, kz2 = jax.random.split(key, 3)
+        z = jax.random.normal(kz, (B, latent))
+        real = sample_real(kr, B)
+
+        def d_loss(D):
+            fake = mlp_apply(G, z)
+            lr_ = jax.nn.sigmoid(mlp_apply(D, real))
+            lf = jax.nn.sigmoid(mlp_apply(D, fake))
+            return -jnp.mean(jnp.log(lr_ + 1e-6) + jnp.log(1 - lf + 1e-6))
+
+        gd = jax.grad(d_loss)(D)
+        D2, sd2, _ = adamw_update(gd, sd, D, od)
+
+        def g_loss(G):
+            fake = mlp_apply(G, jax.random.normal(kz2, (B, latent)))
+            return -jnp.mean(jnp.log(jax.nn.sigmoid(mlp_apply(D2, fake))
+                                     + 1e-6))
+
+        gg = jax.grad(g_loss)(G)
+        G2, sg2, _ = adamw_update(gg, sg, G, og)
+        return G2, D2, sg2, sd2
+
+    eval_every = max(steps // 6, 1)
+    metric = float("inf")
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        G, D, sg, sd = step(G, D, sg, sd, sub)
+        if (t + 1) % eval_every == 0:
+            ke, kz = jax.random.split(jax.random.key(t))
+            fake = mlp_apply(G, jax.random.normal(kz, (512, latent)))
+            metric = float(mmd(sample_real(ke, 512), fake))
+            if report((t + 1) // eval_every, metric):
+                return metric          # pruned
+    return metric
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=6)
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    server = HopaasServer(tokens=TokenManager(), seed=1)
+    client = Client(DirectTransport(server), server.tokens.issue("gan"))
+    study = Study(
+        name="lamarr-gan",
+        properties={"lr_g": suggestions.loguniform(1e-5, 1e-2),
+                    "lr_d": suggestions.loguniform(1e-5, 1e-2),
+                    "latent": suggestions.int(4, 64),
+                    "width": suggestions.categorical([64, 128, 256])},
+        direction="minimize", sampler={"name": "tpe"},
+        pruner={"name": "median", "n_warmup_steps": 2}, client=client)
+
+    for i in range(args.trials):
+        trial = study.ask()
+        print(f"trial {trial.id}: lr_g={trial.lr_g:.2e} lr_d={trial.lr_d:.2e} "
+              f"latent={trial.latent} width={trial.width}", flush=True)
+        value = train_gan(trial.params, trial.should_prune, args.steps,
+                          seed=i)
+        study.tell(trial, value=value,
+                   state="pruned" if trial.pruned else None)
+        print(f"  -> MMD^2 {value:.4f}" + (" (pruned)" if trial.pruned
+                                           else ""))
+
+    print()
+    print(format_report(server.storage.get_study(study.study_key)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Multi-objective HPO — the paper's sec. 5 future work, implemented.
+
+Fast-simulation models (the paper's Lamarr workload) trade fidelity
+against inference cost.  This example drives a real bi-objective study —
+minimize [validation loss, parameter count] of a small LM — with the
+NSGA-II sampler, and prints the resulting Pareto front from the service
+API (what the web UI's front plot would show).
+
+  PYTHONPATH=src python examples/multiobjective.py [--trials 10]
+"""
+import argparse
+
+from repro.core.auth import TokenManager
+from repro.core.client import Client, Study, suggestions
+from repro.core.server import HopaasServer
+from repro.core.transport import DirectTransport
+from repro.data import DataConfig
+from repro.models import registry
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def objective(params) -> tuple[float, float]:
+    width = int(params["width"])
+    layers = int(params["layers"])
+    mcfg = registry.get_config("deepseek-7b", smoke=True).replace(
+        n_layers=layers, d_model=width, d_ff=width * 3,
+        n_heads=4, n_kv_heads=4, head_dim=width // 4, vocab_size=512)
+    n_params = mcfg.n_params()
+    res = Trainer(mcfg,
+                  AdamWConfig(lr=float(params["lr"]), weight_decay=0.0),
+                  DataConfig(global_batch=8, seq_len=32, seed=0),
+                  TrainerConfig(total_steps=40)).run()
+    return res.final_loss, float(n_params)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=10)
+    args = ap.parse_args()
+
+    server = HopaasServer(tokens=TokenManager(), seed=7)
+    token = server.tokens.issue("mo-user")
+    client = Client(DirectTransport(server), token)
+    study = Study(
+        name="loss-vs-size",
+        properties={"width": suggestions.categorical([32, 64, 128]),
+                    "layers": suggestions.int(1, 4),
+                    "lr": suggestions.loguniform(1e-4, 1e-2)},
+        directions=["minimize", "minimize"],
+        sampler={"name": "nsga2", "population": 4},
+        client=client)
+
+    for _ in range(args.trials):
+        t = study.ask()
+        loss, size = objective(t.params)
+        study.tell(t, value=[loss, size])
+        print(f"trial {t.id}: width={t.width} layers={t.layers} "
+              f"lr={t.lr:.1e} -> loss {loss:.3f}, {size/1e3:.0f}K params")
+
+    _, payload = server.handle("GET", f"/api/studies/{token}")
+    rec = [s for s in payload["studies"]
+           if s["key"] == study.study_key][0]
+    print("\nPareto front (loss, params):")
+    for p in sorted(rec["pareto_front"], key=lambda r: r["values"][1]):
+        print(f"  {p['values'][0]:.3f} @ {p['values'][1]/1e3:.0f}K  "
+              f"{p['params']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""API-token authentication.
+
+The paper (sec. 3) authenticates API calls with user-generated tokens
+carried in the request path (``/api/ask/<token>``); each token has a
+validity period defined at generation and can be revoked at any time.
+Tokens here are HMAC-signed, self-describing strings so that stateless
+server workers can verify them with only the shared secret, while
+revocation is tracked in shared state.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import hmac
+import json
+import threading
+import time
+import uuid
+
+
+class AuthError(Exception):
+    pass
+
+
+class TokenManager:
+    def __init__(self, secret: str = "hopaas-secret"):
+        self._secret = secret.encode()
+        self._revoked: set[str] = set()
+        self._lock = threading.Lock()
+
+    # -- issue ------------------------------------------------------------
+    def issue(self, user: str, ttl_seconds: float = 30 * 24 * 3600.0) -> str:
+        payload = {"user": user, "exp": time.time() + ttl_seconds,
+                   "jti": uuid.uuid4().hex[:12]}
+        body = base64.urlsafe_b64encode(json.dumps(payload).encode()).decode().rstrip("=")
+        sig = self._sign(body)
+        return f"{body}.{sig}"
+
+    def _sign(self, body: str) -> str:
+        return hmac.new(self._secret, body.encode(), hashlib.sha256).hexdigest()[:24]
+
+    # -- verify -------------------------------------------------------------
+    def verify(self, token: str) -> dict:
+        try:
+            body, sig = token.rsplit(".", 1)
+        except ValueError:
+            raise AuthError("malformed token")
+        if not hmac.compare_digest(sig, self._sign(body)):
+            raise AuthError("bad signature")
+        pad = "=" * (-len(body) % 4)
+        payload = json.loads(base64.urlsafe_b64decode(body + pad))
+        if payload["exp"] < time.time():
+            raise AuthError("token expired")
+        with self._lock:
+            if payload["jti"] in self._revoked:
+                raise AuthError("token revoked")
+        return payload
+
+    def revoke(self, token: str) -> None:
+        body, _ = token.rsplit(".", 1)
+        pad = "=" * (-len(body) % 4)
+        payload = json.loads(base64.urlsafe_b64decode(body + pad))
+        with self._lock:
+            self._revoked.add(payload["jti"])

@@ -1,0 +1,157 @@
+"""Python frontend for the HOPAAS service (the Zenodo ``hopaas_client`` role).
+
+The client is a thin wrapper over the REST APIs (paper sec. 2): the
+protocol is language-agnostic; this class hierarchy only adds convenience.
+
+    client = Client(transport, token)
+    study = Study(name="opt", properties={"lr": space.loguniform(1e-5, 1e-1)},
+                  direction="minimize", sampler={"name": "tpe"},
+                  pruner={"name": "median"}, client=client)
+    with study.trial() as trial:
+        for step in range(epochs):
+            loss = train_one_epoch(lr=trial.lr)
+            if trial.should_prune(step, loss):
+                break
+        trial.loss = loss          # -> tell on context exit
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator
+
+from .transport import Transport
+
+
+class HopaasError(RuntimeError):
+    pass
+
+
+# -- ergonomic space constructors (mirror hopaas_client.suggestions) -----
+class suggestions:
+    @staticmethod
+    def uniform(low: float, high: float) -> dict:
+        return {"type": "uniform", "low": low, "high": high}
+
+    @staticmethod
+    def loguniform(low: float, high: float) -> dict:
+        return {"type": "loguniform", "low": low, "high": high}
+
+    @staticmethod
+    def int(low: int, high: int) -> dict:       # noqa: A003
+        return {"type": "int", "low": low, "high": high}
+
+    @staticmethod
+    def logint(low: int, high: int) -> dict:
+        return {"type": "logint", "low": low, "high": high}
+
+    @staticmethod
+    def categorical(choices: list) -> dict:
+        return {"type": "categorical", "choices": choices}
+
+
+class Client:
+    def __init__(self, transport: Transport, token: str, worker_id: str = "client"):
+        self.transport = transport
+        self.token = token
+        self.worker_id = worker_id
+
+    def _post(self, endpoint: str, body: dict[str, Any]) -> dict[str, Any]:
+        status, payload = self.transport.request(
+            "POST", f"/api/{endpoint}/{self.token}", body)
+        if status != 200:
+            raise HopaasError(f"{endpoint} -> {status}: {payload.get('detail')}")
+        return payload
+
+    def version(self) -> str:
+        status, payload = self.transport.request("GET", "/api/version")
+        if status != 200:
+            raise HopaasError(f"version -> {status}")
+        return payload["version"]
+
+    def studies(self) -> list[dict[str, Any]]:
+        status, payload = self.transport.request(
+            "GET", f"/api/studies/{self.token}")
+        if status != 200:
+            raise HopaasError(f"studies -> {status}: {payload.get('detail')}")
+        return payload["studies"]
+
+
+class Trial:
+    """A live trial.  Suggested hyperparameters are exposed as attributes
+    (``trial.lr``) and via ``trial.params``."""
+
+    def __init__(self, study: "Study", payload: dict[str, Any]):
+        self._study = study
+        self.uid: str = payload["trial_uid"]
+        self.id: int = payload["trial_id"]
+        self.params: dict[str, Any] = payload["properties"]
+        self.loss: float | None = None      # set by user code before exit
+        self.pruned = False
+        self.failed = False
+
+    def __getattr__(self, name: str) -> Any:
+        params = object.__getattribute__(self, "params")
+        if name in params:
+            return params[name]
+        raise AttributeError(name)
+
+    def should_prune(self, step: int, value: float) -> bool:
+        payload = self._study._client._post(
+            "should_prune", {"trial_uid": self.uid, "step": step, "value": value})
+        if payload["should_prune"]:
+            self.pruned = True
+        return self.pruned
+
+
+class Study:
+    def __init__(self, name: str, properties: dict[str, Any],
+                 direction: str = "minimize",
+                 sampler: dict[str, Any] | None = None,
+                 pruner: dict[str, Any] | None = None,
+                 client: Client | None = None,
+                 directions: list[str] | None = None):
+        if client is None:
+            raise ValueError("a Client is required")
+        self.name = name
+        self.properties = properties
+        self.direction = direction
+        self.directions = directions        # multi-objective when set
+        self.sampler = sampler or {"name": "tpe"}
+        self.pruner = pruner or {"name": "none"}
+        self._client = client
+        self.study_key: str | None = None
+
+    def ask(self) -> Trial:
+        body = {
+            "name": self.name, "properties": self.properties,
+            "direction": self.direction, "sampler": self.sampler,
+            "pruner": self.pruner, "worker_id": self._client.worker_id,
+        }
+        if self.directions:
+            body["directions"] = self.directions
+        payload = self._client._post("ask", body)
+        self.study_key = payload["study_key"]
+        return Trial(self, payload)
+
+    def tell(self, trial: Trial, value: float | None = None,
+             state: str | None = None) -> None:
+        if state is None:
+            state = ("pruned" if trial.pruned else
+                     "failed" if trial.failed else "completed")
+        self._client._post("tell", {
+            "trial_uid": trial.uid,
+            "value": trial.loss if value is None else value,
+            "state": state,
+        })
+
+    @contextlib.contextmanager
+    def trial(self) -> Iterator[Trial]:
+        t = self.ask()
+        try:
+            yield t
+        except Exception:
+            t.failed = True
+            self.tell(t, state="failed")
+            raise
+        else:
+            self.tell(t)

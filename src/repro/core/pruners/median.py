@@ -1,0 +1,48 @@
+from __future__ import annotations
+
+import numpy as np
+
+from ..types import Study, Trial, TrialState
+from .base import Pruner
+
+
+class PercentilePruner(Pruner):
+    """Prune if the trial's intermediate is worse than the given percentile
+    of other trials' intermediates at the same step (Optuna semantics)."""
+
+    def __init__(self, percentile: float = 50.0, n_startup_trials: int = 4,
+                 n_warmup_steps: int = 0, interval_steps: int = 1):
+        self.percentile = float(percentile)
+        self.n_startup_trials = int(n_startup_trials)
+        self.n_warmup_steps = int(n_warmup_steps)
+        self.interval_steps = max(int(interval_steps), 1)
+
+    def should_prune(self, study: Study, trial: Trial, step: int) -> bool:
+        if step < self.n_warmup_steps:
+            return False
+        if (step - self.n_warmup_steps) % self.interval_steps != 0:
+            return False
+        sign = self._sign(study)
+        # competitors: trials (finished or further along) that reported at `step`
+        others = []
+        for t in study.trials:
+            if t.uid == trial.uid or step not in t.intermediates:
+                continue
+            if t.state in (TrialState.COMPLETED, TrialState.PRUNED) or t.last_step() >= step:
+                others.append(sign * t.intermediates[step])
+        if len(others) < self.n_startup_trials:
+            return False
+        threshold = float(np.percentile(others, self.percentile))
+        # best value this trial has achieved up to `step` (noise-robust)
+        mine = min(sign * v for s, v in trial.intermediates.items() if s <= step)
+        return mine > threshold
+
+
+class MedianPruner(PercentilePruner):
+    """Prune if worse than the median of other trials at the same step
+    (Optuna's default pruner)."""
+
+    def __init__(self, n_startup_trials: int = 4, n_warmup_steps: int = 0,
+                 interval_steps: int = 1):
+        super().__init__(percentile=50.0, n_startup_trials=n_startup_trials,
+                         n_warmup_steps=n_warmup_steps, interval_steps=interval_steps)

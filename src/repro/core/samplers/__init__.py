@@ -1,0 +1,43 @@
+"""Gradient-less optimization backends (the Optuna role in the paper).
+
+All samplers implement ``suggest(space, trials, rng) -> params`` where
+``trials`` is the list of *completed* trials of the study.  Registry keyed
+by the ``sampler`` spec of the study config, e.g. ``{"name": "tpe"}``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from .base import Sampler
+from .random import RandomSampler
+from .grid import GridSampler
+from .quasirandom import QuasiRandomSampler
+from .tpe import TPESampler
+from .gp import GPSampler
+from .cmaes import CmaEsSampler
+from .nsga2 import NSGA2Sampler
+
+_REGISTRY = {
+    "random": RandomSampler,
+    "grid": GridSampler,
+    "halton": QuasiRandomSampler,
+    "quasirandom": QuasiRandomSampler,
+    "tpe": TPESampler,
+    "gp": GPSampler,
+    "cmaes": CmaEsSampler,
+    "nsga2": NSGA2Sampler,
+}
+
+
+def make_sampler(spec: dict[str, Any]) -> Sampler:
+    spec = dict(spec or {"name": "tpe"})
+    name = spec.pop("name", "tpe")
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown sampler {name!r}; known: {sorted(_REGISTRY)}")
+    return cls(**spec)
+
+
+__all__ = ["Sampler", "make_sampler", "RandomSampler", "GridSampler",
+           "QuasiRandomSampler", "TPESampler", "GPSampler", "CmaEsSampler"]

@@ -1,0 +1,31 @@
+from __future__ import annotations
+
+import abc
+from typing import Any
+
+import numpy as np
+
+from ..space import SearchSpace
+from ..types import Direction, Trial, TrialState
+
+
+class Sampler(abc.ABC):
+    """Strategy that proposes the next hyperparameter set for a study."""
+
+    @abc.abstractmethod
+    def suggest(self, space: SearchSpace, trials: list[Trial],
+                direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
+        ...
+
+    # -- helpers shared by the numeric samplers -------------------------
+    @staticmethod
+    def observations(space: SearchSpace, trials: list[Trial], direction: Direction
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """(X, y) of completed trials in unit-cube coords, minimization sign."""
+        done = [t for t in trials if t.state == TrialState.COMPLETED and t.value is not None]
+        if not done:
+            return np.zeros((0, space.dim)), np.zeros((0,))
+        X = np.stack([space.to_unit_vector(t.params) for t in done])
+        sign = 1.0 if direction == Direction.MINIMIZE else -1.0
+        y = np.array([sign * t.value for t in done], dtype=np.float64)
+        return X, y

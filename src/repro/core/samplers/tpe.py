@@ -1,0 +1,124 @@
+"""Tree-structured Parzen Estimator (Bergstra et al. 2011) — the Optuna
+default sampler the paper's reference implementation relies on.
+
+The surrogate split/score path is implemented with JAX and jitted: trial
+histories are padded to power-of-two lengths so that the jit cache stays
+small while the KDE math runs as one fused XLA computation.
+
+Model: completed observations are split into the best ``gamma``-fraction
+(l, "good") and the rest (g, "bad").  Each set defines a per-dimension
+Parzen mixture (truncated Gaussians on the unit cube; categorical weights
+for discrete dims).  ``n_candidates`` points are drawn from l(x) and the
+one maximizing  log l(x) - log g(x)  (equivalently EI) is suggested.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..space import SearchSpace
+from ..types import Direction, Trial
+from .base import Sampler
+from .quasirandom import QuasiRandomSampler
+
+
+def _pad_pow2(n: int, lo: int = 8) -> int:
+    return max(lo, 1 << (n - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("n_candidates",))
+def _tpe_propose(xg: jnp.ndarray, mg: jnp.ndarray,
+                 xb: jnp.ndarray, mb: jnp.ndarray,
+                 key: jax.Array, n_candidates: int) -> jnp.ndarray:
+    """Propose a point on the unit cube.
+
+    xg: (Ng, D) good observations (padded), mg: (Ng,) validity mask.
+    xb: (Nb, D) bad observations (padded),  mb: (Nb,) validity mask.
+    Returns (D,) best candidate.
+
+    Both mixtures carry a uniform-prior component (a wide Gaussian at the
+    cube center with weight 1, Optuna's ``prior_weight``): without it the
+    l/g ratio over-exploits the incumbent cluster and TPE degenerates to
+    local search.
+    """
+    d = xg.shape[1]
+    kcand, kpick, kunif = jax.random.split(key, 3)
+
+    def _bandwidth(obs, mask, lo, hi):
+        n = jnp.maximum(mask.sum(), 1.0)
+        mean = (obs * mask[:, None]).sum(0) / n
+        var = ((obs - mean) ** 2 * mask[:, None]).sum(0) / n
+        return jnp.clip(jnp.sqrt(var + 1e-12) * n ** (-1.0 / (d + 4)), lo, hi)
+
+    bw = _bandwidth(xg, mg, 0.05, 0.5)
+    bw_b = _bandwidth(xb, mb, 0.08, 0.7)
+
+    # Candidates: 3/4 sampled from l(x) (good point + bandwidth jitter),
+    # 1/4 uniform exploration.
+    ng = jnp.maximum(mg.sum(), 1.0)
+    idx = jax.random.categorical(kcand, jnp.log(mg / ng + 1e-20),
+                                 shape=(n_candidates,))
+    noise = jax.random.normal(kpick, (n_candidates, d)) * bw
+    from_l = jnp.clip(xg[idx] + noise, 0.0, 1.0)
+    uniform = jax.random.uniform(kunif, (n_candidates, d))
+    take_l = (jnp.arange(n_candidates) % 4 != 3)[:, None]
+    cands = jnp.where(take_l, from_l, uniform)
+
+    def log_parzen(x, obs, mask, bws):
+        # x: (C, D); obs: (N, D) -> (C,) masked mixture log-density
+        z = (x[:, None, :] - obs[None, :, :]) / bws          # (C, N, D)
+        logk = -0.5 * z * z - jnp.log(bws * math.sqrt(2 * math.pi))
+        logk = logk.sum(-1)                                   # (C, N) product over dims
+        logk = jnp.where(mask[None, :] > 0, logk, -jnp.inf)
+        # uniform-prior component: wide Gaussian at the center, weight 1
+        zp = (x - 0.5) / 1.0
+        logp = (-0.5 * zp * zp - jnp.log(math.sqrt(2 * math.pi))).sum(-1)
+        n = jnp.maximum(mask.sum(), 1.0)
+        mix = jnp.logaddexp(jax.scipy.special.logsumexp(logk, axis=1), logp)
+        return mix - jnp.log(n + 1.0)
+
+    score = log_parzen(cands, xg, mg, bw) - log_parzen(cands, xb, mb, bw_b)
+    return cands[jnp.argmax(score)]
+
+
+class TPESampler(Sampler):
+    def __init__(self, n_startup_trials: int = 10, gamma: float | None = None,
+                 n_candidates: int = 64, seed: int = 0):
+        self.n_startup_trials = int(n_startup_trials)
+        self.gamma = gamma                 # None -> Optuna default schedule
+        self.n_candidates = int(n_candidates)
+        self._startup = QuasiRandomSampler(seed=seed)
+
+    def _n_good(self, n: int) -> int:
+        if self.gamma is not None:
+            return max(2, int(math.ceil(self.gamma * n)))
+        return max(2, min(int(math.ceil(0.1 * n)), 25))   # Optuna default_gamma
+
+    def suggest(self, space: SearchSpace, trials: list[Trial],
+                direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
+        X, y = self.observations(space, trials, direction)
+        if len(y) < self.n_startup_trials or space.dim == 0:
+            return self._startup.suggest(space, trials, direction, rng)
+
+        n_good = self._n_good(len(y))
+        order = np.argsort(y)
+        good, bad = X[order[:n_good]], X[order[n_good:]]
+        if len(bad) == 0:       # degenerate split: everything is "good"
+            bad = good
+
+        ng, nb = _pad_pow2(len(good)), _pad_pow2(len(bad))
+        xg = np.zeros((ng, space.dim)); xg[: len(good)] = good
+        mg = np.zeros(ng); mg[: len(good)] = 1.0
+        xb = np.zeros((nb, space.dim)); xb[: len(bad)] = bad
+        mb = np.zeros(nb); mb[: len(bad)] = 1.0
+
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        u = _tpe_propose(jnp.asarray(xg), jnp.asarray(mg),
+                         jnp.asarray(xb), jnp.asarray(mb),
+                         key, self.n_candidates)
+        return space.from_unit_vector(np.asarray(u))

@@ -1,0 +1,221 @@
+"""The HOPAAS server: ask / tell / should_prune / version (paper Table 1).
+
+``HopaasServer.handle(method, path, body)`` is transport-independent — the
+same handler is mounted behind the stdlib HTTP transport (the Uvicorn role)
+or called in-process (``DirectTransport``).  Multiple ``HopaasServer``
+*workers* may share one storage object, reproducing the paper's
+"scalable set of Uvicorn instances + shared PostgreSQL" architecture.
+
+Fault tolerance beyond the paper's text (needed for 1000+-node campaigns):
+  * every RUNNING trial carries a *lease*; `should_prune` reports act as
+    heartbeats that renew it;
+  * `sweep_expired()` marks trials whose lease lapsed as FAILED and
+    re-enqueues their parameters so another worker picks them up (straggler
+    mitigation / elastic membership);
+  * all state mutations flow through the (journaled) storage, so a service
+    restart resumes every study where it left off.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from .auth import AuthError, TokenManager
+from .pruners import make_pruner
+from .samplers import make_sampler
+from .space import SearchSpace
+from .storage import InMemoryStorage
+from .types import Direction, StudyConfig, TrialState
+
+HOPAAS_VERSION = "1.0.0-jax"
+
+
+class HopaasServer:
+    def __init__(self, storage: InMemoryStorage | None = None,
+                 tokens: TokenManager | None = None,
+                 lease_seconds: float = 60.0, max_retries: int = 3,
+                 seed: int = 0, worker_name: str = "worker-0"):
+        self.storage = storage or InMemoryStorage()
+        self.tokens = tokens or TokenManager()
+        self.lease_seconds = float(lease_seconds)
+        self.max_retries = int(max_retries)
+        self.worker_name = worker_name
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.RLock()
+        # per-study sampler/pruner/space caches (samplers can be stateful)
+        self._samplers: dict[str, Any] = {}
+        self._pruners: dict[str, Any] = {}
+        self._spaces: dict[str, SearchSpace] = {}
+
+    # ------------------------------------------------------------------ #
+    # transport-independent request handler
+    # ------------------------------------------------------------------ #
+    def handle(self, method: str, path: str, body: dict[str, Any] | None = None
+               ) -> tuple[int, dict[str, Any]]:
+        try:
+            parts = [p for p in path.split("/") if p]
+            if parts[:1] != ["api"]:
+                return 404, {"detail": "not found"}
+            endpoint = parts[1] if len(parts) > 1 else ""
+            if method == "GET" and endpoint == "version":
+                return 200, {"version": HOPAAS_VERSION}
+            token = parts[2] if len(parts) > 2 else ""
+            try:
+                identity = self.tokens.verify(token)
+            except AuthError as e:
+                return 401, {"detail": str(e)}
+            body = body or {}
+            if method == "POST" and endpoint == "ask":
+                return self._ask(body, identity)
+            if method == "POST" and endpoint == "tell":
+                return self._tell(body)
+            if method == "POST" and endpoint == "should_prune":
+                return self._should_prune(body)
+            if method == "GET" and endpoint == "studies":
+                return self._studies()
+            return 404, {"detail": f"unknown endpoint {endpoint!r}"}
+        except Exception as e:  # a production server never drops the socket
+            return 500, {"detail": f"{type(e).__name__}: {e}"}
+
+    # ------------------------------------------------------------------ #
+    # endpoints
+    # ------------------------------------------------------------------ #
+    def _ask(self, body: dict[str, Any], identity: dict[str, Any]
+             ) -> tuple[int, dict[str, Any]]:
+        config = StudyConfig(
+            name=body.get("name", "unnamed"),
+            properties=body.get("properties", {}),
+            direction=Direction(body.get("direction", "minimize")),
+            sampler=body.get("sampler", {"name": "tpe"}),
+            pruner=body.get("pruner", {"name": "none"}),
+            directions=body.get("directions"),
+        )
+        with self._lock:
+            study, created = self.storage.get_or_create_study(config)
+            key = study.key
+            if key not in self._spaces:
+                self._spaces[key] = SearchSpace.from_properties(config.properties)
+                self._samplers[key] = make_sampler(config.sampler)
+                self._pruners[key] = make_pruner(config.pruner)
+            self.sweep_expired(key)
+
+            waiting = self.storage.pop_waiting(key)
+            if waiting is not None:      # fault-tolerance requeue path
+                params, retries = waiting["params"], waiting["retries"]
+            else:
+                sampler = self._samplers[key]
+                if getattr(sampler, "multi_objective", False):
+                    params = sampler.suggest(
+                        self._spaces[key], study.trials, config.direction,
+                        self._rng, signs=config.direction_signs())
+                else:
+                    params = sampler.suggest(
+                        self._spaces[key], study.trials, config.direction,
+                        self._rng)
+                retries = 0
+            trial = self.storage.add_trial(
+                key, params, worker_id=body.get("worker_id", identity.get("user")),
+                lease_deadline=time.time() + self.lease_seconds, retries=retries)
+        return 200, {"trial_uid": trial.uid, "trial_id": trial.trial_id,
+                     "study_key": key, "study_created": created,
+                     "properties": params}
+
+    def _tell(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
+        uid = body.get("trial_uid", "")
+        value = body.get("value", None)
+        # multi-objective: value may be a list (one entry per objective)
+        values = None
+        if isinstance(value, (list, tuple)):
+            values = [float(v) for v in value]
+            value = values[0]
+        state = TrialState(body.get("state", "completed"))
+        with self._lock:
+            trial = self.storage.get_trial(uid)
+            if trial is None:
+                return 404, {"detail": f"unknown trial {uid!r}"}
+            if trial.state == TrialState.PRUNED:
+                # the server already finalized this trial on should_prune;
+                # accept the client's value but keep the PRUNED state.
+                self.storage.update_trial(
+                    uid, value=(None if value is None else float(value)),
+                    values=values)
+                return 200, {"trial_uid": uid, "state": trial.state.value}
+            if trial.state != TrialState.RUNNING:
+                return 409, {"detail": f"trial {uid} already {trial.state.value}"}
+            self.storage.update_trial(
+                uid, value=(None if value is None else float(value)),
+                values=values,
+                state=state, finished_at=time.time(), lease_deadline=None)
+        return 200, {"trial_uid": uid, "state": state.value}
+
+    def _should_prune(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
+        uid = body.get("trial_uid", "")
+        step = int(body.get("step", 0))
+        value = float(body.get("value", 0.0))
+        with self._lock:
+            trial = self.storage.get_trial(uid)
+            if trial is None:
+                return 404, {"detail": f"unknown trial {uid!r}"}
+            if trial.state != TrialState.RUNNING:
+                # zombie worker: its lease was revoked (or the trial pruned)
+                # while it was away — instruct it to abandon the trial.
+                return 200, {"trial_uid": uid, "should_prune": True,
+                             "detail": f"trial is {trial.state.value}"}
+            study = self.storage.get_study(trial.study_key)
+            # heartbeat: renew the lease + record the intermediate
+            self.storage.update_trial(
+                uid, intermediate=(step, value),
+                lease_deadline=time.time() + self.lease_seconds)
+            pruner = self._pruners.get(trial.study_key) or make_pruner(
+                study.config.pruner)
+            prune = bool(pruner.should_prune(study, trial, step))
+            if prune:
+                self.storage.update_trial(
+                    uid, state=TrialState.PRUNED, finished_at=time.time(),
+                    lease_deadline=None)
+        return 200, {"trial_uid": uid, "should_prune": prune}
+
+    def _studies(self) -> tuple[int, dict[str, Any]]:
+        out = []
+        for s in self.storage.studies():
+            best = s.best_trial()
+            rec = {
+                "key": s.key, "name": s.config.name,
+                "n_trials": len(s.trials),
+                "n_completed": len(s.completed()),
+                "n_pruned": sum(t.state == TrialState.PRUNED for t in s.trials),
+                "n_failed": sum(t.state == TrialState.FAILED for t in s.trials),
+                "best_value": None if best is None else best.value,
+                "best_params": None if best is None else best.params,
+            }
+            if s.config.directions:
+                rec["pareto_front"] = [
+                    {"params": t.params, "values": t.values}
+                    for t in s.pareto_front()]
+            out.append(rec)
+        return 200, {"studies": out}
+
+    # ------------------------------------------------------------------ #
+    # fault tolerance
+    # ------------------------------------------------------------------ #
+    def sweep_expired(self, study_key: str | None = None) -> int:
+        """Fail trials whose lease lapsed; requeue their params (bounded)."""
+        now = time.time()
+        n = 0
+        for study in self.storage.studies():
+            if study_key is not None and study.key != study_key:
+                continue
+            for t in study.trials:
+                if (t.state == TrialState.RUNNING and t.lease_deadline is not None
+                        and t.lease_deadline < now):
+                    self.storage.update_trial(
+                        t.uid, state=TrialState.FAILED, finished_at=now,
+                        lease_deadline=None)
+                    if t.retries < self.max_retries:
+                        self.storage.enqueue_params(
+                            study.key, t.params, t.retries + 1)
+                    n += 1
+        return n

@@ -1,0 +1,56 @@
+"""HOPAAS service launcher — the INFN-Cloud deployment in one process.
+
+Starts N stateless server workers behind the threaded HTTP frontend
+(Uvicorn x N + NGINX role), backed by a WAL-journaled storage
+(PostgreSQL role) that survives restarts, and prints a fresh API token.
+
+  PYTHONPATH=src python -m repro.core.service --port 8731 \
+      --workers 4 --journal hopaas.wal
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from .auth import TokenManager
+from .server import HopaasServer
+from .storage import InMemoryStorage, JournalStorage
+from .transport import HttpServiceRunner
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, default=8731)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="stateless API workers sharing one storage")
+    ap.add_argument("--journal", default=None,
+                    help="WAL path for crash-restartable storage")
+    ap.add_argument("--lease-seconds", type=float, default=60.0)
+    ap.add_argument("--token-ttl-hours", type=float, default=24.0)
+    args = ap.parse_args()
+
+    storage = (JournalStorage(args.journal) if args.journal
+               else InMemoryStorage())
+    tokens = TokenManager()
+    workers = [HopaasServer(storage=storage, tokens=tokens,
+                            lease_seconds=args.lease_seconds,
+                            worker_name=f"api-{i}")
+               for i in range(args.workers)]
+    runner = HttpServiceRunner(workers, host=args.host,
+                               port=args.port).start()
+    token = tokens.issue("cli-user", ttl_seconds=args.token_ttl_hours * 3600)
+    print(f"HOPAAS service at {runner.url}  ({args.workers} workers, "
+          f"storage={'journal:' + args.journal if args.journal else 'memory'})")
+    print(f"API token: {token}")
+    print("Ctrl-C to stop.")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        runner.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,144 @@
+"""Hyperparameter search-space specification.
+
+Spaces are JSON-serializable (they travel in the body of `ask` requests,
+paper sec. 2) and support an internal mapping to the unit hypercube, which
+is what the numeric samplers (TPE / GP / CMA-ES) operate on.
+
+Spec grammar (the ``properties`` dict of a study):
+    {"lr":     {"type": "loguniform", "low": 1e-5, "high": 1e-1},
+     "layers": {"type": "int", "low": 1, "high": 8},
+     "act":    {"type": "categorical", "choices": ["relu", "gelu"]},
+     "dropout":{"type": "uniform", "low": 0.0, "high": 0.5}}
+Plain scalars (int/float/str/bool) are passed through as constants, which
+lets a client pin some properties while scanning others.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """One dimension of the search space."""
+
+    name: str
+    kind: str                      # uniform | loguniform | int | logint | categorical | const
+    low: float = 0.0
+    high: float = 1.0
+    choices: tuple = ()
+    value: Any = None              # for const
+
+    # ---- unit-cube mapping (used by TPE/GP/CMA-ES) -------------------
+    def to_unit(self, v: Any) -> float:
+        if self.kind == "uniform":
+            return (float(v) - self.low) / (self.high - self.low)
+        if self.kind == "loguniform":
+            return (math.log(float(v)) - math.log(self.low)) / (
+                math.log(self.high) - math.log(self.low))
+        if self.kind == "int":
+            return (float(v) - self.low) / max(self.high - self.low, 1e-12)
+        if self.kind == "logint":
+            return (math.log(float(v)) - math.log(self.low)) / (
+                math.log(self.high) - math.log(self.low))
+        if self.kind == "categorical":
+            return self.choices.index(v) / max(len(self.choices) - 1, 1)
+        return 0.0  # const
+
+    def from_unit(self, u: float) -> Any:
+        u = min(max(float(u), 0.0), 1.0)
+        if self.kind == "uniform":
+            return self.low + u * (self.high - self.low)
+        if self.kind == "loguniform":
+            return math.exp(math.log(self.low) + u * (math.log(self.high) - math.log(self.low)))
+        if self.kind == "int":
+            return int(round(self.low + u * (self.high - self.low)))
+        if self.kind == "logint":
+            return int(round(math.exp(
+                math.log(self.low) + u * (math.log(self.high) - math.log(self.low)))))
+        if self.kind == "categorical":
+            idx = int(round(u * (len(self.choices) - 1)))
+            return self.choices[idx]
+        return self.value  # const
+
+    @property
+    def n_categories(self) -> int:
+        return len(self.choices) if self.kind == "categorical" else 0
+
+    @property
+    def is_searchable(self) -> bool:
+        return self.kind != "const"
+
+    # ---- (de)serialization -------------------------------------------
+    def to_spec(self) -> Any:
+        if self.kind == "const":
+            return self.value
+        d: dict[str, Any] = {"type": self.kind}
+        if self.kind == "categorical":
+            d["choices"] = list(self.choices)
+        else:
+            d["low"], d["high"] = self.low, self.high
+        return d
+
+    @classmethod
+    def from_spec(cls, name: str, spec: Any) -> "Param":
+        if not isinstance(spec, dict) or "type" not in spec:
+            return cls(name=name, kind="const", value=spec)
+        kind = spec["type"]
+        if kind == "categorical":
+            return cls(name=name, kind=kind, choices=tuple(spec["choices"]))
+        if kind not in ("uniform", "loguniform", "int", "logint"):
+            raise ValueError(f"unknown space type {kind!r} for {name!r}")
+        return cls(name=name, kind=kind, low=float(spec["low"]), high=float(spec["high"]))
+
+
+class SearchSpace:
+    """An ordered collection of ``Param``s with unit-cube vectorization."""
+
+    def __init__(self, params: list[Param]):
+        self.params = params
+        self.searchable = [p for p in params if p.is_searchable]
+
+    @classmethod
+    def from_properties(cls, properties: dict[str, Any]) -> "SearchSpace":
+        return cls([Param.from_spec(k, v) for k, v in sorted(properties.items())])
+
+    @property
+    def dim(self) -> int:
+        return len(self.searchable)
+
+    def names(self) -> list[str]:
+        return [p.name for p in self.searchable]
+
+    def sample_uniform(self, rng: np.random.Generator) -> dict[str, Any]:
+        u = rng.uniform(size=self.dim)
+        return self.from_unit_vector(u)
+
+    def to_unit_vector(self, params: dict[str, Any]) -> np.ndarray:
+        return np.array([p.to_unit(params[p.name]) for p in self.searchable], dtype=np.float64)
+
+    def from_unit_vector(self, u: np.ndarray) -> dict[str, Any]:
+        out = {p.name: p.value for p in self.params if not p.is_searchable}
+        for p, ui in zip(self.searchable, np.asarray(u, dtype=np.float64)):
+            out[p.name] = p.from_unit(ui)
+        return out
+
+    def grid(self, points_per_dim: int = 5) -> list[dict[str, Any]]:
+        """Full-factorial lattice (categoricals enumerate all choices)."""
+        axes = []
+        for p in self.searchable:
+            if p.kind == "categorical":
+                axes.append(np.linspace(0.0, 1.0, p.n_categories))
+            elif p.kind in ("int", "logint"):
+                n = min(points_per_dim, int(p.high - p.low) + 1)
+                axes.append(np.linspace(0.0, 1.0, max(n, 1)))
+            else:
+                axes.append(np.linspace(0.0, 1.0, points_per_dim))
+        mesh = np.meshgrid(*axes, indexing="ij") if axes else []
+        if not mesh:
+            return [self.from_unit_vector(np.zeros(0))]
+        flat = np.stack([m.ravel() for m in mesh], axis=-1)
+        return [self.from_unit_vector(row) for row in flat]

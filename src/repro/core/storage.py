@@ -1,0 +1,177 @@
+"""Shared persistency layer.
+
+The paper's reference implementation uses a PostgreSQL instance to give
+*shared persistency to the multiple instances of the web application
+backend* (sec. 3).  Here the same role is played by a thread-safe storage
+object that multiple ``HopaasServer`` workers share, with an optional
+append-only JSONL write-ahead journal providing crash-restart recovery
+(``JournalStorage.replay``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable, Iterable
+
+from .types import Study, StudyConfig, Trial, TrialState
+
+
+class InMemoryStorage:
+    """Thread-safe in-memory study/trial store (the PostgreSQL stand-in)."""
+
+    def __init__(self):
+        self._studies: dict[str, Study] = {}
+        self._lock = threading.RLock()
+        self._waiting: dict[str, list[dict[str, Any]]] = {}  # requeued params
+
+    # -- studies --------------------------------------------------------
+    def get_or_create_study(self, config: StudyConfig) -> tuple[Study, bool]:
+        with self._lock:
+            key = config.key()
+            if key in self._studies:
+                return self._studies[key], False
+            study = Study(config=config)
+            self._studies[key] = study
+            self._log({"op": "create_study", "config": config.to_record()})
+            return study, True
+
+    def get_study(self, key: str) -> Study | None:
+        with self._lock:
+            return self._studies.get(key)
+
+    def studies(self) -> list[Study]:
+        with self._lock:
+            return list(self._studies.values())
+
+    # -- trials ---------------------------------------------------------
+    def add_trial(self, study_key: str, params: dict[str, Any], worker_id: str | None,
+                  lease_deadline: float | None, retries: int = 0) -> Trial:
+        with self._lock:
+            study = self._studies[study_key]
+            tid = len(study.trials)
+            trial = Trial(trial_id=tid, uid=f"{study_key}:{tid}", study_key=study_key,
+                          params=params, worker_id=worker_id,
+                          lease_deadline=lease_deadline, retries=retries)
+            study.trials.append(trial)
+            self._log({"op": "add_trial", "trial": trial.to_record()})
+            return trial
+
+    def get_trial(self, uid: str) -> Trial | None:
+        with self._lock:
+            study_key, _, tid = uid.partition(":")
+            study = self._studies.get(study_key)
+            if study is None:
+                return None
+            tid = int(tid)
+            return study.trials[tid] if tid < len(study.trials) else None
+
+    def update_trial(self, uid: str, **fields: Any) -> Trial:
+        with self._lock:
+            trial = self.get_trial(uid)
+            if trial is None:
+                raise KeyError(uid)
+            for k, v in fields.items():
+                if k == "intermediate":            # (step, value) append
+                    step, value = v
+                    trial.intermediates[int(step)] = float(value)
+                else:
+                    setattr(trial, k, v)
+            self._log({"op": "update_trial", "uid": uid,
+                       "fields": {k: (list(v) if k == "intermediate" else
+                                      (v.value if isinstance(v, TrialState) else v))
+                                  for k, v in fields.items()}})
+            return trial
+
+    # -- fault tolerance: requeue params of expired/failed trials --------
+    def enqueue_params(self, study_key: str, params: dict[str, Any], retries: int) -> None:
+        with self._lock:
+            self._waiting.setdefault(study_key, []).append(
+                {"params": params, "retries": retries})
+            self._log({"op": "enqueue", "study_key": study_key,
+                       "params": params, "retries": retries})
+
+    def pop_waiting(self, study_key: str) -> dict[str, Any] | None:
+        with self._lock:
+            q = self._waiting.get(study_key)
+            if q:
+                item = q.pop(0)
+                self._log({"op": "pop_waiting", "study_key": study_key})
+                return item
+            return None
+
+    # -- journal hook -----------------------------------------------------
+    def _log(self, record: dict[str, Any]) -> None:  # overridden by JournalStorage
+        pass
+
+    def atomically(self, fn: Callable[[], Any]) -> Any:
+        with self._lock:
+            return fn()
+
+
+class JournalStorage(InMemoryStorage):
+    """InMemoryStorage + append-only JSONL journal with replay.
+
+    Every mutation is journaled before being acknowledged; a freshly
+    constructed ``JournalStorage`` pointed at an existing journal replays it
+    to reconstruct the full service state (crash-restart of the service,
+    paper sec. 3 'shared persistency').
+    """
+
+    def __init__(self, path: str):
+        super().__init__()
+        self._path = path
+        self._file = None
+        self._replaying = False
+        if os.path.exists(path):
+            self.replay(path)
+        self._file = open(path, "a", buffering=1)
+
+    def _log(self, record: dict[str, Any]) -> None:
+        if self._file is not None and not self._replaying:
+            self._file.write(json.dumps(record) + "\n")
+
+    def replay(self, path: str) -> int:
+        """Reconstruct state from the journal.  Returns #records applied."""
+        n = 0
+        self._replaying = True
+        try:
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    rec = json.loads(line)
+                    self._apply(rec)
+                    n += 1
+        finally:
+            self._replaying = False
+        return n
+
+    def _apply(self, rec: dict[str, Any]) -> None:
+        op = rec["op"]
+        if op == "create_study":
+            self.get_or_create_study(StudyConfig.from_record(rec["config"]))
+        elif op == "add_trial":
+            t = Trial.from_record(rec["trial"])
+            study = self._studies[t.study_key]
+            # pad in case of gaps (shouldn't happen with a consistent journal)
+            while len(study.trials) < t.trial_id:
+                study.trials.append(t)
+            study.trials.append(t)
+        elif op == "update_trial":
+            fields = dict(rec["fields"])
+            if "state" in fields:
+                fields["state"] = TrialState(fields["state"])
+            if "intermediate" in fields:
+                fields["intermediate"] = tuple(fields["intermediate"])
+            self.update_trial(rec["uid"], **fields)
+        elif op == "enqueue":
+            self.enqueue_params(rec["study_key"], rec["params"], rec["retries"])
+        elif op == "pop_waiting":
+            self.pop_waiting(rec["study_key"])
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None

@@ -1,0 +1,142 @@
+"""Transports between HOPAAS clients and the service.
+
+* ``DirectTransport``    — in-process function call (fast path for tests
+                           and single-host campaigns).
+* ``HttpTransport``      — real HTTP over a socket using only the standard
+                           library; the server side (``serve_http``) mounts
+                           ``HopaasServer.handle`` behind a threading HTTP
+                           server (the Uvicorn role in the paper, sec. 3).
+* ``ReverseProxy``       — round-robin fan-out to N backend workers
+                           sharing one storage (the NGINX role, sec. 3).
+"""
+from __future__ import annotations
+
+import http.client
+import itertools
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any
+
+from .server import HopaasServer
+
+
+class Transport:
+    def request(self, method: str, path: str, body: dict[str, Any] | None = None
+                ) -> tuple[int, dict[str, Any]]:
+        raise NotImplementedError
+
+
+class DirectTransport(Transport):
+    def __init__(self, server: HopaasServer):
+        self.server = server
+
+    def request(self, method, path, body=None):
+        return self.server.handle(method, path, body)
+
+
+class RoundRobinTransport(Transport):
+    """Client-side round robin across several in-proc workers (used to test
+    the shared-storage consistency of horizontally scaled servers)."""
+
+    def __init__(self, servers: list[HopaasServer]):
+        self.servers = servers
+        self._cycle = itertools.cycle(range(len(servers)))
+        self._lock = threading.Lock()
+
+    def request(self, method, path, body=None):
+        with self._lock:
+            i = next(self._cycle)
+        return self.servers[i].handle(method, path, body)
+
+
+# --------------------------------------------------------------------------- #
+# HTTP server side
+# --------------------------------------------------------------------------- #
+def _make_handler(target):
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):   # quiet
+            pass
+
+        def _respond(self, status: int, payload: dict[str, Any]) -> None:
+            blob = json.dumps(payload).encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(blob)))
+            self.end_headers()
+            self.wfile.write(blob)
+
+        def _body(self) -> dict[str, Any]:
+            n = int(self.headers.get("Content-Length", 0) or 0)
+            raw = self.rfile.read(n) if n else b"{}"
+            try:
+                return json.loads(raw or b"{}")
+            except json.JSONDecodeError:
+                return {}
+
+        def do_GET(self):
+            self._respond(*target(self.path, "GET", {}))
+
+        def do_POST(self):
+            self._respond(*target(self.path, "POST", self._body()))
+
+    return Handler
+
+
+class HttpServiceRunner:
+    """Hosts one or more HopaasServer workers behind a threaded HTTP server.
+
+    With ``n_workers > 1`` requests round-robin across worker instances that
+    share one storage — the paper's Uvicorn×N + PostgreSQL deployment shape.
+    """
+
+    def __init__(self, server: HopaasServer | list[HopaasServer], host: str = "127.0.0.1",
+                 port: int = 0):
+        self.workers = server if isinstance(server, list) else [server]
+        self._cycle = itertools.cycle(range(len(self.workers)))
+        self._lock = threading.Lock()
+        self.httpd = ThreadingHTTPServer((host, port), _make_handler(
+            lambda path, method, body: self._pick().handle(method, path, body)))
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
+
+    def _pick(self) -> HopaasServer:
+        with self._lock:
+            return self.workers[next(self._cycle)]
+
+    def start(self) -> "HttpServiceRunner":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+
+class HttpTransport(Transport):
+    """Client side of the HTTP transport (stdlib http.client)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self.host, self.port, self.timeout = host, int(port), timeout
+
+    @classmethod
+    def from_url(cls, url: str, timeout: float = 30.0) -> "HttpTransport":
+        url = url.replace("http://", "")
+        host, _, port = url.partition(":")
+        return cls(host, int(port or 80), timeout)
+
+    def request(self, method, path, body=None):
+        conn = http.client.HTTPConnection(self.host, self.port, timeout=self.timeout)
+        try:
+            payload = json.dumps(body or {})
+            conn.request(method, path, body=payload,
+                         headers={"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            data = resp.read()
+            return resp.status, json.loads(data or b"{}")
+        finally:
+            conn.close()

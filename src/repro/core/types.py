@@ -1,0 +1,162 @@
+"""Core datatypes for the HOPAAS service.
+
+Terminology follows the paper (sec. 2):
+  * a *trial* is a single training attempt with a specific set of
+    hyperparameters to test;
+  * a *study* represents an optimization session and includes a collection
+    of trials.  A study is unambiguously defined by the set of
+    hyperparameters to optimize, their ranges, and the search modality
+    (sampler + pruner + direction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import json
+import time
+from typing import Any
+
+
+class TrialState(str, enum.Enum):
+    RUNNING = "running"
+    COMPLETED = "completed"
+    PRUNED = "pruned"
+    FAILED = "failed"      # lease expired / worker died
+
+
+class Direction(str, enum.Enum):
+    MINIMIZE = "minimize"
+    MAXIMIZE = "maximize"
+
+
+@dataclasses.dataclass
+class Trial:
+    """A single hyperparameter evaluation, tracked server-side."""
+
+    trial_id: int                      # index within the study
+    uid: str                           # globally unique "study_key:trial_id"
+    study_key: str
+    params: dict[str, Any]
+    state: TrialState = TrialState.RUNNING
+    value: float | None = None
+    # multi-objective studies (paper sec. 5 future work): one value per
+    # objective; ``value`` then mirrors values[0] for display
+    values: list[float] | None = None
+    # step -> intermediate objective value (fed through should_prune)
+    intermediates: dict[int, float] = dataclasses.field(default_factory=dict)
+    worker_id: str | None = None
+    lease_deadline: float | None = None   # epoch seconds; None = no lease
+    created_at: float = dataclasses.field(default_factory=time.time)
+    finished_at: float | None = None
+    # bookkeeping for fault tolerance: how many times these params were
+    # re-enqueued after a worker died mid-trial
+    retries: int = 0
+
+    def last_step(self) -> int:
+        return max(self.intermediates) if self.intermediates else -1
+
+    def to_record(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["state"] = self.state.value
+        return d
+
+    @classmethod
+    def from_record(cls, d: dict[str, Any]) -> "Trial":
+        d = dict(d)
+        d["state"] = TrialState(d["state"])
+        d["intermediates"] = {int(k): float(v) for k, v in d["intermediates"].items()}
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class StudyConfig:
+    """Everything that unambiguously defines a study (paper sec. 2)."""
+
+    name: str
+    # hyperparameter name -> serialized space spec (see repro.core.space)
+    properties: dict[str, Any]
+    direction: Direction = Direction.MINIMIZE
+    sampler: dict[str, Any] = dataclasses.field(default_factory=lambda: {"name": "tpe"})
+    pruner: dict[str, Any] = dataclasses.field(default_factory=lambda: {"name": "none"})
+    # multi-objective: per-objective directions; None = single-objective
+    directions: list[str] | None = None
+
+    @property
+    def n_objectives(self) -> int:
+        return len(self.directions) if self.directions else 1
+
+    def direction_signs(self) -> list[float]:
+        """+1 per minimized objective, -1 per maximized."""
+        if self.directions is None:
+            return [1.0 if self.direction == Direction.MINIMIZE else -1.0]
+        return [1.0 if Direction(d) == Direction.MINIMIZE else -1.0
+                for d in self.directions]
+
+    def key(self) -> str:
+        """Content hash used by the server to route `ask` requests."""
+        blob = json.dumps(
+            {
+                "name": self.name,
+                "properties": self.properties,
+                "direction": self.direction.value,
+                "sampler": self.sampler,
+                "pruner": self.pruner,
+                "directions": self.directions,
+            },
+            sort_keys=True,
+        )
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def to_record(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["direction"] = self.direction.value
+        return d
+
+    @classmethod
+    def from_record(cls, d: dict[str, Any]) -> "StudyConfig":
+        d = dict(d)
+        d["direction"] = Direction(d["direction"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class Study:
+    config: StudyConfig
+    trials: list[Trial] = dataclasses.field(default_factory=list)
+    created_at: float = dataclasses.field(default_factory=time.time)
+
+    @property
+    def key(self) -> str:
+        return self.config.key()
+
+    def completed(self) -> list[Trial]:
+        return [t for t in self.trials if t.state == TrialState.COMPLETED]
+
+    def best_trial(self) -> Trial | None:
+        done = [t for t in self.completed() if t.value is not None]
+        if not done:
+            return None
+        sign = 1.0 if self.config.direction == Direction.MINIMIZE else -1.0
+        return min(done, key=lambda t: sign * t.value)
+
+    def pareto_front(self) -> list[Trial]:
+        """Non-dominated completed trials (multi-objective studies)."""
+        signs = self.config.direction_signs()
+        done = [t for t in self.completed() if t.values is not None
+                and len(t.values) == len(signs)]
+        front: list[Trial] = []
+        for t in done:
+            tv = [s * v for s, v in zip(signs, t.values)]
+            dominated = False
+            for o in done:
+                if o is t:
+                    continue
+                ov = [s * v for s, v in zip(signs, o.values)]
+                if all(a <= b for a, b in zip(ov, tv)) and \
+                        any(a < b for a, b in zip(ov, tv)):
+                    dominated = True
+                    break
+            if not dominated:
+                front.append(t)
+        return front

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots of the training substrate
+the HOPAAS service orchestrates: blocked flash attention (dense/GQA/SWA
+archs), the chunked Mamba2 SSD scan (ssm/hybrid archs), and the chunked
+RWKV6 WKV scan.  Each subpackage ships ``kernel.py`` (pl.pallas_call +
+BlockSpec VMEM tiling), ``ops.py`` (the jit'd public wrapper; interpret
+mode auto-selected off-TPU), and ``ref.py`` (the pure-jnp oracle the tests
+sweep against)."""

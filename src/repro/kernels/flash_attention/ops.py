@@ -1,0 +1,51 @@
+"""Public jit'd wrapper.  Model layout (B, S, H, hd) <-> kernel layout
+(B, H, S, hd); interpret mode auto-selected off-TPU so ``attn_impl='flash'``
+runs (slowly but exactly) on CPU for validation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, Hq, hd); k,v: (B, T, Hkv, hd) -> (B, S, Hq, hd)."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    S, T = qt.shape[2], kt.shape[2]
+    bq = _largest_divisor_block(S, block_q)
+    bk = _largest_divisor_block(T, block_k)
+    out = kernel.flash_attention_fwd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _largest_divisor_block(n: int, cap: int) -> int:
+    b = min(cap, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """Oracle in model layout (re-exported for tests/benches)."""
+    return jnp.swapaxes(
+        ref.attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2), causal=causal,
+                          window=window), 1, 2)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None
+                  ) -> jax.Array:
+    """q: (B, Hq, S, hd); k,v: (B, Hkv, T, hd) -> (B, Hq, S, hd).
+    Full materialized softmax in fp32 — the correctness reference."""
+    B, Hq, S, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, kf) / math.sqrt(hd)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)           # fully-masked rows
+    out = jnp.einsum("bkgst,bkth->bkgsh", p, vf)
+    return out.reshape(B, Hq, S, hd).astype(q.dtype)

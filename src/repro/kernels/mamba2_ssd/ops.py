@@ -1,0 +1,42 @@
+"""Public jit'd wrapper for the SSD kernel.
+
+Model layout x: (b, S, nh, hd) <-> kernel layout (b, nh, S, hd); the
+dt-weighting and per-chunk log-decay cumsum are precomputed here (cheap,
+bandwidth-bound, XLA-fusable) so the kernel is pure tile math."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a_log: jax.Array, B: jax.Array,
+        C: jax.Array, *, chunk: int = 64, interpret: bool | None = None
+        ) -> tuple[jax.Array, jax.Array]:
+    """x: (b,S,nh,hd); dt: (b,S,nh); a_log: (nh,); B,C: (b,S,ds).
+    -> (y (b,S,nh,hd), h_final (b,nh,hd,ds)).  Matches ref.ssd_ref."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    b, S, nh, hd = x.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                    # (nh,)
+    dtf = dt.astype(jnp.float32)
+    ldec = dtf * A                                             # (b,S,nh)
+    # inclusive cumsum *within* each chunk
+    ldec_c = ldec.reshape(b, S // Q, Q, nh)
+    cum = jnp.cumsum(ldec_c, axis=2).reshape(b, S, nh)
+    cum_k = jnp.moveaxis(cum, -1, 1)[..., None]                # (b,nh,S,1)
+    xw = jnp.moveaxis(x * dt[..., None].astype(x.dtype), 2, 1)  # (b,nh,S,hd)
+
+    y, h_fin = kernel.ssd_fwd(xw, cum_k, B, C, chunk=Q, interpret=interpret)
+    return jnp.moveaxis(y, 1, 2), h_fin

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: the sequential (non-chunked) SSD recurrence.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t B_t^T        (per head)
+    y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array, B: jax.Array,
+            C: jax.Array, h0: jax.Array | None = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (b,S,nh,hd); dt: (b,S,nh); a_log: (nh,); B,C: (b,S,ds).
+    -> (y (b,S,nh,hd), h_final (b,nh,hd,ds))."""
+    b, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    h = jnp.zeros((b, nh, hd, ds), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                     # (b,nh,hd),(b,nh),(b,ds)
+        g = jnp.exp(dt_t.astype(jnp.float32) * A)     # (b,nh)
+        upd = jnp.einsum("bhd,bs->bhds",
+                         (x_t * dt_t[..., None]).astype(jnp.float32),
+                         B_t.astype(jnp.float32))
+        h = h * g[:, :, None, None] + upd
+        y = jnp.einsum("bhds,bs->bhd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin

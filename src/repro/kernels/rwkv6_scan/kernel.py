@@ -1,0 +1,101 @@
+"""Chunked RWKV6 (Finch) WKV scan as a Pallas TPU kernel.
+
+TPU adaptation notes (vs the CUDA wkv6 kernel, which assigns one warp per
+(batch, head) and serializes over time): the per-channel data-dependent
+decay makes the intra-chunk term NOT factorizable into a plain matmul —
+``score[t,s] = sum_d r[t,d] k[s,d] exp(W_{t-1,d} - W_{s,d})`` carries the
+decay *inside* the contraction.  Naively factoring ``exp(W_t)·exp(-W_s)``
+overflows fp32 (W is a large negative cumsum), so the kernel materializes
+the (Q, Q, hd) decay tensor per chunk in VMEM and contracts on the VPU —
+chunk size Q is chosen so that tensor fits comfortably (Q=32: 256 KiB).
+The inter-chunk state (hd, hd) recurrence and its output projection stay
+on the MXU, carried in VMEM scratch across the sequential chunk axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, cum_ref, lw_ref, u_ref, o_ref, sout_ref,
+            s_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    rc = r_ref[0, 0].astype(jnp.float32)             # (Q, hd)
+    kc = k_ref[0, 0].astype(jnp.float32)             # (Q, hd)
+    vc = v_ref[0, 0].astype(jnp.float32)             # (Q, hd)
+    cum = cum_ref[0, 0].astype(jnp.float32)          # (Q, hd) inclusive cumsum
+    lw = lw_ref[0, 0].astype(jnp.float32)            # (Q, hd) log-decays
+    u = u_ref[0].astype(jnp.float32)                 # (1, hd) bonus
+    S = s_scr[...]                                   # (hd, hd) entering state
+
+    dec_t = cum - lw                                 # W_{t-1} (exclusive)
+
+    # ---- intra-chunk (strictly below diagonal): VPU decay tensor
+    expo = dec_t[:, None, :] - cum[None, :, :]       # (Q, Q, hd)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk, 1), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk, 1), 1)
+    strict = s_idx < t_idx
+    w_ts = jnp.exp(jnp.where(strict, expo, -jnp.inf))  # (Q, Q, hd)
+    scores = jnp.sum(rc[:, None, :] * w_ts * kc[None, :, :], axis=-1)  # (Q,Q)
+    y = jax.lax.dot_general(scores, vc, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ---- diagonal bonus: (r_t . (u k_t)) v_t
+    diag = jnp.sum(rc * u * kc, axis=-1, keepdims=True)  # (Q, 1)
+    y = y + diag * vc
+
+    # ---- inter-chunk: y[t] += (r_t * exp(W_{t-1})) @ S
+    y = y + jax.lax.dot_general(rc * jnp.exp(dec_t), S,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    # ---- state update: S' = diag(exp(cum_Q)) S + (k * exp(cum_Q - cum))^T v
+    gamma = jnp.exp(cum[chunk - 1])                  # (hd,)
+    tail = jnp.exp(cum[chunk - 1:chunk, :] - cum)    # (Q, hd)
+    s_scr[...] = S * gamma[:, None] + jax.lax.dot_general(
+        kc * tail, vc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (hd, hd)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        sout_ref[0, 0] = s_scr[...]
+
+
+def wkv6_fwd(r: jax.Array, k: jax.Array, v: jax.Array, cum: jax.Array,
+             logw: jax.Array, u: jax.Array, *, chunk: int,
+             interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,cum,logw: (b, nh, S, hd); u: (nh, hd).
+    -> (o (b, nh, S, hd), S_final (b, nh, hd, hd))."""
+    b, nh, S, hd = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    grid = (b, nh, nc)
+
+    seq_spec = pl.BlockSpec((1, 1, Q, hd), lambda i, h, c: (i, h, c, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=Q, n_chunks=nc),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, hd), lambda i, h, c: (h, 0))],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda i, h, c: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nh, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, cum, logw, u)

@@ -1,0 +1,44 @@
+"""Public jit'd wrapper for the WKV6 kernel.  Model layout (b,S,nh,hd)
+<-> kernel layout (b,nh,S,hd); the within-chunk decay cumsum is
+precomputed here.  ``S0`` (a carried state) short-circuits to the jnp
+chunked form — the kernel path is the S0=None training/prefill hot path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, *, chunk: int = 32, S0: jax.Array | None = None,
+         interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,logw: (b,S,nh,hd); u: (nh,hd) -> (o, S_final).
+    Matches ref.wkv6_ref."""
+    if S0 is not None:
+        from repro.models.rwkv6 import wkv6_chunked
+        return wkv6_chunked(r, k, v, logw.astype(jnp.float32), u,
+                            chunk=chunk, S0=S0)
+    if interpret is None:
+        interpret = _auto_interpret()
+    b, S, nh, hd = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+
+    def to_k(t):
+        return jnp.moveaxis(t, 2, 1)                   # (b,nh,S,hd)
+
+    lw = to_k(logw.astype(jnp.float32))
+    lw_c = lw.reshape(b, nh, S // Q, Q, hd)
+    cum = jnp.cumsum(lw_c, axis=3).reshape(b, nh, S, hd)
+
+    o, S_fin = kernel.wkv6_fwd(to_k(r), to_k(k), to_k(v), cum, lw, u,
+                               chunk=Q, interpret=interpret)
+    return jnp.moveaxis(o, 1, 2), S_fin

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: the sequential WKV6 recurrence.
+
+    o_t = r_t . (diag(u) k_t v_t^T + S_{t-1})
+    S_t = diag(exp(logw_t)) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+             u: jax.Array, S0: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """r,k,v,logw: (b,S,nh,hd); u: (nh,hd).
+    -> (o (b,S,nh,hd), S_final (b,nh,hd,hd))."""
+    b, S, nh, hd = r.shape
+    St = jnp.zeros((b, nh, hd, hd), jnp.float32) if S0 is None else S0
+
+    def step(St, inp):
+        r_t, k_t, v_t, lw_t = (t.astype(jnp.float32) for t in inp)
+        kv = jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        o = jnp.einsum("bhd,bhde->bhe", r_t,
+                       St + u.astype(jnp.float32)[None, :, :, None] * kv)
+        St = St * jnp.exp(lw_t)[..., None] + kv
+        return St, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    S_fin, os_ = jax.lax.scan(step, St, xs)
+    return jnp.moveaxis(os_, 0, 1).astype(r.dtype), S_fin

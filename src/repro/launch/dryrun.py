@@ -1,0 +1,328 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, prove memory fit, and extract roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
+# locks the device count at first init, so this precedes EVERY import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.dist import sharding as shd                     # noqa: E402
+from repro.dist.context import (activation_batch_axis,     # noqa: E402
+                                attention_seq_axis)
+from repro.launch import hlo_cost                          # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW,             # noqa: E402
+                               PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch import shapes as shp                     # noqa: E402
+from repro.models import registry, transformer             # noqa: E402
+from repro.optim import AdamWConfig                        # noqa: E402
+from repro.train.step import init_train_state, make_train_step  # noqa: E402
+
+HBM_PER_CHIP = 16 * 2 ** 30    # v5e: 16 GiB HBM2 (memory is binary-sized)
+
+
+def _batch_shardings(mesh, batch_specs: dict, global_batch: int,
+                     rules) -> dict:
+    bax = shd.batch_axis(mesh, global_batch, rules)
+    return {k: NamedSharding(mesh, P(bax, *(None,) * (v.ndim - 1)))
+            for k, v in batch_specs.items()}
+
+
+def cell_batch_axis(arch: str, shape_name: str, mesh):
+    """-> (axis, extent) the activation batch dim is sharded over."""
+    shape = shp.SHAPES[shape_name]
+    if shape.kind == "train":
+        micro = shp.microbatches_for(arch)
+        ax = shd.batch_axis(mesh, shape.global_batch // micro,
+                            shd.RULES_TRAIN)
+    else:
+        ax = shd.batch_axis(mesh, shape.global_batch, shd.RULES_DECODE)
+    return ax, shd._mesh_extent(mesh, ax)
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """-> (fn, example_args, in_shardings, out_shardings, donate, cfg)."""
+    shape = shp.SHAPES[shape_name]
+    cfg = shp.configure_for_cell(registry.get_config(arch), shape)
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        state, specs = init_train_state(cfg, opt, key=None)
+        state_tree = state.tree()
+        train_rules = shd.RULES_TRAIN
+        if shp.no_tp(arch):
+            # small model: no feature-TP — weights FSDP over data only,
+            # the model axis carries sequence parallelism (attn_sp)
+            train_rules = train_rules.replace(
+                mlp=(None,), heads=(None,), kv_heads=(None,),
+                head_dim=(None,), vocab=(None,))
+        st_sh = shd.tree_shardings(
+            {"params": specs["params"], "opt_state": specs["opt_state"]},
+            state_tree, mesh, train_rules)
+        batch = shp.input_specs(arch, shape_name)["batch"]
+        b_sh = _batch_shardings(mesh, batch, shape.global_batch,
+                                shd.RULES_TRAIN)
+        micro = shp.microbatches_for(arch)
+        mb_axis = shd.batch_axis(mesh, shape.global_batch // micro,
+                                 shd.RULES_TRAIN)
+        step = make_train_step(cfg, opt, micro, batch_axis=mb_axis,
+                               grad_shardings=st_sh["params"])
+        return (step, (state_tree, batch), (st_sh, b_sh), (st_sh, None),
+                (0,), cfg)
+
+    rules = shd.RULES_DECODE
+    if shp.no_tp(arch):
+        rules = rules.replace(mlp=(None,), heads=(None,), kv_heads=(None,),
+                              head_dim=(None,), vocab=(None,),
+                              embed=("data", None))
+    model_size = mesh.shape.get("model", 1)
+    if cfg.block in ("attn", "zamba2") and cfg.n_kv_heads % model_size:
+        # GQA with kv_heads % model != 0: k/v fall back to head_dim TP, so
+        # q must match — heads-sharded q against hd-sharded kv makes SPMD
+        # fully rematerialize the KV cache per layer (verified: +12 GB temp
+        # and 4 GB/step of involuntary all-gathers on mixtral decode).
+        rules = rules.replace(heads=(None,), head_dim=("model", None))
+    if shape.kind == "prefill" and cfg.block in ("attn", "zamba2") \
+            and cfg.n_kv_heads % model_size:
+        # Prefill wants q/k/v layouts matched *without* sharding the huge
+        # score tensors' contraction dim.  kv heads are few and cache-free
+        # here, so replicate them and shard q heads (disaggregated
+        # prefill/decode layouts — industry practice).  When q heads don't
+        # divide either (qwen1.5's 40), all of q/k/v fall through to
+        # head_dim sharding — matched, at the cost of score all-reduces
+        # (the baseline for that cell; see EXPERIMENTS.md sec. Perf).
+        if cfg.n_heads % model_size == 0:
+            rules = rules.replace(heads=("model", None),
+                                  kv_heads=(None,), head_dim=(None,))
+        else:
+            rules = rules.replace(heads=(None,), kv_heads=(None,),
+                                  head_dim=("model", None))
+    params, pspecs = transformer.init_params(cfg, None)
+    p_sh = shd.tree_shardings(pspecs, params, mesh, rules)
+
+    if shape.kind == "prefill":
+        batch = shp.input_specs(arch, shape_name)["batch"]
+        b_sh = _batch_shardings(mesh, batch, shape.global_batch,
+                                shd.RULES_DECODE)
+
+        def prefill(p, b):
+            logits, _ = transformer.forward(p, cfg, b)
+            if cfg.encoder_only:
+                return logits          # encoder output IS the product
+            return logits[:, -1:]      # serving emits next-token logits
+        return prefill, (params, batch), (p_sh, b_sh), None, (), cfg
+
+    # decode
+    specs = shp.input_specs(arch, shape_name)
+    cache, cache_logical = specs["cache"], specs["cache_logical"]
+    c_sh = shd.tree_shardings(cache_logical, cache, mesh, rules)
+    tok_sh = NamedSharding(
+        mesh, P(shd.batch_axis(mesh, shape.global_batch, shd.RULES_DECODE),
+                None))
+
+    def decode(p, c, toks, n):
+        return transformer.decode_step(p, cfg, c, toks, n)
+
+    args = (params, cache, specs["tokens"], specs["cache_len"])
+    return (decode, args, (p_sh, c_sh, tok_sh, None), (None, c_sh), (1,),
+            cfg)
+
+
+def _ideal_bytes(cfg, shape: shp.Shape, args, n_dev: int) -> float:
+    """Per-device lower bound on HBM traffic: every weight byte + (decode)
+    every cache byte read once.  The bytes-efficiency denominator for
+    memory-bound cells."""
+    import math
+
+    def tree_bytes(t):
+        return sum(math.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(t))
+
+    if shape.kind == "train":
+        # fwd+bwd reads weights ~3x + writes grads; params are f32 here
+        params = args[0]["params"]
+        return 4.0 * tree_bytes(params) / n_dev
+    if shape.kind == "prefill":
+        return (tree_bytes(args[0]) + tree_bytes(args[1])) / n_dev
+    # decode: weights + cache read once, cache written once (~same scale)
+    return (tree_bytes(args[0]) + 2.0 * tree_bytes(args[1])) / n_dev
+
+
+def model_flops(cfg, shape: shp.Shape) -> float:
+    """Analytic useful FLOPs per step: 6ND train, 2ND forward (active
+    params for MoE)."""
+    n_active = registry.count_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # one token
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    shape = shp.SHAPES[shape_name]
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate, cfg = build_cell(arch, shape_name, mesh)
+
+    bax, extent = cell_batch_axis(arch, shape_name, mesh)
+    with mesh, activation_batch_axis(bax, extent), \
+            attention_seq_axis("model", mesh.shape.get("model", 1)):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    cost = hlo_cost.analyze(compiled.as_text(), n_dev)
+
+    live_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                  + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    # XLA-CPU materializes f32 copies of bf16 dot operands (hoisted, often
+    # the full weight set); TPU MXUs consume bf16 natively -> subtract.
+    live_tpu = (live_bytes - cost.convert_f32_buffer_bytes
+                - 0.5 * cost.dot_f32_out_bytes)
+    bytes_tpu = max(cost.bytes - 1.5 * cost.convert_f32_bytes
+                    - 0.5 * cost.dot_f32_traffic, 0.0)
+    mf = model_flops(cfg, shape)
+    compute_s = cost.flops / PEAK_FLOPS_BF16
+    memory_s = bytes_tpu / HBM_BW
+    collective_s = cost.collective_bytes_bf16 / ICI_BW
+    collective_s_raw = cost.collective_bytes / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    # per-device ideal HBM traffic: weights + decode state touched once
+    ideal_bytes = _ideal_bytes(cfg, shape, args, n_dev)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "live_bytes_per_device": live_bytes,
+            "cpu_f32_convert_bytes": cost.convert_f32_bytes,
+            "live_bytes_tpu": live_tpu,
+            "hbm_utilization": live_tpu / HBM_PER_CHIP,
+            "fits_hbm": bool(live_tpu < HBM_PER_CHIP),
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in
+                              ("flops", "bytes accessed") if k in ca},
+        "hlo_cost": {
+            "flops_per_device": cost.flops,
+            "bytes_per_device": cost.bytes,
+            "collective_bytes_per_device": cost.collective_bytes,
+            "by_collective": dict(cost.by_collective),
+            "collective_calls": dict(cost.collective_calls),
+            "unknown_trip_loops": cost.unknown_loops,
+        },
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s,
+            "collective_s_raw_f32": collective_s_raw,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_flops_ratio": mf / max(cost.flops * n_dev, 1.0),
+            # compute-centric score (train/prefill): useful FLOPs over the
+            # chip-seconds implied by the slowest roofline term
+            "roofline_fraction":
+                mf / max(n_dev * PEAK_FLOPS_BF16
+                         * max(compute_s, memory_s, collective_s), 1e-30),
+            # bandwidth-centric score (decode): ideal bytes / actual bytes
+            "ideal_bytes_per_device": ideal_bytes,
+            "bytes_efficiency": ideal_bytes / max(bytes_tpu, 1.0),
+            # attention-score tensor traffic: a fused flash kernel (shipped
+            # in repro.kernels, unlowerable on the CPU proxy) keeps these
+            # in VMEM — memory term with the kernel applied:
+            "score_traffic_bytes": cost.score_traffic,
+            "memory_s_with_flash_kernel":
+                max(bytes_tpu - cost.score_traffic, 0.0) / HBM_BW,
+        },
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{rec['mesh']}.json"
+        with open(os.path.join(out_dir, tag), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        r = rec["roofline"]
+        score = (r["bytes_efficiency"] if shape.kind == "decode"
+                 else r["roofline_fraction"])
+        print(f"[OK] {arch:18s} {shape_name:12s} {rec['mesh']:8s} "
+              f"mem/dev={live_tpu/1e9:6.2f}GB "
+              f"C={r['compute_s']*1e3:8.2f}ms M={r['memory_s']*1e3:8.2f}ms "
+              f"X={r['collective_s']*1e3:8.2f}ms dom={r['dominant']:10s} "
+              f"score={score:.3f} "
+              f"(compile {rec['compile_seconds']}s)", flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    all_cells = shp.cells()
+    if args.list:
+        for a, s in all_cells:
+            print(f"{a:20s} {s}")
+        print(f"total: {len(all_cells)} cells")
+        return 0
+
+    todo = [(a, s) for a, s in all_cells
+            if (args.arch in (None, a)) and (args.shape in (None, s))]
+    if not todo:
+        print("nothing matches the filters")
+        return 1
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape_name in todo:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_name, mp, out_dir=args.out)
+            except Exception as e:
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"[FAIL] {arch} {shape_name} multi_pod={mp}: {e}",
+                      flush=True)
+                traceback.print_exc()
+    print(f"\n{len(todo) * len(meshes) - len(failures)}/"
+          f"{len(todo) * len(meshes)} cells compiled")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

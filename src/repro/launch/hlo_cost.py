@@ -1,0 +1,414 @@
+"""HLO-text cost analyzer with loop trip-count accounting.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a model that
+``lax.scan``s over 95 layers reports 1/95th of its real FLOPs (verified).
+This module parses ``compiled.as_text()`` (the post-SPMD, per-device
+optimized HLO), walks the call graph, and multiplies ``while`` bodies by
+their ``known_trip_count`` — yielding *executed* per-device totals:
+
+  * flops           — dot/convolution MACs x2 (contraction size from the
+                      operand symbol table)
+  * bytes           — HBM traffic proxy: operand + result bytes of every
+                      top-level instruction (fusion-internal ops excluded:
+                      they never round-trip HBM)
+  * collectives     — per-op kind and bytes, with ring-algorithm traffic
+                      factors applied per participating-group size
+
+Collective traffic convention (per device, ring algorithms):
+  all-gather: out x (g-1)/g       all-reduce: 2 x out x (g-1)/g
+  reduce-scatter: out x (g-1)     all-to-all: out x (g-1)/g
+  collective-permute: out
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+                "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _is_score_shaped(shape_str: str) -> bool:
+    """(..., S, S) with S >= 2048 and >= 4 dims — an attention score/prob
+    tensor (weight matrices have unequal trailing dims)."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return False
+    dims = [int(d) for d in m.group(2).split(",")]
+    return (len(dims) >= 4 and dims[-1] == dims[-2] and dims[-1] >= 2048)
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "constant", "after-all", "iota", "reshape", "broadcast",
+             "partition-id", "replica-id"}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_numel(shape_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    args_text: str = ""          # raw text inside the opcode parens
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)[\s(].*\{\s*$")
+
+
+def parse_module(txt: str) -> tuple[dict[str, list[Instr]], str]:
+    """-> ({computation: [Instr]}, entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = ""
+    cur: list[Instr] | None = None
+    for line in txt.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                name = m.group(2)
+                comps[name] = []
+                cur = comps[name]
+                if m.group(1):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, name, shape, opcode, rest = m.groups()
+        # operands: %refs inside the first balanced paren group
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operands = re.findall(r"%[\w\.\-]+", rest[: i])
+        cur.append(Instr(name, shape, opcode, operands, rest[i:],
+                         rest[: max(i - 1, 0)]))
+    return comps, entry
+
+
+def _group_size(attrs: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return total_devices
+
+
+def _trip_count(attrs: str) -> int | None:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else None
+
+
+_TRAFFIC = {
+    "all-gather": lambda out, g: out * (g - 1) / g,
+    "all-reduce": lambda out, g: 2 * out * (g - 1) / g,
+    "reduce-scatter": lambda out, g: out * (g - 1),
+    "all-to-all": lambda out, g: out * (g - 1) / g,
+    "collective-permute": lambda out, g: out,
+}
+
+
+def _fusion_read_bytes(body: list["Instr"], operand_shapes: list[str]
+                       ) -> float:
+    """Actual HBM reads of a fusion: a fused (dynamic-)slice of a big
+    operand (e.g. one layer out of the stacked scan weights) reads only
+    the slice, and a fused dynamic-update-slice writes only the update
+    region (the destination aliases in place)."""
+    params: dict[int, str] = {}
+    symtab: dict[str, str] = {}
+    consumers: dict[str, list[Instr]] = defaultdict(list)
+    for ins in body:
+        symtab[ins.name] = ins.shape
+        if ins.opcode == "parameter":
+            m = re.match(r"\s*(\d+)", ins.args_text)
+            if m:
+                params[int(m.group(1))] = ins.name
+        for o in ins.operands:
+            consumers[o].append(ins)
+
+    def effective_consumers(name: str, depth: int = 0) -> list[Instr]:
+        """Consumers, seen through convert/bitcast chains (XLA-CPU wraps
+        bf16 stacks in f32 converts that would not exist on TPU)."""
+        out = []
+        for c in consumers.get(name, []):
+            if c.opcode in ("convert", "bitcast", "copy") and depth < 4:
+                out.extend(effective_consumers(c.name, depth + 1))
+            else:
+                out.append(c)
+        return out
+
+    total = 0.0
+    for idx, pname in params.items():
+        full = _shape_bytes(operand_shapes[idx]) \
+            if idx < len(operand_shapes) else 0.0
+        cons = effective_consumers(pname)
+        if not cons:
+            continue
+        touched = 0.0
+        sliced = True
+        for c in cons:
+            if c.opcode in ("dynamic-slice", "slice", "gather"):
+                touched += _shape_bytes(c.shape)
+            elif c.opcode == "dynamic-update-slice":
+                upd = _shape_bytes(symtab.get(c.operands[1], "")) \
+                    if len(c.operands) > 1 else 0.0
+                touched += upd
+            else:
+                sliced = False
+                break
+        total += min(full, touched) if sliced else full
+    return total
+
+
+def _fusion_write_bytes(body: list["Instr"], out_bytes: float) -> float:
+    """Actual HBM writes of a fusion: when the root is a dynamic-update-
+    slice (XLA aliases the destination in place), only the update region
+    is written — a scan saving one layer's activations into its (L, ...)
+    stack writes layer-sized, not stack-sized, bytes."""
+    instrs = {i.name: i for i in body}
+    symtab = {i.name: i.shape for i in body}
+    consumed = {o for i in body for o in i.operands}
+    roots = [i for i in body if i.name not in consumed] or body[-1:]
+
+    def resolve(i: "Instr | None", depth: int = 0) -> "Instr | None":
+        """See through convert/bitcast/copy wrappers around the root."""
+        while i is not None and depth < 4 and \
+                i.opcode in ("convert", "bitcast", "copy") and i.operands:
+            i = instrs.get(i.operands[0])
+            depth += 1
+        return i
+
+    def write_of(i: Instr) -> float:
+        r = resolve(i)
+        if r is not None and r.opcode == "dynamic-update-slice" \
+                and len(r.operands) > 1:
+            return _shape_bytes(symtab.get(r.operands[1], ""))
+        return _shape_bytes(i.shape)
+
+    def is_dus(i: "Instr | None") -> bool:
+        r = resolve(i)
+        return r is not None and r.opcode == "dynamic-update-slice"
+
+    total = 0.0
+    saw_dus = False
+    for r in roots:
+        if r.opcode == "tuple":
+            for o in r.operands:
+                elem = instrs.get(o)
+                total += write_of(elem) if elem else 0.0
+                saw_dus |= is_dus(elem)
+        else:
+            total += write_of(r)
+            saw_dus |= is_dus(r)
+    return min(total, out_bytes) if saw_dus else out_bytes
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_bf16: float = 0.0    # f32 collectives halved (TPU est.)
+    # CPU-backend artifact accounting: XLA-CPU converts bf16 dot operands
+    # to f32 (hoisted, materialized); TPU MXUs consume bf16 natively, so
+    # these copies would not exist on the target.  ``convert_f32_bytes``
+    # is loop-weighted (traffic); ``convert_f32_buffer_bytes`` counts each
+    # convert once (a loop-resident buffer is reused across iterations).
+    convert_f32_bytes: float = 0.0
+    convert_f32_buffer_bytes: float = 0.0
+    # f32 dot outputs (CPU emits f32 and converts back; TPU MXU emits bf16
+    # when the consumer is bf16) — excess is half the f32 size
+    dot_f32_out_bytes: float = 0.0        # buffer, unweighted
+    dot_f32_traffic: float = 0.0          # loop-weighted
+    # attention-score-shaped traffic (trailing dims equal and >=2048,
+    # ndim>=4): what a fused flash-attention kernel keeps in VMEM —
+    # reported so the roofline can state a with-kernel memory estimate
+    score_traffic: float = 0.0            # loop-weighted
+    by_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_calls: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_bytes_bf16 += other.collective_bytes_bf16 * mult
+        self.convert_f32_bytes += other.convert_f32_bytes * mult
+        self.convert_f32_buffer_bytes += other.convert_f32_buffer_bytes
+        self.dot_f32_out_bytes += other.dot_f32_out_bytes
+        self.dot_f32_traffic += other.dot_f32_traffic * mult
+        self.score_traffic += other.score_traffic * mult
+        for k, v in other.by_collective.items():
+            self.by_collective[k] += v * mult
+        for k, v in other.collective_calls.items():
+            self.collective_calls[k] += int(v * mult)
+        self.unknown_loops += other.unknown_loops
+
+
+def analyze(txt: str, total_devices: int) -> Cost:
+    comps, entry = parse_module(txt)
+    memo: dict[tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, fused_ctx: bool) -> Cost:
+        key = (name, fused_ctx)
+        if key in memo:
+            return memo[key]
+        cost = Cost()
+        memo[key] = cost          # cycle guard (HLO is acyclic anyway)
+        symtab = {i.name: i.shape for i in comps.get(name, [])}
+
+        for ins in comps.get(name, []):
+            out_bytes = _shape_bytes(ins.shape)
+
+            # ---- flops
+            if ins.opcode == "dot" and ins.operands:
+                lhs_shape = symtab.get(ins.operands[0], "")
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+                contract = 1
+                if m and lhs_shape:
+                    dims_m = _SHAPE_RE.search(lhs_shape)
+                    if dims_m and dims_m.group(2):
+                        ldims = [int(d) for d in dims_m.group(2).split(",")]
+                        for ci in (m.group(1).split(",") if m.group(1) else []):
+                            contract *= ldims[int(ci)]
+                cost.flops += 2.0 * _shape_numel(ins.shape) * contract
+            elif ins.opcode == "convolution":
+                # rough: 2 * out_numel * (in_features * window) — parse the
+                # rhs (kernel) size instead: 2 * out * kernel_numel / out_feats
+                rhs_shape = symtab.get(ins.operands[1], "") \
+                    if len(ins.operands) > 1 else ""
+                cost.flops += 2.0 * _shape_numel(ins.shape) * max(
+                    1, _shape_numel(rhs_shape) // max(
+                        1, _shape_numel(ins.shape) or 1))
+
+            # ---- collectives
+            if ins.opcode in COLLECTIVES:
+                g = _group_size(ins.attrs, total_devices)
+                traffic = _TRAFFIC[ins.opcode](out_bytes, max(g, 1))
+                cost.collective_bytes += traffic
+                cost.by_collective[ins.opcode] += traffic
+                cost.collective_calls[ins.opcode] += 1
+                # bf16-model adjustment: XLA-CPU canonicalizes bf16 dots to
+                # f32 (+converts), which drags the adjacent partial-sum /
+                # gradient collectives to f32.  TPU emits bf16 dots, so f32
+                # collectives would move half the bytes there.
+                cost.collective_bytes_bf16 += (
+                    traffic / 2 if ins.shape.lstrip("(").startswith("f32")
+                    else traffic)
+
+            # ---- bytes (top-level only)
+            if not fused_ctx and ins.opcode not in _FREE_OPS:
+                contrib = 0.0
+                if ins.opcode in ("while", "conditional", "call"):
+                    pass           # carried tuple is aliased in place;
+                                   # body traffic counted via recursion
+                elif ins.opcode in ("dynamic-slice", "slice", "gather"):
+                    contrib = 2 * out_bytes              # read + write slice
+                elif ins.opcode == "dynamic-update-slice":
+                    upd = _shape_bytes(symtab.get(ins.operands[1], "")) \
+                        if len(ins.operands) > 1 else out_bytes
+                    contrib = 2 * upd       # in-place: touch the slice only
+                elif ins.opcode == "fusion":
+                    called = re.search(r"calls=(%[\w\.\-]+)", ins.attrs)
+                    body = comps.get(called.group(1), []) if called else []
+                    reads = _fusion_read_bytes(
+                        body, [symtab.get(o, "") for o in ins.operands])
+                    contrib = _fusion_write_bytes(body, out_bytes) + reads
+                else:
+                    contrib = out_bytes + sum(
+                        _shape_bytes(symtab.get(o, ""))
+                        for o in ins.operands)
+                cost.bytes += contrib
+                if contrib and (_is_score_shaped(ins.shape) or any(
+                        _is_score_shaped(symtab.get(o, ""))
+                        for o in ins.operands)):
+                    cost.score_traffic += contrib
+
+            # ---- CPU bf16->f32 dot-operand conversion artifact
+            if not fused_ctx and ins.shape.startswith("f32"):
+                body_is_convert = False
+                if ins.opcode == "convert":
+                    src = symtab.get(ins.operands[0], "") if ins.operands \
+                        else ""
+                    body_is_convert = src.startswith(("bf16", "s8", "u8"))
+                elif ins.opcode == "fusion":
+                    called = re.search(r"calls=(%[\w\.\-]+)", ins.attrs)
+                    body = comps.get(called.group(1), []) if called else []
+                    real = [b for b in body if b.opcode != "parameter"]
+                    body_is_convert = (
+                        len(real) == 1 and real[0].opcode == "convert"
+                        and any(b.shape.startswith(("bf16", "s8", "u8"))
+                                for b in body))
+                if body_is_convert and out_bytes > 64e6:
+                    cost.convert_f32_bytes += out_bytes
+                    cost.convert_f32_buffer_bytes += out_bytes
+                if ins.opcode == "dot" and out_bytes > 64e6:
+                    lhs = symtab.get(ins.operands[0], "") \
+                        if ins.operands else ""
+                    if lhs.startswith("f32"):
+                        cost.dot_f32_out_bytes += out_bytes
+                        cost.dot_f32_traffic += out_bytes
+
+            # ---- called computations
+            if ins.opcode == "while":
+                body = re.search(r"body=(%[\w\.\-]+)", ins.attrs)
+                trip = _trip_count(ins.attrs)
+                if trip is None:
+                    trip = 1
+                    cost.unknown_loops += 1
+                if body:
+                    cost.add(comp_cost(body.group(1), fused_ctx), trip)
+            elif ins.opcode == "fusion":
+                called = re.search(r"calls=(%[\w\.\-]+)", ins.attrs)
+                if called:
+                    cost.add(comp_cost(called.group(1), True), 1.0)
+            elif ins.opcode in ("call", "conditional", "async-start"):
+                for target in re.findall(
+                        r"(?:to_apply|called_computations?)=\{?(%[\w\.\-]+)",
+                        ins.attrs):
+                    cost.add(comp_cost(target, fused_ctx), 1.0)
+        return cost
+
+    return comp_cost(entry, False)

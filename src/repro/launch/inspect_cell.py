@@ -1,0 +1,116 @@
+"""Dry-run profiler: per-opcode / per-shape cost breakdown of one cell.
+
+The hypothesis-loop microscope: shows where the bytes, flops and
+collective traffic of a compiled cell actually go (loop-weighted), plus
+the biggest live buffers.
+
+  PYTHONPATH=src python -m repro.launch.inspect_cell --arch deepseek-67b \
+      --shape train_4k [--multi-pod] [--top 15]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse            # noqa: E402
+import re                  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax                 # noqa: E402
+
+from repro.dist.context import activation_batch_axis  # noqa: E402
+from repro.launch import dryrun, hlo_cost              # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+
+
+def compile_cell(arch: str, shape: str, multi_pod: bool = False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh, donate, cfg = dryrun.build_cell(
+        arch, shape, mesh)
+    bax, ext = dryrun.cell_batch_axis(arch, shape, mesh)
+    with mesh, activation_batch_axis(bax, ext):
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    return compiled, mesh
+
+
+def breakdown(compiled, n_dev: int, top: int = 15) -> str:
+    comps, entry = hlo_cost.parse_module(compiled.as_text())
+    rows = []                 # (bytes, flops, coll, op, shape, ctx)
+
+    def walk(name, fused, mult, ctx):
+        symtab = {i.name: i.shape for i in comps.get(name, [])}
+        for ins in comps.get(name, []):
+            ob = hlo_cost._shape_bytes(ins.shape)
+            byt = fl = co = 0.0
+            if ins.opcode in hlo_cost.COLLECTIVES:
+                g = hlo_cost._group_size(ins.attrs, n_dev)
+                co = hlo_cost._TRAFFIC[ins.opcode](ob, max(g, 1)) * mult
+            if ins.opcode == "dot" and ins.operands:
+                lhs = symtab.get(ins.operands[0], "")
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+                contract = 1
+                if m and lhs:
+                    dm = hlo_cost._SHAPE_RE.search(lhs)
+                    if dm and dm.group(2):
+                        ld = [int(x) for x in dm.group(2).split(",")]
+                        for ci in (m.group(1).split(",") if m.group(1)
+                                   else []):
+                            contract *= ld[int(ci)]
+                fl = 2.0 * hlo_cost._shape_numel(ins.shape) * contract * mult
+            if not fused and ins.opcode not in hlo_cost._FREE_OPS \
+                    and ins.opcode not in ("while", "conditional", "call"):
+                if ins.opcode == "fusion":
+                    called = re.search(r"calls=(%[\w\.\-]+)", ins.attrs)
+                    reads = hlo_cost._fusion_read_bytes(
+                        comps.get(called.group(1), []) if called else [],
+                        [symtab.get(o, "") for o in ins.operands])
+                    byt = (ob + reads) * mult
+                else:
+                    byt = (ob + sum(hlo_cost._shape_bytes(symtab.get(o, ""))
+                                    for o in ins.operands)) * mult
+            if byt or fl or co:
+                rows.append((byt, fl, co, ins.opcode, ins.shape[:58], ctx))
+            if ins.opcode == "while":
+                body = re.search(r"body=(%[\w\.\-]+)", ins.attrs)
+                trip = hlo_cost._trip_count(ins.attrs) or 1
+                if body:
+                    walk(body.group(1), fused, mult * trip,
+                         ctx + f">x{trip}")
+            elif ins.opcode == "fusion":
+                called = re.search(r"calls=(%[\w\.\-]+)", ins.attrs)
+                if called:
+                    walk(called.group(1), True, mult, ctx)
+
+    walk(entry, False, 1.0, "E")
+    out = []
+    for title, key in (("BYTES", 0), ("FLOPS", 1), ("COLLECTIVE", 2)):
+        agg = defaultdict(float)
+        for r in rows:
+            agg[(r[3], r[4], r[5])] += r[key]
+        out.append(f"--- top {title} ---")
+        for (op, sh, ctx), v in sorted(agg.items(), key=lambda kv: -kv[1])[:top]:
+            if v <= 0:
+                continue
+            unit = v / 1e9
+            out.append(f"  {unit:10.2f}G {op:18s} {ctx:10s} {sh}")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    compiled, mesh = compile_cell(args.arch, args.shape, args.multi_pod)
+    print(breakdown(compiled, mesh.size, args.top))
+    mem = compiled.memory_analysis()
+    print(f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+          f"args={mem.argument_size_in_bytes/2**30:.2f}GiB")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+TPU v5e topology: one pod = a 16x16 ICI torus (256 chips); multi-pod adds
+a DCN-connected ``pod`` axis.  Defined as FUNCTIONS so importing this
+module never touches jax device state (device count locks on first use —
+the dry-run forces 512 host devices, the tests keep 1).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants (per chip) — the roofline denominators
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link

@@ -1,0 +1,53 @@
+"""Serving launcher: batched greedy generation with the KV/SSM cache
+engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
+      --batch 4 --prompt-len 16 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models import registry, transformer
+from repro.serve import ServeEngine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, smoke=args.smoke)
+    if args.kv_quant:
+        cfg = cfg.replace(kv_quant=True)
+    if not cfg.supports_decode:
+        print(f"{cfg.name} is encoder-only: no decode step")
+        return 1
+    params, _ = transformer.init_params(cfg, jax.random.key(args.seed))
+    eng = ServeEngine(cfg, params,
+                      max_len=args.prompt_len + args.new_tokens)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(args.seed + 1), (args.batch, args.prompt_len),
+        0, cfg.vocab_size), np.int32)
+    t0 = time.time()
+    out = eng.generate(prompts, args.new_tokens)
+    dt = time.time() - t0
+    print(f"{cfg.name}: generated {out.shape[0]}x{out.shape[1]} tokens "
+          f"in {dt:.2f}s ({out.size / dt:.1f} tok/s)")
+    print("first row:", out[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""The assigned (architecture x input-shape) matrix.
+
+4 shapes per LM arch:
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill (forward, last-token
+                                               logits)
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token, cache
+                                               of seq_len)
+  long_500k    seq 524288, global_batch 1    -> serve_step; requires a
+                                               sub-quadratic path
+
+Skips (recorded in DESIGN.md sec. Arch-applicability):
+  * long_500k for pure full-attention archs (qwen1.5/deepseek/qwen3/pixtral/
+    qwen2-moe): a 500k dense KV cache has no sub-quadratic path;
+  * decode_32k + long_500k for hubert (encoder-only: no decode step).
+=> 32 dry-run cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import make_batch_specs
+from repro.models import registry, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+# per-arch knobs for the *full-scale* cells
+#   micro: gradient-accumulation microbatches for train_4k (activation fit)
+#   kv_quant: int8 KV cache for the 32k decode cell (HBM fit; see DESIGN.md)
+ARCH_TUNING: dict[str, dict] = {
+    # micro = gradient-accumulation count.  Measured (see EXPERIMENTS
+    # §Perf): reducing it barely moves the collective term — the per-layer
+    # TP all-reduces scale with tokens, not microbatches — so micro is
+    # kept high for activation-memory headroom.
+    "qwen1.5-32b":     {"micro": 16, "kv_quant": True, "pad_heads": True,
+                        "attn_sp": True},
+    "deepseek-67b":    {"micro": 16, "kv_quant": True,
+                        "remat_policy": "dots"},
+    "deepseek-7b":     {"micro": 8},
+    "qwen3-32b":       {"micro": 16},
+    "zamba2-1.2b":     {"micro": 4},
+    "pixtral-12b":     {"micro": 8},
+    "qwen2-moe-a2.7b": {"micro": 8},
+    "mixtral-8x7b":    {"micro": 16, "remat_policy": "dots",
+                        "train_capacity": 1.0},
+    "rwkv6-7b":        {"micro": 8},
+    # 1B-param encoder: feature-TP over 16 gives 80-column matmul shards
+    # and all-reduces that dwarf the math — use DP+SP instead: weights
+    # FSDP over data only, the model axis carries the *sequence* inside
+    # attention (attn_sp)
+    "hubert-xlarge":   {"micro": 8, "attn_sp": True, "no_tp": True},
+}
+
+
+def cell_is_skipped(cfg: ModelConfig, shape: Shape) -> str | None:
+    """-> reason string if this (arch, shape) cell is skipped, else None."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return "full attention: no sub-quadratic path at 500k"
+    return None
+
+
+def cells(archs: list[str] | None = None) -> list[tuple[str, str]]:
+    """All non-skipped (arch, shape) pairs."""
+    from repro.configs import ARCHS
+    out = []
+    for arch in archs or ARCHS:
+        cfg = registry.get_config(arch)
+        for sname, shape in SHAPES.items():
+            if cell_is_skipped(cfg, shape) is None:
+                out.append((arch, sname))
+    return out
+
+
+def configure_for_cell(cfg: ModelConfig, shape: Shape) -> ModelConfig:
+    """Cell-specific model settings (the production configuration)."""
+    tune = ARCH_TUNING.get(cfg.name, {})
+    if shape.kind == "train":
+        # ref attention: true FLOPs in HLO; microbatched fit handled by step
+        cfg = cfg.replace(remat_policy=tune.get("remat_policy", "nothing"),
+                          attn_sp=tune.get("attn_sp", False))
+        if cfg.moe is not None and "train_capacity" in tune:
+            cfg = cfg.replace(moe=dataclasses.replace(
+                cfg.moe, capacity_factor=tune["train_capacity"]))
+        return cfg
+    # inference: serve in bf16 params
+    cfg = cfg.replace(param_dtype=jnp.bfloat16)
+    if shape.kind == "prefill":
+        # stream attention over kv blocks: never materialize 32k x 32k
+        if cfg.block in ("attn", "zamba2"):
+            cfg = cfg.replace(attn_impl="blocked")
+        if tune.get("attn_sp"):
+            cfg = cfg.replace(attn_sp=True)
+        if tune.get("pad_heads"):
+            # vLLM-style TP head padding (see models/surgery.py): 40 heads
+            # -> 48, sharding 3/device instead of head_dim-sharded q/k/v
+            # whose score contractions all-reduce S x T tensors
+            from repro.models import surgery
+            cfg = surgery.pad_heads_config(cfg, divisor=16)
+        if cfg.moe is not None:
+            # bound live MoE dispatch buffers over the 1M-token batch
+            cfg = cfg.replace(
+                moe=dataclasses.replace(cfg.moe, scan_groups=8))
+        return cfg
+    if shape.name == "decode_32k" and tune.get("kv_quant"):
+        cfg = cfg.replace(kv_quant=True)
+    return cfg
+
+
+def microbatches_for(arch: str) -> int:
+    return ARCH_TUNING.get(arch, {}).get("micro", 8)
+
+
+def no_tp(arch: str) -> bool:
+    """Small-model cells that skip feature-TP (weights replicated over
+    the model axis; the model axis serves sequence parallelism)."""
+    return ARCH_TUNING.get(arch, {}).get("no_tp", False)
+
+
+def decode_cache_len(cfg: ModelConfig, shape: Shape) -> int:
+    """Physical cache length for decode cells (window-bounded for SWA)."""
+    if cfg.sliding_window is not None:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    shape = SHAPES[shape_name]
+    cfg = configure_for_cell(registry.get_config(arch), shape)
+    if shape.kind in ("train", "prefill"):
+        specs = make_batch_specs(cfg, shape.global_batch, shape.seq_len)
+        if shape.kind == "prefill":
+            specs.pop("labels", None)
+        return {"batch": specs}
+    # decode: cache + one token
+    cache, cache_specs = transformer.init_cache_arrays(
+        cfg, shape.global_batch, decode_cache_len(cfg, shape), abstract=True)
+    return {
+        "cache": cache,
+        "cache_logical": cache_specs,
+        "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }

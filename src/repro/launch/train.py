@@ -1,0 +1,56 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --smoke \
+      --steps 50 --batch 8 --seq 64 [--checkpoint-dir ckpt] [--resume]
+
+Runs the real training loop (synthetic deterministic data) on whatever
+devices exist.  ``--smoke`` selects the reduced config (CPU-sized); the
+full configs are exercised through ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.data import DataConfig
+from repro.models import registry
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    mcfg = registry.get_config(args.arch, smoke=args.smoke)
+    opt = AdamWConfig(lr=args.lr)
+    dcfg = DataConfig(global_batch=args.batch, seq_len=args.seq,
+                      seed=args.seed)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, microbatches=args.microbatches,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every, log_every=args.log_every,
+        seed=args.seed)
+    print(f"training {mcfg.name} ({mcfg.n_params()/1e6:.1f}M params) "
+          f"for {args.steps} steps, batch={args.batch} seq={args.seq}")
+    res = Trainer(mcfg, opt, dcfg, tcfg).run()
+    print(f"done: {res.steps_run} steps in {res.wall_seconds:.1f}s, "
+          f"loss {res.losses[0]:.4f} -> {res.final_loss:.4f}"
+          + (f" (resumed from step {res.restored_from})"
+             if res.restored_from else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+from .config import ModelConfig, MoEConfig, RWKVConfig, SSMConfig
+from .registry import (count_active_params, count_params, get_config,
+                       list_archs, register)
+from . import transformer
+
+__all__ = ["ModelConfig", "MoEConfig", "RWKVConfig", "SSMConfig",
+           "count_active_params", "count_params", "get_config", "list_archs",
+           "register", "transformer"]

@@ -1,0 +1,311 @@
+"""Grouped-query attention with the flavor flags of the assigned archs:
+QKV bias (qwen1.5), qk-norm (qwen3), sliding window (mixtral), GQA (all),
+encoder mode (hubert).  ``attn_impl='flash'`` routes the sequence path
+through the Pallas kernel; ``'ref'`` is the pure-jnp path (used by the
+dry-run so HLO cost analysis sees the true FLOPs).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Leaf, apply_rope, mk, rmsnorm
+
+
+def init_attention(ks, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    p = {
+        "wq": mk(next(ks), (*L, d, h, hd), (*A, "embed", "heads", "head_dim"), dt),
+        "wk": mk(next(ks), (*L, d, kv, hd), (*A, "embed", "kv_heads", "head_dim"), dt),
+        "wv": mk(next(ks), (*L, d, kv, hd), (*A, "embed", "kv_heads", "head_dim"), dt),
+        "wo": mk(next(ks), (*L, h, hd, d), (*A, "heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(next(ks), (*L, h, hd), (*A, "heads", "head_dim"), dt, init="zeros")
+        p["bk"] = mk(next(ks), (*L, kv, hd), (*A, "kv_heads", "head_dim"), dt, init="zeros")
+        p["bv"] = mk(next(ks), (*L, kv, hd), (*A, "kv_heads", "head_dim"), dt, init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = mk(next(ks), (*L, hd), (*A, "head_dim"), dt, init="ones")
+        p["k_norm"] = mk(next(ks), (*L, hd), (*A, "head_dim"), dt, init="ones")
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    pet = dict(preferred_element_type=cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cfg.dtype), **pet)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cfg.dtype), **pet)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cfg.dtype), **pet)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cfg.dtype)
+        k = k + p["bk"].astype(cfg.dtype)
+        v = v + p["bv"].astype(cfg.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if not cfg.encoder_only:           # hubert uses learned conv pos (stubbed)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ref_core(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+              q_positions: jax.Array, kv_positions: jax.Array,
+              kv_len: jax.Array | None = None,
+              k_scale: jax.Array | None = None,
+              v_scale: jax.Array | None = None) -> jax.Array:
+    """Reference GQA attention.  q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd).
+    Masking from absolute positions; ``kv_len`` bounds valid cache entries.
+    ``k_scale``/``v_scale`` (B,T): int8-quantized KV — the scale is folded
+    into scores/probs so no dequantized cache copy materializes."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, g, hd)
+    kc = k.astype(cfg.dtype) if k.dtype == jnp.int8 else k
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, kc).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if k_scale is not None:
+        scores = scores * k_scale.astype(jnp.float32)[:, None, None, None, :]
+
+    qpos = q_positions[..., :, None]            # (S,1) or (B,S,1)
+    kpos = kv_positions[..., None, :]           # (1,T) or (B,1,T)
+    mask = jnp.ones((S, T), dtype=bool) if cfg.encoder_only else (kpos <= qpos)
+    if cfg.sliding_window is not None:
+        mask = mask & (kpos > qpos - cfg.sliding_window)
+    mask = mask & (kpos >= 0)                   # ring slots not yet written
+    if kv_len is not None:
+        mask = mask & (kv_positions < kv_len)[..., None, :]
+    scores = jnp.where(mask[..., None, None, :, :] if mask.ndim == 2
+                       else mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if v_scale is not None:
+        probs = probs * v_scale.astype(jnp.float32)[:, None, None, None, :]
+    probs = probs.astype(cfg.dtype)
+    vc = v.astype(cfg.dtype) if v.dtype == jnp.int8 else v
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, vc)
+    return out.reshape(B, S, Hq, hd)
+
+
+def _blocked_core(cfg: ModelConfig, q: jax.Array, k: jax.Array,
+                  v: jax.Array, block_k: int = 512, q_chunks: int = 4
+                  ) -> jax.Array:
+    """Memory-bounded attention: online softmax streamed over kv blocks
+    with ``lax.scan`` (never materializes the S x T score matrix — the
+    pure-XLA analogue of the Pallas flash kernel, used where the kernel
+    cannot lower: CPU dry-runs and the 32k-prefill cells).  For causal
+    attention the q dim is split into ``q_chunks`` static chunks so kv
+    blocks entirely above the diagonal are not computed (FLOP overcount
+    vs a perfect diagonal skip: 1 + 1/(2*q_chunks))."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    causal = not cfg.encoder_only
+    window = cfg.sliding_window
+
+    def run_chunk(qc: jax.Array, q0: int, kv_lo: int, kv_hi: int
+                  ) -> jax.Array:
+        """qc: (B, Sc, Hq, hd) starting at absolute position q0; attends
+        kv[kv_lo:kv_hi] (static bounds — the causal/SWA block skip).
+
+        Flat-head form: kv blocks are repeated to Hq heads *per block*
+        (cheap — one kv block) instead of reshaping q to (Hkv, g, hd).
+        The grouped reshape splits a sharded Hq dim into dims the mesh
+        cannot divide, which GSPMD resolves by replicating q AND the
+        weights that produce it (verified: +4.3 GB/device on mixtral)."""
+        Sc = qc.shape[1]
+        span = kv_hi - kv_lo
+        bk = min(block_k, span)
+        nb = span // bk
+        rem = span - nb * bk                # trailing partial block
+        qf = qc.astype(jnp.float32) * scale
+        qpos = q0 + jnp.arange(Sc, dtype=jnp.int32)
+
+        def attend(carry, kblk, vblk, kpos):
+            m, l, acc = carry
+            if g > 1:                       # expand kv heads per block
+                kblk = jnp.repeat(kblk, g, axis=2)
+                vblk = jnp.repeat(vblk, g, axis=2)
+            s = jnp.einsum("bshd,bthd->bsht", qf,
+                           kblk.astype(jnp.float32))
+            msk = jnp.ones((Sc, kblk.shape[1]), bool)
+            if causal:
+                msk = msk & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                msk = msk & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(msk[None, :, None, :], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None, :, None, :], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bsht,bthd->bshd", p, vblk.astype(jnp.float32))
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((B, Sc, Hq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Sc, Hq), jnp.float32)
+        a0 = jnp.zeros((B, Sc, Hq, hd), jnp.float32)
+
+        kb = k[:, kv_lo: kv_lo + nb * bk].reshape(B, nb, bk, Hkv, hd)
+        vb = v[:, kv_lo: kv_lo + nb * bk].reshape(B, nb, bk, Hkv, hd)
+        pb = kv_lo + jnp.arange(nb * bk, dtype=jnp.int32).reshape(nb, bk)
+
+        def body(carry, inp):
+            kblk, vblk, kpos = inp
+            return attend(carry, kblk, vblk, kpos), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb))
+        if rem:
+            m, l, acc = attend((m, l, acc), k[:, kv_lo + nb * bk: kv_hi],
+                               v[:, kv_lo + nb * bk: kv_hi],
+                               jnp.arange(kv_lo + nb * bk, kv_hi,
+                                          dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(B, Sc, Hq, hd).astype(cfg.dtype)
+
+    if not causal:
+        return run_chunk(q, 0, 0, T)
+    nq = q_chunks if S % q_chunks == 0 and S >= q_chunks else 1
+    Sc = S // nq
+    outs = []
+    qq = q
+    for i in range(nq):
+        lo = 0 if window is None else max(0, i * Sc - window)
+        out = run_chunk(qq[:, i * Sc: (i + 1) * Sc], i * Sc,
+                        lo, min(T, (i + 1) * Sc))
+        if i + 1 < nq:
+            # scheduling edge: chunk i+1 starts only after chunk i, so XLA
+            # reuses one chunk's accumulator buffers instead of keeping
+            # all nq alive (verified: 4x peak-temp reduction at 32k)
+            out, qq = jax.lax.optimization_barrier((out, qq))
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1) if nq > 1 else outs[0]
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+              ) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cfg.attn_sp:
+        # sequence-parallel attention (context-provided axis): q seq
+        # sharded, kv replicated on that axis -> scores stay local
+        from repro.dist.context import constrain_attn_seq
+        q, k, v, _ = constrain_attn_seq(q, k, v)
+    if cfg.attn_impl == "flash" and not cfg.encoder_only:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True,
+                                     window=cfg.sliding_window)
+    elif cfg.attn_impl == "blocked":
+        out = _blocked_core(cfg, q, k, v)
+    else:
+        out = _ref_core(cfg, q, k, v, positions, positions)
+    if cfg.attn_sp:
+        from repro.dist.context import constrain_batch, constrain_seq
+        out = constrain_seq(out)
+        # leave the seq-parallel region at the block boundary: without
+        # this the seq-sharding propagates into the MLP, which then
+        # replicates (fully gathers) its TP weights
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype),
+                       preferred_element_type=cfg.dtype)
+        return constrain_batch(y, exact=True)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype),
+                      preferred_element_type=cfg.dtype)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  abstract: bool = False, stacked: int | None = None) -> dict:
+    """``cfg.kv_quant`` stores K/V int8 with a per-(batch, slot) bf16 scale
+    (shared over heads and head_dim) — 2x HBM saving on serving caches;
+    scores contract against int8 directly (MXU int8 path) with the scale
+    folded in afterwards, so no dequantized copy ever materializes."""
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    shape = (*L, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = (*A, "batch", None, "kv_heads", "head_dim")
+    kv_dtype = jnp.int8 if cfg.kv_quant else cfg.dtype
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, kv_dtype)
+        out = {"k": Leaf(arr, axes), "v": Leaf(arr, axes)}
+    else:
+        z = jnp.zeros(shape, kv_dtype)
+        out = {"k": Leaf(z, axes), "v": Leaf(z, axes)}
+    if cfg.kv_quant:
+        s_shape = (*L, batch, max_len)
+        s_axes = (*A, "batch", None)
+        if abstract:
+            s = jax.ShapeDtypeStruct(s_shape, jnp.bfloat16)
+            out["k_scale"], out["v_scale"] = Leaf(s, s_axes), Leaf(s, s_axes)
+        else:
+            zs = jnp.zeros(s_shape, jnp.bfloat16)
+            out["k_scale"] = Leaf(zs, s_axes)
+            out["v_scale"] = Leaf(jnp.array(zs), s_axes)
+    return out
+
+
+def _quantize_token(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """t: (B, 1, Hkv, hd) -> (int8, scale (B, 1) bf16)."""
+    tf = t.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(tf), axis=(1, 2, 3), keepdims=False)[:, None] / 127.0
+    scale = jnp.maximum(scale, 1e-8)                    # (B, 1)
+    q = jnp.clip(jnp.round(tf / scale[:, :, None, None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array, kv: dict,
+                     cache_len: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B,1,d); kv: {"k","v"[,"k_scale","v_scale"]}
+    with k/v (B,Smax,Hkv,hd); cache_len: scalar int32 — tokens already in
+    the cache.  Returns (out (B,1,d), new kv dict).
+
+    SWA archs use a *ring* cache: ``Smax`` may be just the window, slot
+    ``t % Smax`` holds token ``t``, and slot positions are reconstructed
+    from ``cache_len`` — this is what makes mixtral's ``long_500k`` cell
+    O(window) HBM instead of O(seq).  ``cfg.kv_quant`` stores int8 + per
+    (batch, slot) scales."""
+    B, _, _ = x.shape
+    Smax = kv["k"].shape[1]
+    positions = jnp.full((1,), cache_len, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    ring = cfg.sliding_window is not None and Smax <= cfg.sliding_window
+    if ring:
+        slot = cache_len % Smax
+        idx = jnp.arange(Smax, dtype=jnp.int32)
+        # slot i holds the largest position p <= cache_len with p % Smax == i
+        kv_positions = cache_len - ((cache_len - idx) % Smax)
+        kv_len = None            # every slot's position is already <= qpos
+    else:
+        slot = cache_len
+        kv_positions = jnp.arange(Smax, dtype=jnp.int32)
+        kv_len = cache_len + 1
+    new = dict(kv)
+    if cfg.kv_quant:
+        kq, ks = _quantize_token(k)
+        vq, vs = _quantize_token(v)
+        new["k"] = jax.lax.dynamic_update_slice(kv["k"], kq, (0, slot, 0, 0))
+        new["v"] = jax.lax.dynamic_update_slice(kv["v"], vq, (0, slot, 0, 0))
+        new["k_scale"] = jax.lax.dynamic_update_slice(
+            kv["k_scale"], ks.astype(kv["k_scale"].dtype), (0, slot))
+        new["v_scale"] = jax.lax.dynamic_update_slice(
+            kv["v_scale"], vs.astype(kv["v_scale"].dtype), (0, slot))
+        out = _ref_core(cfg, q, new["k"], new["v"],
+                        q_positions=positions, kv_positions=kv_positions,
+                        kv_len=kv_len, k_scale=new["k_scale"],
+                        v_scale=new["v_scale"])
+    else:
+        new["k"] = jax.lax.dynamic_update_slice(kv["k"], k, (0, slot, 0, 0))
+        new["v"] = jax.lax.dynamic_update_slice(kv["v"], v, (0, slot, 0, 0))
+        out = _ref_core(cfg, q, new["k"], new["v"],
+                        q_positions=positions, kv_positions=kv_positions,
+                        kv_len=kv_len)
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.dtype),
+                       preferred_element_type=cfg.dtype), new)

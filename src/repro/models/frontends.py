@@ -1,0 +1,50 @@
+"""Modality frontends — STUBS by assignment.
+
+The [audio]/[vlm] archs specify the transformer BACKBONE only; the modality
+frontend provides precomputed frame/patch embeddings via ``input_specs()``.
+Here we keep only the thin trainable adapters that map precomputed features
+into the backbone width (HuBERT's conv feature extractor and Pixtral's ViT
+run upstream and are not part of the assigned configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import mk
+
+
+def init_audio_frontend(ks, cfg: ModelConfig) -> dict:
+    """HuBERT-style: precomputed conv features (B,S,frontend_dim) -> d_model,
+    plus the learned [MASK] frame embedding for masked prediction."""
+    dt = cfg.param_dtype
+    return {
+        "proj": mk(next(ks), (cfg.frontend_dim, cfg.d_model), (None, "embed"), dt),
+        "proj_b": mk(next(ks), (cfg.d_model,), ("embed",), dt, init="zeros"),
+        "mask_emb": mk(next(ks), (cfg.d_model,), ("embed",), dt, scale=0.02),
+    }
+
+
+def audio_frontend(p: dict, cfg: ModelConfig, features: jax.Array,
+                   mask: jax.Array | None) -> jax.Array:
+    """features: (B,S,frontend_dim); mask: (B,S) bool — True = masked frame."""
+    x = jnp.einsum("bsf,fd->bsd", features.astype(cfg.dtype),
+                   p["proj"].astype(cfg.dtype)) + p["proj_b"].astype(cfg.dtype)
+    if mask is not None:
+        x = jnp.where(mask[..., None], p["mask_emb"].astype(cfg.dtype), x)
+    return x
+
+
+def init_vision_adapter(ks, cfg: ModelConfig) -> dict:
+    """Pixtral-style: precomputed patch embeddings -> backbone width."""
+    dt = cfg.param_dtype
+    return {
+        "proj": mk(next(ks), (cfg.frontend_dim, cfg.d_model), (None, "embed"), dt),
+        "proj_b": mk(next(ks), (cfg.d_model,), ("embed",), dt, init="zeros"),
+    }
+
+
+def vision_adapter(p: dict, cfg: ModelConfig, patches: jax.Array) -> jax.Array:
+    return jnp.einsum("bsf,fd->bsd", patches.astype(cfg.dtype),
+                      p["proj"].astype(cfg.dtype)) + p["proj_b"].astype(cfg.dtype)

@@ -1,0 +1,155 @@
+"""Shared neural building blocks (pure functional JAX, no flax).
+
+Parameter trees are built from ``Leaf`` objects that carry both the array
+and its *logical sharding axes* (e.g. ``("embed", "mlp")``); ``split_tree``
+separates them into a params pytree and a parallel spec pytree that
+``repro.dist.sharding`` maps onto the device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# param-tree plumbing
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Leaf:
+    value: jax.Array | jax.ShapeDtypeStruct
+    axes: tuple[str | None, ...]
+
+
+def _is_leaf(x: Any) -> bool:
+    return isinstance(x, Leaf)
+
+
+def split_tree(tree: Any) -> tuple[Any, Any]:
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=_is_leaf)
+    specs = jax.tree.map(lambda l: l.axes, tree, is_leaf=_is_leaf)
+    return params, specs
+
+
+def mk(key: jax.Array | None, shape: tuple[int, ...], axes: tuple[str | None, ...],
+       dtype: Any, scale: float | None = None, init: str = "normal") -> Leaf:
+    """Create one parameter.  ``key=None`` -> ShapeDtypeStruct (abstract init
+    for the dry-run: no host allocation for 67B-param models)."""
+    assert len(shape) == len(axes), (shape, axes)
+    if key is None:
+        return Leaf(jax.ShapeDtypeStruct(shape, dtype), axes)
+    if init == "zeros":
+        return Leaf(jnp.zeros(shape, dtype), axes)
+    if init == "ones":
+        return Leaf(jnp.ones(shape, dtype), axes)
+    if scale is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return Leaf((jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype), axes)
+
+
+def keygen(key: jax.Array | None):
+    """Infinite stream of subkeys; yields None forever in abstract mode."""
+    while True:
+        if key is None:
+            yield None
+        else:
+            key, sub = jax.random.split(key)
+            yield sub
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def init_rmsnorm(ks, d: int, dtype: Any, stacked: int | None = None) -> Leaf:
+    shape, axes = (d,), ("embed",)
+    if stacked is not None:
+        shape, axes = (stacked, d), ("layers", "embed")
+    if next(ks) is None:          # abstract mode
+        return Leaf(jax.ShapeDtypeStruct(shape, dtype), axes)
+    return Leaf(jnp.ones(shape, dtype), axes)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# MLP (SwiGLU / plain)
+# --------------------------------------------------------------------- #
+def init_mlp(ks, d_model: int, d_ff: int, dtype: Any, glu: bool,
+             stacked: int | None = None) -> dict:
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    p = {"up": mk(next(ks), (*L, d_model, d_ff), (*A, "embed", "mlp"), dtype),
+         "down": mk(next(ks), (*L, d_ff, d_model), (*A, "mlp", "embed"), dtype)}
+    if glu:
+        p["gate"] = mk(next(ks), (*L, d_model, d_ff), (*A, "embed", "mlp"), dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    fn = getattr(jax.nn, act)
+    dt = x.dtype
+    # preferred_element_type pins the dot output dtype to the activation
+    # dtype, so the TP partial-sum all-reduce of the down-projection moves
+    # bf16 — without it XLA may all-reduce the f32 accumulator (2x bytes)
+    h = jnp.einsum("...d,df->...f", x, p["up"].astype(dt),
+                   preferred_element_type=dt)
+    if "gate" in p:
+        h = h * fn(jnp.einsum("...d,df->...f", x, p["gate"].astype(dt),
+                              preferred_element_type=dt))
+    else:
+        h = fn(h)
+    return jnp.einsum("...f,fd->...d", h, p["down"].astype(dt),
+                      preferred_element_type=dt)
+
+
+# --------------------------------------------------------------------- #
+# rotary position embeddings
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                        # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# embeddings / LM head / losses
+# --------------------------------------------------------------------- #
+def init_embedding(ks, vocab: int, d_model: int, dtype: Any) -> Leaf:
+    return mk(next(ks), (vocab, d_model), ("vocab", "embed"), dtype, scale=0.02)
+
+
+def init_lm_head(ks, d_model: int, vocab: int, dtype: Any) -> Leaf:
+    return mk(next(ks), (d_model, vocab), ("embed", "vocab"), dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token CE in fp32.  logits (..., V); labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,219 @@
+"""Mamba2 / SSD block (Dao & Gu 2024), TPU-adapted.
+
+The sequence path uses the *chunked SSD algorithm* — intra-chunk work is
+attention-like matmuls (MXU-friendly), inter-chunk state flows through a
+short ``lax.scan`` over chunks.  This is both the faithful algorithm and
+what we kernelize in Pallas (``repro.kernels.mamba2_ssd``).
+
+Decode keeps O(1) state per layer: the SSM state (B,nh,hd,d_state) plus a
+(d_conv-1)-deep causal-conv tail — this is why the hybrid/ssm archs run the
+``long_500k`` shape that dense attention cannot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import mk, rmsnorm
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.d_state
+
+
+def init_mamba2(ks, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    s = cfg.ssm
+    d_inner, nh, hd, ds = _dims(cfg)
+    d_xbc = d_inner + 2 * ds                     # conv runs over [x, B, C]
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    d, dt = cfg.d_model, cfg.param_dtype
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_z": mk(next(ks), (*L, d, d_inner), (*A, "embed", "mlp"), dt),
+        "in_x": mk(next(ks), (*L, d, d_inner), (*A, "embed", "mlp"), dt),
+        "in_b": mk(next(ks), (*L, d, ds), (*A, "embed", None), dt),
+        "in_c": mk(next(ks), (*L, d, ds), (*A, "embed", None), dt),
+        "in_dt": mk(next(ks), (*L, d, nh), (*A, "embed", "heads"), dt),
+        "dt_bias": mk(next(ks), (*L, nh), (*A, "heads"), dt, init="zeros"),
+        "conv_w": mk(next(ks), (*L, s.d_conv, d_xbc), (*A, None, "mlp"), dt,
+                     scale=0.5),
+        "conv_b": mk(next(ks), (*L, d_xbc), (*A, "mlp"), dt, init="zeros"),
+        "a_log": mk(next(ks), (*L, nh), (*A, "heads"), dt, init="zeros"),
+        "d_skip": mk(next(ks), (*L, nh), (*A, "heads"), dt, init="ones"),
+        "norm": mk(next(ks), (*L, d_inner), (*A, "mlp"), dt, init="ones"),
+        "out": mk(next(ks), (*L, d_inner, d), (*A, "mlp", "embed"), dt),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv.  xbc: (B,S,D); w: (K,D); tail: (B,K-1,D)."""
+    K = w.shape[0]
+    pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype) \
+        if tail is None else tail
+    xp = jnp.concatenate([pad, xbc], axis=1)                 # (B, S+K-1, D)
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                B: jax.Array, C: jax.Array, chunk: int,
+                h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (b,S,nh,hd); dt: (b,S,nh); a_log: (nh,); B,C: (b,S,ds).
+    Returns (y (b,S,nh,hd), h_final (b,nh,hd,ds)).
+    """
+    b, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    Q = min(chunk, S)
+    nchunk = S // Q
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                   # (nh,) negative
+    dtf = dt.astype(jnp.float32)
+    lax_ = dtf * A                                            # (b,S,nh) log-decay
+    xw = (x * dt[..., None]).astype(x.dtype)                  # dt-weighted input
+
+    def rs(t, *shape):
+        return t.reshape(b, nchunk, Q, *shape)
+
+    xc, lc = rs(xw, nh, hd), rs(lax_, nh)
+    Bc, Cc = rs(B, ds), rs(C, ds)
+    cum = jnp.cumsum(lc, axis=2)                              # (b,n,Q,nh)
+
+    # --- intra-chunk (attention-like, causal) --------------------------
+    # M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) for s <= t
+    scores = jnp.einsum("bnts,bnqs->bntq", Cc, Bc)            # (b,n,Q,Q) t,q=src
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (b,n,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask inside the exp argument: exp of the dead (t<s) branch would be
+    # +inf and poison gradients through jnp.where
+    M = jnp.exp(jnp.where(causal, decay, -jnp.inf)) * scores[..., None]
+    y_intra = jnp.einsum("bntqh,bnqhd->bnthd", M.astype(x.dtype), xc)
+
+    # --- chunk summaries -> inter-chunk scan ---------------------------
+    tail = cum[:, :, -1:, :] - cum                            # exp to chunk end
+    Sc = jnp.einsum("bnqs,bnqhd->bnhds", Bc.astype(jnp.float32),
+                    xc.astype(jnp.float32) * jnp.exp(tail)[..., None])
+    gamma = jnp.exp(cum[:, :, -1, :])                         # (b,n,nh)
+
+    h_init = jnp.zeros((b, nh, hd, ds), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        S_i, g_i = inp                                        # (b,nh,hd,ds),(b,nh)
+        h_new = h * g_i[:, :, None, None] + S_i
+        return h_new, h                                       # emit state *entering* chunk
+
+    Sc_t = jnp.moveaxis(Sc, 1, 0)                             # (n,b,nh,hd,ds)
+    g_t = jnp.moveaxis(gamma, 1, 0)                           # (n,b,nh)
+    h_fin, h_enter = jax.lax.scan(step, h_init, (Sc_t, g_t))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                     # (b,n,nh,hd,ds)
+
+    # --- inter-chunk contribution --------------------------------------
+    y_inter = jnp.einsum("bnts,bnhds,bnth->bnthd",
+                         Cc.astype(jnp.float32), h_enter,
+                         jnp.exp(cum)).astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(b, S, nh, hd)
+    return y, h_fin
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+             B: jax.Array, C: jax.Array, h: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence.  x: (b,nh,hd); dt: (b,nh); B,C: (b,ds);
+    h: (b,nh,hd,ds)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    g = jnp.exp(dt.astype(jnp.float32) * A)                   # (b,nh)
+    upd = jnp.einsum("bhd,bs->bhds", (x * dt[..., None]).astype(jnp.float32),
+                     B.astype(jnp.float32))
+    h = h * g[:, :, None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", h, C.astype(jnp.float32))
+    return y.astype(x.dtype), h
+
+
+def mamba2_seq(p: dict, cfg: ModelConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 block.  u: (B,S,d_model)."""
+    s = cfg.ssm
+    d_inner, nh, hd, ds = _dims(cfg)
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"].astype(cfg.dtype))
+    xb = jnp.einsum("bsd,de->bse", u, p["in_x"].astype(cfg.dtype))
+    Bv = jnp.einsum("bsd,de->bse", u, p["in_b"].astype(cfg.dtype))
+    Cv = jnp.einsum("bsd,de->bse", u, p["in_c"].astype(cfg.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p["in_dt"].astype(cfg.dtype)
+                   ).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    xbc = jnp.concatenate([xb, Bv, Cv], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(cfg.dtype),
+                       p["conv_b"].astype(cfg.dtype))
+    xb, Bv, Cv = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+
+    xh = xb.reshape(*xb.shape[:2], nh, hd)
+    if cfg.ssm_impl == "pallas":
+        from repro.kernels.mamba2_ssd import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xh, dt.astype(cfg.dtype), p["a_log"], Bv, Cv,
+                           chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt.astype(cfg.dtype), p["a_log"], Bv, Cv,
+                           chunk=s.chunk)
+    y = y + xh * p["d_skip"].astype(cfg.dtype)[:, None]
+    y = y.reshape(*u.shape[:2], d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out"].astype(cfg.dtype))
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, abstract: bool = False,
+                      stacked: int | None = None) -> dict:
+    from .layers import Leaf
+    s = cfg.ssm
+    d_inner, nh, hd, ds = _dims(cfg)
+    d_xbc = d_inner + 2 * ds
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    sh_h = (*L, batch, nh, hd, ds)
+    ax_h = (*A, "batch", "heads", None, None)
+    sh_c = (*L, batch, s.d_conv - 1, d_xbc)
+    ax_c = (*A, "batch", None, "mlp")
+    if abstract:
+        return {"h": Leaf(jax.ShapeDtypeStruct(sh_h, jnp.float32), ax_h),
+                "conv": Leaf(jax.ShapeDtypeStruct(sh_c, cfg.dtype), ax_c)}
+    return {"h": Leaf(jnp.zeros(sh_h, jnp.float32), ax_h),
+            "conv": Leaf(jnp.zeros(sh_c, cfg.dtype), ax_c)}
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, u: jax.Array,
+                  state: dict) -> tuple[jax.Array, dict]:
+    """One-token decode.  u: (B,1,d_model); state: {"h","conv"}."""
+    d_inner, nh, hd, ds = _dims(cfg)
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"].astype(cfg.dtype))
+    xb = jnp.einsum("bsd,de->bse", u, p["in_x"].astype(cfg.dtype))
+    Bv = jnp.einsum("bsd,de->bse", u, p["in_b"].astype(cfg.dtype))
+    Cv = jnp.einsum("bsd,de->bse", u, p["in_c"].astype(cfg.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p["in_dt"].astype(cfg.dtype)
+                   ).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    xbc = jnp.concatenate([xb, Bv, Cv], axis=-1)              # (B,1,d_xbc)
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)   # (B,K,d_xbc)
+    w, b = p["conv_w"].astype(cfg.dtype), p["conv_b"].astype(cfg.dtype)
+    out = jax.nn.silu((conv_in * w[None]).sum(1) + b)[:, None]  # (B,1,d_xbc)
+    new_conv = conv_in[:, 1:]
+    xb, Bv, Cv = jnp.split(out, [d_inner, d_inner + ds], axis=-1)
+
+    xh = xb[:, 0].reshape(-1, nh, hd)
+    y, h = ssd_step(xh, dt[:, 0].astype(cfg.dtype), p["a_log"],
+                    Bv[:, 0], Cv[:, 0], state["h"])
+    y = y + xh * p["d_skip"].astype(cfg.dtype)[:, None]
+    y = y.reshape(u.shape[0], 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (jnp.einsum("bse,ed->bsd", y, p["out"].astype(cfg.dtype)),
+            {"h": h, "conv": new_conv})

@@ -1,0 +1,253 @@
+"""RWKV6 "Finch" block (Peng et al. 2024, arXiv:2404.05892).
+
+Linear attention with *data-dependent per-channel decay*:
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+    o_t = r_t · (diag(u) k_t ⊗ v_t + S_{t-1})
+Sequence path uses a chunked closed form (attention-like intra-chunk
+matmuls + short scan over chunk states) mirroring the SSD layout, so the
+same Pallas kernel skeleton applies (``repro.kernels.rwkv6_scan``).
+
+Includes token-shift for the time-mix and the RWKV channel-mix FFN is the
+standard MLP of the stack (d_ff given by the assigned config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import mk, rmsnorm
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def init_rwkv6(ks, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    nh, hd = _dims(cfg)
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    d, dt = cfg.d_model, cfg.param_dtype
+    r = cfg.rwkv.decay_lora
+    return {
+        "mix_r": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "mix_k": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "mix_v": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "mix_w": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "mix_g": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "wr": mk(next(ks), (*L, d, nh, hd), (*A, "embed", "heads", "head_dim"), dt),
+        "wk": mk(next(ks), (*L, d, nh, hd), (*A, "embed", "heads", "head_dim"), dt),
+        "wv": mk(next(ks), (*L, d, nh, hd), (*A, "embed", "heads", "head_dim"), dt),
+        "wg": mk(next(ks), (*L, d, d), (*A, "embed", "embed"), dt),
+        # data-dependent decay: w_t = exp(-exp(w0 + (x W_a) W_b))
+        "w0": mk(next(ks), (*L, nh, hd), (*A, "heads", "head_dim"), dt, init="zeros"),
+        "wa": mk(next(ks), (*L, d, r), (*A, "embed", None), dt, scale=0.02),
+        "wb": mk(next(ks), (*L, r, nh, hd), (*A, None, "heads", "head_dim"), dt,
+                 scale=0.02),
+        "u": mk(next(ks), (*L, nh, hd), (*A, "heads", "head_dim"), dt, init="zeros"),
+        "ln_x": mk(next(ks), (*L, d), (*A, "embed"), dt, init="ones"),
+        "out": mk(next(ks), (*L, d, d), (*A, "embed", "embed"), dt),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} stream.  prev: (B,1,d) carry for decode; zeros at t=0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                 u: jax.Array, chunk: int, S0: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Chunked WKV6.
+
+    r,k,v: (b,S,nh,hd); logw: (b,S,nh,hd) (negative log-decays);
+    u: (nh,hd).  Returns (o (b,S,nh,hd), S_final (b,nh,hd,hd)).
+
+    Closed form: o_t = Σ_{s<t} (r_t ⊙ exp(W_{t-1}-W_s)) · k_s  v_s
+                      + (r_t ⊙ u) · k_t  v_t
+    with W the inclusive cumsum of logw along time.
+    """
+    b, S, nh, hd = r.shape
+    Q = min(chunk, S)
+    nchunk = S // Q
+    assert S % Q == 0
+
+    def rs(t):
+        return t.reshape(b, nchunk, Q, nh, hd)
+
+    rc, kc, vc = rs(r), rs(k), rs(v)
+    lw = rs(logw.astype(jnp.float32))
+    cum = jnp.cumsum(lw, axis=2)                              # (b,n,Q,nh,hd)
+
+    # intra-chunk: pairs (t, s) with s < t ; decay exp(W_{t-1} - W_s)
+    dec_t = cum - lw                                          # W_{t-1} (exclusive)
+    expo = dec_t[:, :, :, None] - cum[:, :, None, :, :]       # (b,n,t,s,nh,hd)
+    strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)[None, None, :, :, None, None]
+    rdec = rc.astype(jnp.float32)[:, :, :, None] * jnp.exp(
+        jnp.where(strict, expo, -jnp.inf))                    # (b,n,t,s,nh,hd)
+    scores = jnp.einsum("bntshd,bnshd->bnths", rdec,
+                        kc.astype(jnp.float32))               # (b,n,t,nh,s)
+    y_intra = jnp.einsum("bnths,bnshd->bnthd", scores.astype(r.dtype), vc)
+    # diagonal bonus term
+    diag = jnp.einsum("bnthd,bnthd->bnth", rc * u.astype(r.dtype), kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # chunk summaries: S_i = Σ_s exp(W_Q - W_s) k_s ⊗ v_s ; carry scan
+    tail = cum[:, :, -1:] - cum                               # (b,n,Q,nh,hd)
+    Sc = jnp.einsum("bnshd,bnshe->bnhde",
+                    kc.astype(jnp.float32) * jnp.exp(tail), vc.astype(jnp.float32))
+    gamma = jnp.exp(cum[:, :, -1])                            # (b,n,nh,hd)
+
+    S_init = jnp.zeros((b, nh, hd, hd), jnp.float32) if S0 is None \
+        else S0.astype(jnp.float32)
+
+    def step(Sst, inp):
+        S_i, g_i = inp
+        return Sst * g_i[..., None] + S_i, Sst                # emit entering state
+
+    S_fin, S_enter = jax.lax.scan(
+        step, S_init, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(gamma, 1, 0)))
+    S_enter = jnp.moveaxis(S_enter, 0, 1)                     # (b,n,nh,hd,hd)
+
+    # inter-chunk: o_t += (r_t ⊙ exp(W_{t-1})) · S_enter
+    y_inter = jnp.einsum("bnthd,bnhde->bnthe",
+                         rc.astype(jnp.float32) * jnp.exp(dec_t), S_enter)
+    y = (y_intra + y_inter.astype(r.dtype)).reshape(b, S, nh, hd)
+    return y, S_fin
+
+
+def wkv6_step(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+              u: jax.Array, S: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One token.  r,k,v,logw: (b,nh,hd); S: (b,nh,hd,hd)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    o = jnp.einsum("bhd,bhde->bhe", rf, S + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S = S * jnp.exp(logw.astype(jnp.float32))[..., None] + kv
+    return o.astype(r.dtype), S
+
+
+def _mix(x: jax.Array, xs: jax.Array, mu: jax.Array) -> jax.Array:
+    return x + (xs - x) * mu
+
+
+def rwkv6_seq(p: dict, cfg: ModelConfig, x: jax.Array,
+              shift_prev: jax.Array | None = None,
+              S0: jax.Array | None = None, return_state: bool = False):
+    """Full-sequence RWKV6 time-mix.  x: (B,S,d)."""
+    nh, hd = _dims(cfg)
+    xs = _token_shift(x, shift_prev)
+    xr = _mix(x, xs, p["mix_r"].astype(cfg.dtype))
+    xk = _mix(x, xs, p["mix_k"].astype(cfg.dtype))
+    xv = _mix(x, xs, p["mix_v"].astype(cfg.dtype))
+    xw = _mix(x, xs, p["mix_w"].astype(cfg.dtype))
+    xg = _mix(x, xs, p["mix_g"].astype(cfg.dtype))
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(cfg.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(cfg.dtype)))
+
+    # data-dependent decay (negative log)
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), p["wa"].astype(cfg.dtype))
+    wraw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rhk->bshk", lora, p["wb"].astype(cfg.dtype)).astype(jnp.float32)
+    logw = -jnp.exp(-0.5 + wraw)            # in (-inf, 0)
+
+    if cfg.ssm_impl == "pallas":
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+        o, S_fin = wkv_ops.wkv6(r, k, v, logw.astype(cfg.dtype),
+                                p["u"].astype(cfg.dtype),
+                                chunk=cfg.ssm.chunk if cfg.ssm else 64, S0=S0)
+    else:
+        o, S_fin = wkv6_chunked(r, k, v, logw, p["u"],
+                                chunk=cfg.ssm.chunk if cfg.ssm else 64, S0=S0)
+    o = o.reshape(*x.shape[:2], cfg.d_model)
+    o = rmsnorm(o, p["ln_x"], cfg.norm_eps) * g
+    out = jnp.einsum("bsd,de->bse", o, p["out"].astype(cfg.dtype))
+    if return_state:
+        return out, (x[:, -1:], S_fin)
+    return out
+
+
+def init_channel_mix(ks, cfg: ModelConfig, stacked: int | None = None) -> dict:
+    """RWKV channel-mix (the FFN of the RWKV stack):
+    out = sigmoid(x_r W_r) * (relu(x_k W_k)^2 W_v)."""
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    return {
+        "mix_k": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "mix_r": mk(next(ks), (*L, d), (*A, "embed"), dt, init="zeros"),
+        "wk": mk(next(ks), (*L, d, f), (*A, "embed", "mlp"), dt),
+        "wv": mk(next(ks), (*L, f, d), (*A, "mlp", "embed"), dt),
+        "wr": mk(next(ks), (*L, d, d), (*A, "embed", "embed"), dt),
+    }
+
+
+def channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                shift_prev: jax.Array | None = None) -> jax.Array:
+    xs = _token_shift(x, shift_prev)
+    xk = _mix(x, xs, p["mix_k"].astype(cfg.dtype))
+    xr = _mix(x, xs, p["mix_r"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(cfg.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(cfg.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(cfg.dtype)))
+    return r * kv
+
+
+def channel_mix_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                       shift_prev: jax.Array) -> tuple[jax.Array, jax.Array]:
+    out = channel_mix(p, cfg, x, shift_prev)
+    return out, x                   # new shift carry
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, abstract: bool = False,
+                     stacked: int | None = None) -> dict:
+    from .layers import Leaf
+    nh, hd = _dims(cfg)
+    L = () if stacked is None else (stacked,)
+    A = () if stacked is None else ("layers",)
+    sh_S = (*L, batch, nh, hd, hd)
+    ax_S = (*A, "batch", "heads", None, None)
+    sh_x = (*L, batch, 1, cfg.d_model)
+    ax_x = (*A, "batch", None, "embed")
+    if abstract:
+        x = jax.ShapeDtypeStruct(sh_x, cfg.dtype)
+        return {"S": Leaf(jax.ShapeDtypeStruct(sh_S, jnp.float32), ax_S),
+                "shift_t": Leaf(x, ax_x), "shift_c": Leaf(x, ax_x)}
+    return {"S": Leaf(jnp.zeros(sh_S, jnp.float32), ax_S),
+            "shift_t": Leaf(jnp.zeros(sh_x, cfg.dtype), ax_x),
+            "shift_c": Leaf(jnp.zeros(sh_x, cfg.dtype), ax_x)}
+
+
+def rwkv6_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict
+                 ) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B,1,d); state: {"S","shift"}."""
+    nh, hd = _dims(cfg)
+    xs = state["shift"]
+    xr = _mix(x, xs, p["mix_r"].astype(cfg.dtype))
+    xk = _mix(x, xs, p["mix_k"].astype(cfg.dtype))
+    xv = _mix(x, xs, p["mix_v"].astype(cfg.dtype))
+    xw = _mix(x, xs, p["mix_w"].astype(cfg.dtype))
+    xg = _mix(x, xs, p["mix_g"].astype(cfg.dtype))
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"].astype(cfg.dtype))[:, 0]
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"].astype(cfg.dtype))[:, 0]
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"].astype(cfg.dtype))[:, 0]
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(cfg.dtype)))
+
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), p["wa"].astype(cfg.dtype))
+    wraw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rhk->bshk", lora, p["wb"].astype(cfg.dtype)).astype(jnp.float32)
+    logw = -jnp.exp(-0.5 + wraw)[:, 0]
+
+    o, S = wkv6_step(r, k, v, logw, p["u"], state["S"])
+    o = o.reshape(x.shape[0], 1, cfg.d_model)
+    o = rmsnorm(o, p["ln_x"], cfg.norm_eps) * g
+    return (jnp.einsum("bsd,de->bse", o, p["out"].astype(cfg.dtype)),
+            {"S": S, "shift": x})

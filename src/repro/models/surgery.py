@@ -1,0 +1,60 @@
+"""Checkpoint surgery for deployment: TP head padding.
+
+40 attention heads cannot shard over a 16-way model axis; padding q/k/v
+to the next multiple with zero heads is function-preserving (zero heads
+contribute nothing through the zero rows of w_o) and is what production
+TP serving stacks do (vLLM pads heads for exactly this reason).  Costs
+(new_h/old_h - 1) extra attention FLOPs; buys collective-free attention.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def padded_heads(n: int, divisor: int) -> int:
+    return ((n + divisor - 1) // divisor) * divisor
+
+
+def pad_heads_config(cfg: ModelConfig, divisor: int) -> ModelConfig:
+    """Config with q/kv heads padded up to a multiple of ``divisor``."""
+    return cfg.replace(n_heads=padded_heads(cfg.n_heads, divisor),
+                       n_kv_heads=padded_heads(cfg.n_kv_heads, divisor))
+
+
+def pad_heads_params(params: dict, cfg: ModelConfig,
+                     new_cfg: ModelConfig) -> dict:
+    """Zero-pad a real checkpoint to the padded head counts.  Only the
+    attention tensors change; everything else is shared by reference."""
+    dh, dkv = (new_cfg.n_heads - cfg.n_heads,
+               new_cfg.n_kv_heads - cfg.n_kv_heads)
+
+    def pad(t, axis, extra):
+        if extra == 0:
+            return t
+        widths = [(0, 0)] * t.ndim
+        widths[axis] = (0, extra)
+        return jnp.pad(t, widths)
+
+    def fix_block(block: dict) -> dict:
+        if "attn" not in block:
+            return block
+        a = dict(block["attn"])
+        off = 1 if a["wq"].ndim == 4 else 0      # stacked layers dim
+        a["wq"] = pad(a["wq"], off + 1, dh)
+        a["wk"] = pad(a["wk"], off + 1, dkv)
+        a["wv"] = pad(a["wv"], off + 1, dkv)
+        a["wo"] = pad(a["wo"], off + 0, dh)
+        for name, extra in (("bq", dh), ("bk", dkv), ("bv", dkv)):
+            if name in a:
+                a[name] = pad(a[name], off + 0, extra)
+        return {**block, "attn": a}
+
+    out = dict(params)
+    if "blocks" in out and isinstance(out["blocks"], dict) \
+            and "attn" in out["blocks"]:
+        out["blocks"] = fix_block(out["blocks"])
+    if "shared" in out:
+        out["shared"] = fix_block(out["shared"])
+    return out

@@ -1,0 +1,407 @@
+"""The model stack: embedding -> N blocks (scan) -> norm -> LM head.
+
+Covers every assigned family through ``cfg.block``:
+  * ``attn``   — pre-norm attention + (MLP | MoE)        [dense, moe, vlm, audio]
+  * ``rwkv6``  — time-mix + channel-mix                  [ssm: rwkv6-7b]
+  * ``mamba2`` — pure SSD stack                          [ssm]
+  * ``zamba2`` — SSD backbone + weight-tied shared attention block every
+                 ``shared_attn_period`` layers           [hybrid]
+
+Layers are stacked along a leading ``layers`` dim and traversed with
+``jax.lax.scan`` (small HLO, fast 512-way GSPMD compile); each block body is
+``jax.checkpoint``-ed when ``cfg.remat`` (activation memory ~ one block).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.context import constrain_batch
+
+from . import attention as attn_mod
+from . import frontends, mamba2, moe as moe_mod, rwkv6
+from .config import ModelConfig
+from .layers import (Leaf, cross_entropy, init_embedding, init_lm_head,
+                     init_mlp, init_rmsnorm, keygen, mk, mlp, rmsnorm,
+                     split_tree)
+
+MOE_AUX_COEF = 0.01
+
+
+# ===================================================================== #
+# init
+# ===================================================================== #
+def _init_attn_block(ks, cfg: ModelConfig, stacked: int | None) -> dict:
+    p = {"norm1": init_rmsnorm(ks, cfg.d_model, cfg.param_dtype, stacked),
+         "attn": attn_mod.init_attention(ks, cfg, stacked),
+         "norm2": init_rmsnorm(ks, cfg.d_model, cfg.param_dtype, stacked)}
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks, cfg, stacked)
+    else:
+        p["mlp"] = init_mlp(ks, cfg.d_model, cfg.d_ff, cfg.param_dtype,
+                            cfg.glu, stacked)
+    return p
+
+
+def _init_rwkv_block(ks, cfg: ModelConfig, stacked: int | None) -> dict:
+    return {"norm1": init_rmsnorm(ks, cfg.d_model, cfg.param_dtype, stacked),
+            "tmix": rwkv6.init_rwkv6(ks, cfg, stacked),
+            "norm2": init_rmsnorm(ks, cfg.d_model, cfg.param_dtype, stacked),
+            "cmix": rwkv6.init_channel_mix(ks, cfg, stacked)}
+
+
+def _init_mamba_block(ks, cfg: ModelConfig, stacked: int | None) -> dict:
+    return {"norm": init_rmsnorm(ks, cfg.d_model, cfg.param_dtype, stacked),
+            "mamba": mamba2.init_mamba2(ks, cfg, stacked)}
+
+
+def _zamba_split(cfg: ModelConfig) -> tuple[int, int, int]:
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    return n_groups, period, tail
+
+
+def init(cfg: ModelConfig, key: jax.Array | None) -> dict:
+    """Build the Leaf tree.  ``key=None`` -> abstract (ShapeDtypeStruct)."""
+    ks = keygen(key)
+    p: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        p["frontend"] = frontends.init_audio_frontend(ks, cfg)
+    else:
+        p["embed"] = init_embedding(ks, cfg.vocab_size, cfg.d_model,
+                                    cfg.param_dtype)
+    if cfg.frontend == "vision":
+        p["adapter"] = frontends.init_vision_adapter(ks, cfg)
+
+    if cfg.block == "attn":
+        p["blocks"] = _init_attn_block(ks, cfg, cfg.n_layers)
+    elif cfg.block == "rwkv6":
+        p["blocks"] = _init_rwkv_block(ks, cfg, cfg.n_layers)
+    elif cfg.block == "mamba2":
+        p["blocks"] = _init_mamba_block(ks, cfg, cfg.n_layers)
+    elif cfg.block == "zamba2":
+        n_groups, period, tail = _zamba_split(cfg)
+        p["mamba_groups"] = _init_mamba_block(ks, cfg, n_groups * period)
+        if tail:
+            p["mamba_tail"] = _init_mamba_block(ks, cfg, tail)
+        p["shared"] = _init_attn_block(ks, cfg, None)      # weight-tied copy
+    else:
+        raise ValueError(cfg.block)
+
+    p["final_norm"] = init_rmsnorm(ks, cfg.d_model, cfg.param_dtype)
+    if not cfg.tie_embeddings and cfg.frontend != "audio":
+        p["lm_head"] = init_lm_head(ks, cfg.d_model, cfg.vocab_size,
+                                    cfg.param_dtype)
+    elif cfg.frontend == "audio":
+        p["lm_head"] = init_lm_head(ks, cfg.d_model, cfg.vocab_size,
+                                    cfg.param_dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array | None):
+    """-> (params, logical_specs)."""
+    return split_tree(init(cfg, key))
+
+
+# ===================================================================== #
+# block bodies (full sequence)
+# ===================================================================== #
+def _attn_block(p, cfg: ModelConfig, x, positions):
+    x = constrain_batch(x)          # re-assert DP sharding at block entry
+    x = x + attn_mod.attention(p["attn"], cfg, rmsnorm(x, p["norm1"], cfg.norm_eps),
+                               positions)
+    h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None and "moe" in p:
+        y, aux = moe_mod.moe_ffn(p["moe"], cfg, h)
+    else:
+        y, aux = mlp(p["mlp"], h, cfg.act), jnp.float32(0.0)
+    return x + y, aux
+
+
+def _rwkv_block(p, cfg: ModelConfig, x):
+    x = constrain_batch(x)
+    x = x + rwkv6.rwkv6_seq(p["tmix"], cfg, rmsnorm(x, p["norm1"], cfg.norm_eps))
+    x = x + rwkv6.channel_mix(p["cmix"], cfg, rmsnorm(x, p["norm2"], cfg.norm_eps))
+    return x
+
+
+def _mamba_block(p, cfg: ModelConfig, x):
+    x = constrain_batch(x)
+    return x + mamba2.mamba2_seq(p["mamba"], cfg,
+                                 rmsnorm(x, p["norm"], cfg.norm_eps))
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    policy = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        # saves projection/MLP dot outputs (no-batch-dim dots); attention
+        # score/pv dots (which have batch dims) are still rematerialized,
+        # so the saved set is ~40MB/layer instead of the 268MB/layer scores
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _stack(cfg: ModelConfig, params: dict, x: jax.Array,
+           positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Run all blocks.  Returns (x, moe_aux_sum)."""
+    aux0 = jnp.float32(0.0)
+
+    if cfg.block == "attn":
+        def body(carry, p_i):
+            h, aux = carry
+            h, a = _maybe_remat(
+                lambda pp, hh: _attn_block(pp, cfg, hh, positions), cfg)(p_i, h)
+            return (h, aux + a), None
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+        else:
+            aux = aux0
+            for i in range(cfg.n_layers):
+                p_i = jax.tree.map(lambda t: t[i], params["blocks"])
+                (x, aux), _ = body((x, aux), p_i)
+        return x, aux
+
+    if cfg.block in ("rwkv6", "mamba2"):
+        fn = _rwkv_block if cfg.block == "rwkv6" else _mamba_block
+
+        def body(h, p_i):
+            return _maybe_remat(lambda pp, hh: fn(pp, cfg, hh), cfg)(p_i, h), None
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            for i in range(cfg.n_layers):
+                p_i = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, _ = body(x, p_i)
+        return x, aux0
+
+    if cfg.block == "zamba2":
+        n_groups, period, tail = _zamba_split(cfg)
+        shared = params["shared"]
+
+        def mamba_body(h, p_i):
+            return _maybe_remat(
+                lambda pp, hh: _mamba_block(pp, cfg, hh), cfg)(p_i, h), None
+
+        def group_body(h, pg):
+            # pg: params of `period` mamba layers (leading dim = period)
+            h, _ = jax.lax.scan(mamba_body, h, pg)
+            h, _ = _maybe_remat(
+                lambda pp, hh: _attn_block(pp, cfg, hh, positions), cfg)(shared, h)
+            return h, None
+
+        grouped = jax.tree.map(
+            lambda t: t.reshape(n_groups, period, *t.shape[1:]),
+            params["mamba_groups"])
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        if tail:
+            x, _ = jax.lax.scan(mamba_body, x, params["mamba_tail"])
+        return x, aux0
+
+    raise ValueError(cfg.block)
+
+
+# ===================================================================== #
+# forward / loss
+# ===================================================================== #
+def embed_inputs(params: dict, cfg: ModelConfig, batch: dict
+                 ) -> tuple[jax.Array, jax.Array]:
+    """-> (x (B,S,d), positions (S,))."""
+    if cfg.frontend == "audio":
+        x = frontends.audio_frontend(params["frontend"], cfg,
+                                     batch["features"], batch.get("frame_mask"))
+    else:
+        emb = params["embed"].astype(cfg.dtype)
+        x = emb[batch["tokens"]]
+        if cfg.frontend == "vision":
+            img = frontends.vision_adapter(params["adapter"], cfg,
+                                           batch["patch_embeds"])
+            x = jnp.concatenate([img, x], axis=1)
+    S = x.shape[1]
+    return constrain_batch(x), jnp.arange(S, dtype=jnp.int32)
+
+
+def logits_fn(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+
+
+def forward(params: dict, cfg: ModelConfig, batch: dict
+            ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits, moe_aux)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    x, aux = _stack(cfg, params, x, positions)
+    return logits_fn(params, cfg, x), aux
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # score only the text positions (images occupy the prefix)
+        n_img = batch["patch_embeds"].shape[1]
+        logits = logits[:, n_img:]
+    mask = batch.get("frame_mask") if cfg.frontend == "audio" else \
+        batch.get("loss_mask")
+    ce = cross_entropy(logits, labels, mask)
+    loss = ce + MOE_AUX_COEF * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ===================================================================== #
+# decode (serve_step)
+# ===================================================================== #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> dict:
+    """Per-layer decode state, stacked along layers where applicable."""
+    if cfg.block == "attn":
+        return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, abstract,
+                                             stacked=cfg.n_layers)}
+    if cfg.block == "rwkv6":
+        return {"rwkv": rwkv6.init_rwkv6_state(cfg, batch, abstract,
+                                               stacked=cfg.n_layers)}
+    if cfg.block == "mamba2":
+        return {"ssm": mamba2.init_mamba2_state(cfg, batch, abstract,
+                                                stacked=cfg.n_layers)}
+    if cfg.block == "zamba2":
+        n_groups, period, tail = _zamba_split(cfg)
+        c = {"ssm": mamba2.init_mamba2_state(cfg, batch, abstract,
+                                             stacked=n_groups * period),
+             "shared_kv": attn_mod.init_kv_cache(cfg, batch, max_len, abstract,
+                                                 stacked=n_groups)}
+        if tail:
+            c["ssm_tail"] = mamba2.init_mamba2_state(cfg, batch, abstract,
+                                                     stacked=tail)
+        return c
+    raise ValueError(cfg.block)
+
+
+def init_cache_arrays(cfg: ModelConfig, batch: int, max_len: int,
+                      abstract: bool = False):
+    return split_tree(init_cache(cfg, batch, max_len, abstract))
+
+
+def _decode_attn_block(p, cfg, x, kv, cache_len):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    o, kv = attn_mod.decode_attention(p["attn"], cfg, h, kv, cache_len)
+    x = x + o
+    h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.moe is not None and "moe" in p:
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg, h)
+    else:
+        y = mlp(p["mlp"], h, cfg.act)
+    return x + y, kv
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array, cache_len: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """One new token with existing state.  tokens: (B,1) int32.
+    Returns (logits (B,1,V), new_cache)."""
+    assert cfg.supports_decode, f"{cfg.name} is encoder-only"
+    emb = params["embed"].astype(cfg.dtype)
+    x = emb[tokens]
+    new_cache = dict(cache)
+
+    if cfg.block == "attn":
+        # the KV cache rides in the scan CARRY and is updated in place
+        # with dynamic-update-slice: XLA aliases carried buffers across
+        # iterations, where a scan ys output would materialize a second
+        # full-size cache (verified: 2x cache HBM on the 32k cells)
+        def body(carry, xs):
+            h, kv = carry
+            p_i, i = xs
+            kv_i = jax.tree.map(
+                lambda t: jax.lax.dynamic_index_in_dim(t, i, 0,
+                                                       keepdims=False), kv)
+            h, kv_i = _decode_attn_block(p_i, cfg, h, kv_i, cache_len)
+            kv = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), i, 0), kv, kv_i)
+            return (h, kv), None
+        (x, kv_new), _ = jax.lax.scan(
+            body, (x, cache["kv"]),
+            (params["blocks"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_cache["kv"] = kv_new
+
+    elif cfg.block == "rwkv6":
+        def body(h, xs):
+            p_i, S, sh_t, sh_c = xs
+            hn = rmsnorm(h, p_i["norm1"], cfg.norm_eps)
+            o, st = rwkv6.rwkv6_decode(p_i["tmix"], cfg, hn,
+                                       {"S": S, "shift": sh_t})
+            h = h + o
+            hn = rmsnorm(h, p_i["norm2"], cfg.norm_eps)
+            o, new_shc = rwkv6.channel_mix_decode(p_i["cmix"], cfg, hn, sh_c)
+            h = h + o
+            return h, (st["S"], st["shift"], new_shc)
+        st = cache["rwkv"]
+        x, (S, sh_t, sh_c) = jax.lax.scan(
+            body, x, (params["blocks"], st["S"], st["shift_t"], st["shift_c"]))
+        new_cache["rwkv"] = {"S": S, "shift_t": sh_t, "shift_c": sh_c}
+
+    elif cfg.block == "mamba2":
+        def body(h, xs):
+            p_i, hs, conv = xs
+            hn = rmsnorm(h, p_i["norm"], cfg.norm_eps)
+            o, st = mamba2.mamba2_decode(p_i["mamba"], cfg, hn,
+                                         {"h": hs, "conv": conv})
+            return h + o, (st["h"], st["conv"])
+        st = cache["ssm"]
+        x, (hs, conv) = jax.lax.scan(body, x, (params["blocks"],
+                                               st["h"], st["conv"]))
+        new_cache["ssm"] = {"h": hs, "conv": conv}
+
+    elif cfg.block == "zamba2":
+        n_groups, period, tail = _zamba_split(cfg)
+        shared = params["shared"]
+
+        def mamba_body(h, xs):
+            p_i, hs, conv = xs
+            hn = rmsnorm(h, p_i["norm"], cfg.norm_eps)
+            o, st = mamba2.mamba2_decode(p_i["mamba"], cfg, hn,
+                                         {"h": hs, "conv": conv})
+            return h + o, (st["h"], st["conv"])
+
+        def group_body(carry, xs):
+            h, kv = carry
+            pg, hs, conv, i = xs
+            h, (hs, conv) = jax.lax.scan(mamba_body, h, (pg, hs, conv))
+            kv_i = jax.tree.map(
+                lambda t: jax.lax.dynamic_index_in_dim(t, i, 0,
+                                                       keepdims=False), kv)
+            h, kv_i = _decode_attn_block(shared, cfg, h, kv_i, cache_len)
+            kv = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), i, 0), kv, kv_i)
+            return (h, kv), (hs, conv)
+
+        grouped = jax.tree.map(
+            lambda t: t.reshape(n_groups, period, *t.shape[1:]),
+            params["mamba_groups"])
+        st = cache["ssm"]
+        hs = st["h"].reshape(n_groups, period, *st["h"].shape[1:])
+        conv = st["conv"].reshape(n_groups, period, *st["conv"].shape[1:])
+        (x, kv_new), (hs, conv) = jax.lax.scan(
+            group_body, (x, cache["shared_kv"]),
+            (grouped, hs, conv, jnp.arange(n_groups, dtype=jnp.int32)))
+        new_cache["ssm"] = {"h": hs.reshape(-1, *hs.shape[2:]),
+                            "conv": conv.reshape(-1, *conv.shape[2:])}
+        new_cache["shared_kv"] = kv_new
+        if tail:
+            stt = cache["ssm_tail"]
+            x, (hs2, conv2) = jax.lax.scan(
+                mamba_body, x, (params["mamba_tail"], stt["h"], stt["conv"]))
+            new_cache["ssm_tail"] = {"h": hs2, "conv": conv2}
+    else:
+        raise ValueError(cfg.block)
+
+    return logits_fn(params, cfg, x), new_cache

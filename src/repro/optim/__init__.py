@@ -1,0 +1,8 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                    opt_state_specs)
+from .schedules import constant, cosine_warmup, linear_warmup
+from .compression import compress_int8, decompress_int8
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "opt_state_specs", "cosine_warmup", "linear_warmup", "constant",
+           "compress_int8", "decompress_int8"]

@@ -1,0 +1,90 @@
+"""AdamW with global-norm clipping, built here (no optax in the image).
+
+Optimizer state (m, v) inherits the parameter's logical axes, so ZeRO-1/3
+sharding falls out of the same ``repro.dist.sharding`` rulebook: with
+``embed -> data``, the fp32 master moments are FSDP-sharded exactly like
+the weights and no replica ever materializes the full optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # moments dtype — fp32 masters by default; bf16 halves opt-state HBM
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params: Any, cfg: AdamWConfig, abstract: bool = False) -> dict:
+    """-> {"m": tree, "v": tree, "step": scalar}."""
+    def zeros_like(p):
+        if abstract:
+            return jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+        return jnp.zeros(p.shape, cfg.moment_dtype)
+
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))
+    return {"m": jax.tree.map(zeros_like, params),
+            "v": jax.tree.map(zeros_like, params),
+            "step": step}
+
+
+def opt_state_specs(param_specs: Any) -> dict:
+    """Logical axes for the optimizer state tree (mirrors the params)."""
+    return {"m": param_specs, "v": param_specs, "step": ()}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Any, opt_state: dict, params: Any,
+                 cfg: AdamWConfig) -> tuple[Any, dict, dict]:
+    """-> (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.float32(cfg.lr)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+
+    b1, b2 = jnp.float32(cfg.b1), jnp.float32(cfg.b2)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat, vhat = m_new / c1, v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                       # no decay on norms/biases/scalars
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(cfg.moment_dtype),
+                v_new.astype(cfg.moment_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,50 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 block-quantization: per-block max-abs scale (block = trailing dim),
+~4x fewer bytes on the slow inter-pod links.  Error feedback (residual
+carried to the next step) keeps the quantization noise unbiased over time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 payload, fp32 per-row scale). x: any shape."""
+    xf = x.astype(jnp.float32)
+    flat = xf.reshape(-1, x.shape[-1]) if x.ndim > 1 else xf.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    if x.ndim > 1:
+        return q.reshape(x.shape), scale.reshape(*x.shape[:-1], 1)
+    return q.reshape(x.shape), scale.reshape(())
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any) -> Any:
+    return jax.tree.map(lambda g: compress_int8(g)
+                        if g.ndim >= 2 else (g, None), grads,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def decompress_tree(ctree: Any) -> Any:
+    def dec(pair):
+        q, s = pair
+        return decompress_int8(q, s) if s is not None else q
+    return jax.tree.map(dec, ctree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def error_feedback_compress(g: jax.Array, residual: jax.Array
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Compress (g + residual); return (q, scale, new_residual)."""
+    target = g.astype(jnp.float32) + residual
+    q, scale = compress_int8(target)
+    recon = decompress_int8(q, scale)
+    return q, scale, target - recon

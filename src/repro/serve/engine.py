@@ -1,0 +1,78 @@
+"""Serving: prefill + decode steps and a batched greedy engine.
+
+``make_decode_step`` is what the ``decode_32k`` / ``long_500k`` dry-run
+cells lower: one new token against a KV/SSM cache of ``seq_len``.  For
+attention archs the cache is a ring of ``max_len`` (window-bounded for
+SWA archs — mixtral's long_500k cache is min(seq, window)); for SSM /
+hybrid archs the state is O(1) and ``long_500k`` costs the same HBM as
+``decode_32k`` — the reason those archs keep the long cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def cache_max_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Physical KV length: window-bounded for SWA archs."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """prefill(params, batch) -> logits — full-sequence forward (the
+    prefill_32k dry-run cell; cache writes are folded into decode here)."""
+    def prefill(params: dict, batch: dict) -> jax.Array:
+        logits, _ = transformer.forward(params, cfg, batch)
+        return logits
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """decode(params, cache, tokens, cache_len) -> (logits, new_cache)."""
+    def decode(params: dict, cache: dict, tokens: jax.Array,
+               cache_len: jax.Array):
+        return transformer.decode_step(params, cfg, cache, tokens, cache_len)
+    return decode
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Batched greedy decoding for the end-to-end serving example."""
+    cfg: ModelConfig
+    params: Any
+    max_len: int = 256
+
+    def __post_init__(self):
+        assert self.cfg.supports_decode, f"{self.cfg.name} is encoder-only"
+        self._decode = jax.jit(make_decode_step(self.cfg))
+
+    def generate(self, prompts: np.ndarray, n_new: int) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, n_new) greedy continuations.
+        Prefill is runs through the decode path token-by-token (exact,
+        cache-consistent); production prefill uses the fused forward."""
+        B, P = prompts.shape
+        cache, _ = transformer.init_cache_arrays(
+            self.cfg, B, cache_max_len(self.cfg, self.max_len))
+        logits = None
+        for t in range(P):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(prompts[:, t: t + 1]),
+                jnp.int32(t))
+        out = []
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for t in range(P, P + n_new):
+            out.append(np.asarray(tok)[:, 0])
+            if len(out) == n_new:
+                break
+            logits, cache = self._decode(self.params, cache, tok, jnp.int32(t))
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return np.stack(out, axis=1)

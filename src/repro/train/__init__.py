@@ -1,0 +1,5 @@
+from .step import TrainState, make_train_step, train_state_shardings
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainState", "make_train_step", "train_state_shardings",
+           "Trainer", "TrainerConfig"]

@@ -1,0 +1,136 @@
+"""The distributed train step.
+
+One jitted function per (arch, mesh): microbatched gradient accumulation
+via ``lax.scan`` (activation working set = one microbatch x one layer,
+thanks to per-layer remat inside the model), AdamW update fused in.  All
+distribution is GSPMD: the batch enters sharded over the DP axes, params
+enter FSDP+TP-sharded, and XLA inserts the reduce-scatters/all-gathers.
+Gradient accumulation happens in the *sharded* parameter layout, so the
+accumulator costs 1/|data| of the fp32 gradient per device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.dist import sharding as shd
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+
+    def tree(self) -> dict:
+        return {"params": self.params, "opt_state": self.opt_state}
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     key: jax.Array | None) -> tuple[TrainState, Any]:
+    """``key=None`` -> abstract state (dry-run).  Returns (state, specs)."""
+    params, pspecs = transformer.init_params(cfg, key)
+    opt = adamw_init(params, opt_cfg, abstract=key is None)
+    return (TrainState(params, opt),
+            {"params": pspecs, "opt_state": opt_state_specs(pspecs)})
+
+
+def train_state_shardings(specs: Any, state_tree: Any, mesh, rules):
+    return shd.tree_shardings(specs, state_tree, mesh, rules)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    n_microbatches: int = 1,
+                    batch_axis: Any = None,
+                    grad_shardings: Any = None) -> Callable:
+    """-> train_step(state_tree, batch) -> (state_tree, metrics).
+
+    ``batch_axis``: mesh axis (or tuple) the batch dim is sharded over —
+    re-asserted on every microbatch inside the accumulation loop, since
+    the strided reshape feeding ``lax.scan`` otherwise lets GSPMD drop
+    the DP sharding and replicate activations (verified: 16x activation
+    blow-up without the constraint).
+
+    ``grad_shardings``: per-param shardings asserted on each microbatch's
+    gradients — turns the cross-replica gradient reduction into
+    reduce-scatters landing directly in the FSDP/TP shards instead of
+    full all-reduces followed by slicing (half the bytes)."""
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s), g,
+            grad_shardings)
+
+    def constrain_mb(mb):
+        if batch_axis is None:
+            return mb
+        from jax.sharding import PartitionSpec as P
+        return jax.tree.map(
+            lambda t: jax.lax.with_sharding_constraint(
+                t, P(batch_axis, *(None,) * (t.ndim - 1))), mb)
+
+    def loss_of(params, batch):
+        loss, parts = transformer.loss_fn(params, cfg, batch)
+        return loss, parts
+
+    def cast_weights(params):
+        """f32 masters -> one sharded bf16 copy per step, BEFORE the FSDP
+        all-gathers: the gathers then move 2x fewer bytes and the
+        per-layer-per-microbatch convert disappears (XLA-CPU otherwise
+        gathers f32 and converts after — verified 2x collective bytes).
+        Matmul weights only; norms/scalars stay f32."""
+        return jax.tree.map(
+            lambda p: p.astype(cfg.dtype)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params, opt_state = state["params"], state["opt_state"]
+        grad_fn = jax.value_and_grad(
+            lambda pc, mb: loss_of(pc, mb), has_aux=True)
+
+        params_c = cast_weights(params)
+        if n_microbatches == 1:
+            (loss, parts), grads = grad_fn(params_c, batch)
+            grads = constrain_grads(grads)
+        else:
+            def resplit(x):          # (B, ...) -> (n_micro, B/n_micro, ...)
+                # strided split: microbatch j takes rows {j, n+j, 2n+j, ...}
+                # so the *inner* batch dim keeps the DP sharding (a plain
+                # leading reshape would give each microbatch to one device)
+                B = x.shape[0]
+                assert B % n_microbatches == 0, (B, n_microbatches)
+                return x.reshape(B // n_microbatches, n_microbatches,
+                                 *x.shape[1:]).swapaxes(0, 1)
+            micro = jax.tree.map(resplit, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                g_acc, loss_acc = carry
+                (l, _), g = grad_fn(params_c, constrain_mb(mb))
+                g = constrain_grads(g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0.0)), micro)
+            inv = 1.0 / n_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            parts = {"ce": loss, "moe_aux": jnp.float32(0.0)}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32), **opt_metrics,
+                   **{k: v.astype(jnp.float32) for k, v in parts.items()}}
+        return {"params": new_params, "opt_state": new_opt}, metrics
+
+    return train_step

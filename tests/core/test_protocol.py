@@ -1,0 +1,152 @@
+"""Protocol-level tests: the four REST APIs of paper Table 1."""
+import threading
+
+import pytest
+
+from repro.core import (Client, ClientStudy, DirectTransport, HopaasError,
+                        HopaasServer, HOPAAS_VERSION, suggestions)
+
+
+@pytest.fixture()
+def server():
+    return HopaasServer(seed=0)
+
+
+@pytest.fixture()
+def client(server):
+    tok = server.tokens.issue("tester")
+    return Client(DirectTransport(server), tok)
+
+
+def make_study(client, name="s", sampler=None, pruner=None):
+    return ClientStudy(
+        name=name,
+        properties={"lr": suggestions.loguniform(1e-5, 1e-1),
+                    "units": suggestions.int(8, 128),
+                    "act": suggestions.categorical(["relu", "tanh"]),
+                    "const_thing": 42},
+        sampler=sampler or {"name": "random"},
+        pruner=pruner or {"name": "none"},
+        client=client)
+
+
+def test_version(client):
+    assert client.version() == HOPAAS_VERSION
+
+
+def test_ask_returns_params_within_space(client):
+    study = make_study(client)
+    t = study.ask()
+    assert 1e-5 <= t.params["lr"] <= 1e-1
+    assert 8 <= t.params["units"] <= 128 and isinstance(t.params["units"], int)
+    assert t.params["act"] in ("relu", "tanh")
+    assert t.params["const_thing"] == 42          # constants pass through
+    assert t.lr == t.params["lr"]                 # attribute access
+
+
+def test_ask_routes_same_config_to_same_study(client):
+    study = make_study(client)
+    t1, t2 = study.ask(), study.ask()
+    assert t1.uid.split(":")[0] == t2.uid.split(":")[0]
+    assert t2.id == t1.id + 1
+
+
+def test_ask_routes_different_config_to_new_study(client):
+    s1, s2 = make_study(client, "a"), make_study(client, "b")
+    t1, t2 = s1.ask(), s2.ask()
+    assert t1.uid.split(":")[0] != t2.uid.split(":")[0]
+
+
+def test_tell_finalizes_trial(server, client):
+    study = make_study(client)
+    t = study.ask()
+    study.tell(t, value=1.5)
+    stored = server.storage.get_trial(t.uid)
+    assert stored.state.value == "completed"
+    assert stored.value == 1.5
+    assert stored.finished_at is not None
+
+
+def test_tell_twice_conflicts(client):
+    study = make_study(client)
+    t = study.ask()
+    study.tell(t, value=1.0)
+    with pytest.raises(HopaasError, match="409"):
+        study.tell(t, value=2.0)
+
+
+def test_should_prune_records_intermediates(server, client):
+    study = make_study(client)
+    t = study.ask()
+    assert t.should_prune(0, 5.0) is False        # NonePruner never prunes
+    assert t.should_prune(1, 4.0) is False
+    stored = server.storage.get_trial(t.uid)
+    assert stored.intermediates == {0: 5.0, 1: 4.0}
+    study.tell(t, value=4.0)
+
+
+def test_trial_context_manager_reports_failure(server, client):
+    study = make_study(client)
+    with pytest.raises(RuntimeError, match="boom"):
+        with study.trial() as t:
+            raise RuntimeError("boom")
+    stored = server.storage.get_study(study.study_key or t.uid.split(":")[0])
+    assert stored.trials[0].state.value == "failed"
+
+
+def test_bad_token_rejected(server):
+    bad = Client(DirectTransport(server), "not-a-token")
+    with pytest.raises(HopaasError, match="401"):
+        make_study(bad).ask()
+
+
+def test_revoked_token_rejected(server):
+    tok = server.tokens.issue("tester")
+    c = Client(DirectTransport(server), tok)
+    make_study(c).ask()
+    server.tokens.revoke(tok)
+    with pytest.raises(HopaasError, match="401"):
+        make_study(c).ask()
+
+
+def test_expired_token_rejected(server):
+    tok = server.tokens.issue("tester", ttl_seconds=-1.0)
+    c = Client(DirectTransport(server), tok)
+    with pytest.raises(HopaasError, match="401"):
+        make_study(c).ask()
+
+
+def test_unknown_trial_tell_404(client):
+    with pytest.raises(HopaasError, match="404"):
+        client._post("tell", {"trial_uid": "nope:0", "value": 1.0})
+
+
+def test_studies_endpoint(client):
+    study = make_study(client)
+    for v in (3.0, 1.0, 2.0):
+        with study.trial() as t:
+            t.loss = v
+    (s,) = [x for x in client.studies() if x["name"] == "s"]
+    assert s["n_trials"] == 3 and s["n_completed"] == 3
+    assert s["best_value"] == 1.0
+
+
+def test_concurrent_asks_unique_trials(server):
+    """Many threads asking concurrently must receive distinct trial ids
+    (the shared-storage consistency the paper gets from PostgreSQL)."""
+    tok = server.tokens.issue("tester")
+    uids = []
+    lock = threading.Lock()
+
+    def go():
+        c = Client(DirectTransport(server), tok)
+        t = make_study(c).ask()
+        with lock:
+            uids.append(t.uid)
+
+    threads = [threading.Thread(target=go) for _ in range(32)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(set(uids)) == 32

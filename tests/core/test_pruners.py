@@ -1,0 +1,161 @@
+"""Pruner semantics: early termination of non-promising trials (sec. 2)."""
+import numpy as np
+import pytest
+
+from repro.core.pruners import make_pruner
+from repro.core.types import (Direction, Study, StudyConfig, Trial, TrialState)
+
+
+def study_with_history(curves, direction=Direction.MINIMIZE, states=None):
+    """curves: list of per-trial loss curves already 'reported'."""
+    cfg = StudyConfig(name="p", properties={}, direction=direction)
+    trials = []
+    for i, curve in enumerate(curves):
+        t = Trial(trial_id=i, uid=f"p:{i}", study_key="p", params={},
+                  state=(states[i] if states else TrialState.COMPLETED),
+                  value=curve[-1],
+                  intermediates={s: v for s, v in enumerate(curve)})
+        trials.append(t)
+    return Study(config=cfg, trials=trials)
+
+
+def running_trial(curve, tid=99):
+    return Trial(trial_id=tid, uid=f"p:{tid}", study_key="p", params={},
+                 state=TrialState.RUNNING,
+                 intermediates={s: v for s, v in enumerate(curve)})
+
+
+def test_median_prunes_bad_trial():
+    good = [[10 - s for s in range(10)] for _ in range(5)]     # reach ~1
+    study = study_with_history(good)
+    bad = running_trial([100.0, 99.0, 98.0])
+    study.trials.append(bad)
+    pruner = make_pruner({"name": "median", "n_startup_trials": 3})
+    assert pruner.should_prune(study, bad, 2)
+
+
+def test_median_keeps_good_trial():
+    good = [[10 - s for s in range(10)] for _ in range(5)]
+    study = study_with_history(good)
+    better = running_trial([8.0, 6.5, 5.0])
+    study.trials.append(better)
+    pruner = make_pruner({"name": "median", "n_startup_trials": 3})
+    assert not pruner.should_prune(study, better, 2)
+
+
+def test_median_respects_startup_and_warmup():
+    study = study_with_history([[1.0, 1.0]])
+    bad = running_trial([100.0, 100.0])
+    study.trials.append(bad)
+    pruner = make_pruner({"name": "median", "n_startup_trials": 4})
+    assert not pruner.should_prune(study, bad, 1)     # not enough history
+    pruner2 = make_pruner({"name": "median", "n_startup_trials": 0,
+                           "n_warmup_steps": 5})
+    assert not pruner2.should_prune(study, bad, 1)    # still warming up
+
+
+def test_median_maximize_direction():
+    good = [[s * 1.0 for s in range(10)] for _ in range(5)]    # rising = good
+    study = study_with_history(good, direction=Direction.MAXIMIZE)
+    bad = running_trial([0.0, 0.0, 0.0])
+    study.trials.append(bad)
+    pruner = make_pruner({"name": "median", "n_startup_trials": 3})
+    assert pruner.should_prune(study, bad, 2)
+
+
+def test_percentile_is_laxer_than_median():
+    curves = [[float(v)] * 3 for v in (1, 2, 3, 4, 5, 6, 7, 8, 9)]
+    study = study_with_history(curves)
+    mid = running_trial([5.5, 5.5, 5.5])
+    study.trials.append(mid)
+    assert make_pruner({"name": "median", "n_startup_trials": 3}
+                       ).should_prune(study, mid, 2)
+    assert not make_pruner({"name": "percentile", "percentile": 90.0,
+                            "n_startup_trials": 3}).should_prune(study, mid, 2)
+
+
+def test_sha_rungs():
+    pruner = make_pruner({"name": "sha", "min_resource": 2, "reduction_factor": 3})
+    assert pruner.rung_of(0) is None
+    assert pruner.rung_of(1) == 0           # resource 2
+    assert pruner.rung_of(5) == 1           # resource 6
+    assert pruner.rung_resource(0) == 2 and pruner.rung_resource(1) == 6
+
+
+def test_sha_prunes_bottom_of_rung():
+    curves = [[float(v)] * 4 for v in (1, 2, 3, 4, 5, 6, 7, 8)]
+    study = study_with_history(curves)
+    worst = running_trial([9.0, 9.0])
+    study.trials.append(worst)
+    pruner = make_pruner({"name": "sha", "min_resource": 2, "reduction_factor": 3})
+    assert pruner.should_prune(study, worst, 1)
+    best = running_trial([0.5, 0.5], tid=98)
+    study.trials.append(best)
+    assert not pruner.should_prune(study, best, 1)
+
+
+def test_hyperband_brackets_deterministic():
+    pruner = make_pruner({"name": "hyperband", "min_resource": 1,
+                          "max_resource": 27, "reduction_factor": 3})
+    assert len(pruner.brackets) == 4
+    t = running_trial([1.0])
+    assert pruner.bracket_of(t) is pruner.bracket_of(t)
+
+
+def test_patient_prunes_plateau():
+    study = study_with_history([[1.0]])
+    plateau = running_trial([5.0, 4.0] + [4.0] * 10)
+    study.trials.append(plateau)
+    pruner = make_pruner({"name": "patient", "patience": 4})
+    assert pruner.should_prune(study, plateau, 11)
+    improving = running_trial([5.0 - 0.3 * s for s in range(12)], tid=98)
+    study.trials.append(improving)
+    assert not pruner.should_prune(study, improving, 11)
+
+
+def test_none_pruner_never_prunes():
+    study = study_with_history([[0.0] * 5] * 10)
+    bad = running_trial([1e9] * 5)
+    study.trials.append(bad)
+    assert not make_pruner({"name": "none"}).should_prune(study, bad, 4)
+
+
+def test_unknown_specs_raise():
+    with pytest.raises(ValueError):
+        make_pruner({"name": "nope"})
+    from repro.core.samplers import make_sampler
+    with pytest.raises(ValueError):
+        make_sampler({"name": "nope"})
+
+
+def test_pruning_saves_compute_end_to_end():
+    """Integration: a median-pruned campaign spends fewer total steps than
+    an unpruned one while finding the same optimum region."""
+    from repro.core import (Client, ClientStudy, DirectTransport, HopaasServer,
+                            suggestions)
+
+    def run(pruner):
+        srv = HopaasServer(seed=1)
+        cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+        study = ClientStudy(name="c", client=cl,
+                            properties={"x": suggestions.uniform(0, 4)},
+                            sampler={"name": "random"}, pruner=pruner)
+        total_steps = 0
+        for _ in range(24):
+            with study.trial() as tr:
+                # loss curve converges to x^2: bad x is visible early
+                target = tr.x ** 2
+                for step in range(16):
+                    total_steps += 1
+                    val = target + (16 - step) * 0.05
+                    if tr.should_prune(step, val):
+                        break
+                tr.loss = target
+        (s,) = [x for x in cl.studies() if x["name"] == "c"]
+        return total_steps, s["best_value"], s["n_pruned"]
+
+    steps_none, best_none, _ = run({"name": "none"})
+    steps_med, best_med, pruned = run({"name": "median", "n_startup_trials": 4})
+    assert pruned > 0
+    assert steps_med < steps_none * 0.9
+    assert best_med < 1.0 and best_none < 1.0

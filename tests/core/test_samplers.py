@@ -1,0 +1,145 @@
+"""Sampler correctness + the paper's Bayesian-beats-random claim."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.samplers import make_sampler
+from repro.core.space import Param, SearchSpace
+from repro.core.types import Direction, Trial, TrialState
+
+SPACE_2D = {"x": {"type": "uniform", "low": -5, "high": 5},
+            "y": {"type": "uniform", "low": -5, "high": 5}}
+
+
+def optimize(sampler_spec, fn, n, seed, properties=SPACE_2D,
+             direction=Direction.MINIMIZE):
+    space = SearchSpace.from_properties(properties)
+    sampler = make_sampler(dict(sampler_spec))
+    rng = np.random.default_rng(seed)
+    trials, best = [], math.inf
+    for i in range(n):
+        p = sampler.suggest(space, trials, direction, rng)
+        v = fn(**{k: p[k] for k in ("x", "y") if k in p})
+        trials.append(Trial(trial_id=i, uid=f"s:{i}", study_key="s", params=p,
+                            state=TrialState.COMPLETED, value=v))
+        best = min(best, v)
+    return best, trials
+
+
+def quad(x, y):
+    return (x - 1.0) ** 2 + (y + 2.0) ** 2
+
+
+@pytest.mark.parametrize("name", ["random", "grid", "halton", "tpe", "gp", "cmaes"])
+def test_sampler_respects_space(name):
+    space = SearchSpace.from_properties(
+        {"x": {"type": "uniform", "low": -5, "high": 5},
+         "y": {"type": "uniform", "low": -5, "high": 5},
+         "n": {"type": "int", "low": 2, "high": 9},
+         "c": {"type": "categorical", "choices": ["a", "b", "c"]}})
+    sampler = make_sampler({"name": name})
+    rng = np.random.default_rng(0)
+    trials = []
+    for i in range(25):
+        p = sampler.suggest(space, trials, Direction.MINIMIZE, rng)
+        assert -5 <= p["x"] <= 5 and -5 <= p["y"] <= 5
+        assert 2 <= p["n"] <= 9 and isinstance(p["n"], int)
+        assert p["c"] in ("a", "b", "c")
+        trials.append(Trial(trial_id=i, uid=f"s:{i}", study_key="s", params=p,
+                            state=TrialState.COMPLETED,
+                            value=float(p["x"] ** 2 + p["y"] ** 2)))
+
+
+@pytest.mark.parametrize("name", ["tpe", "gp", "cmaes"])
+def test_bayesian_beats_random_on_quadratic(name):
+    """Paper sec. 1: BO 'focuses on regions where the model performs better'.
+    Median over seeds must beat random search at equal budget."""
+    seeds = range(6)
+    rand = np.median([optimize({"name": "random"}, quad, 60, s)[0] for s in seeds])
+    bayes = np.median([optimize({"name": name, "seed": s} if name != "cmaes"
+                                else {"name": name}, quad, 60, s)[0] for s in seeds])
+    assert bayes < rand, f"{name}: {bayes} !< {rand}"
+
+
+def test_maximize_direction():
+    best, trials = optimize({"name": "gp"}, lambda x, y: -quad(x, y), 40, 0,
+                            direction=Direction.MAXIMIZE)
+    values = [t.value for t in trials]
+    assert max(values) > -1.0      # found a point near the optimum (0)
+
+
+def test_grid_covers_lattice():
+    space = SearchSpace.from_properties(
+        {"x": {"type": "uniform", "low": 0, "high": 1},
+         "c": {"type": "categorical", "choices": ["a", "b"]}})
+    sampler = make_sampler({"name": "grid", "points_per_dim": 3})
+    rng = np.random.default_rng(0)
+    seen = set()
+    trials = []
+    for i in range(6):
+        p = sampler.suggest(space, trials, Direction.MINIMIZE, rng)
+        seen.add((p["c"], round(p["x"], 6)))
+        trials.append(Trial(trial_id=i, uid=f"g:{i}", study_key="g", params=p,
+                            state=TrialState.COMPLETED, value=0.0))
+    assert len(seen) == 6          # full 2x3 lattice, no repeats
+
+
+def test_halton_low_discrepancy():
+    """First 64 Halton points cover [0,1]^2 better than the worst uniform."""
+    sampler = make_sampler({"name": "halton"})
+    pts = np.stack([sampler.point(i, 2) for i in range(64)])
+    # each quadrant gets a fair share
+    for qx in (0, 1):
+        for qy in (0, 1):
+            n = np.sum((pts[:, 0] >= qx * .5) & (pts[:, 0] < qx * .5 + .5) &
+                       (pts[:, 1] >= qy * .5) & (pts[:, 1] < qy * .5 + .5))
+            assert 8 <= n <= 24
+
+
+# ---------------------- property-based space tests ----------------------
+@given(low=st.floats(-1e3, 1e3), width=st.floats(1e-3, 1e3),
+       u=st.floats(0, 1))
+@settings(max_examples=200, deadline=None)
+def test_uniform_roundtrip(low, width, u):
+    p = Param(name="p", kind="uniform", low=low, high=low + width)
+    v = p.from_unit(u)
+    assert low - 1e-6 <= v <= low + width + 1e-6
+    assert abs(p.to_unit(v) - u) < 1e-6
+
+
+@given(low=st.floats(1e-6, 1e3), ratio=st.floats(1.001, 1e6),
+       u=st.floats(0, 1))
+@settings(max_examples=200, deadline=None)
+def test_loguniform_roundtrip(low, ratio, u):
+    p = Param(name="p", kind="loguniform", low=low, high=low * ratio)
+    v = p.from_unit(u)
+    assert low * 0.999 <= v <= low * ratio * 1.001
+    assert abs(p.to_unit(v) - u) < 1e-5
+
+
+@given(low=st.integers(-100, 100), width=st.integers(1, 200),
+       u=st.floats(0, 1))
+@settings(max_examples=200, deadline=None)
+def test_int_roundtrip(low, width, u):
+    p = Param(name="p", kind="int", low=low, high=low + width)
+    v = p.from_unit(u)
+    assert isinstance(v, int) and low <= v <= low + width
+
+
+@given(n=st.integers(1, 10), u=st.floats(0, 1))
+@settings(max_examples=100, deadline=None)
+def test_categorical_roundtrip(n, u):
+    choices = tuple(f"c{i}" for i in range(n))
+    p = Param(name="p", kind="categorical", choices=choices)
+    assert p.from_unit(u) in choices
+
+
+@given(st.lists(st.floats(0, 1), min_size=2, max_size=2))
+@settings(max_examples=50, deadline=None)
+def test_vector_roundtrip(us):
+    space = SearchSpace.from_properties(SPACE_2D)
+    params = space.from_unit_vector(np.array(us))
+    back = space.to_unit_vector(params)
+    np.testing.assert_allclose(back, np.clip(us, 0, 1), atol=1e-9)

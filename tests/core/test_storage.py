@@ -1,0 +1,117 @@
+"""Shared persistency + crash-restart (paper sec. 3 PostgreSQL role)."""
+import threading
+
+from repro.core import (Client, ClientStudy, DirectTransport, HopaasServer,
+                        JournalStorage, RoundRobinTransport, suggestions)
+from repro.core.types import StudyConfig
+
+
+def _drive(server, n=10, name="j"):
+    cl = Client(DirectTransport(server), server.tokens.issue("t"))
+    study = ClientStudy(name=name, client=cl,
+                        properties={"x": suggestions.uniform(-1, 1)},
+                        sampler={"name": "random"},
+                        pruner={"name": "median", "n_startup_trials": 3})
+    for i in range(n):
+        with study.trial() as t:
+            for s in range(3):
+                if t.should_prune(s, abs(t.x) + (3 - s) * 0.1):
+                    break
+            t.loss = abs(t.x)
+    return cl
+
+
+def test_journal_replay(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    srv = HopaasServer(storage=JournalStorage(path), seed=0)
+    cl = _drive(srv, n=12)
+    before = cl.studies()
+    srv.storage.close()
+
+    # "crash" and restart the service on the same journal
+    srv2 = HopaasServer(storage=JournalStorage(path), seed=0)
+    cl2 = Client(DirectTransport(srv2), srv2.tokens.issue("t"))
+    after = cl2.studies()
+    assert before == after
+
+    # the restarted service keeps serving the same study
+    study = ClientStudy(name="j", client=cl2,
+                        properties={"x": suggestions.uniform(-1, 1)},
+                        sampler={"name": "random"},
+                        pruner={"name": "median", "n_startup_trials": 3})
+    with study.trial() as t:
+        t.loss = abs(t.x)
+    (s,) = [x for x in cl2.studies() if x["name"] == "j"]
+    assert s["n_trials"] == 13
+
+
+def test_journal_preserves_intermediates(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    srv = HopaasServer(storage=JournalStorage(path), seed=0)
+    cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+    study = ClientStudy(name="i", client=cl,
+                        properties={"x": suggestions.uniform(0, 1)},
+                        sampler={"name": "random"})
+    with study.trial() as t:
+        t.should_prune(0, 3.0)
+        t.should_prune(5, 1.0)
+        t.loss = 1.0
+    srv.storage.close()
+
+    srv2 = HopaasServer(storage=JournalStorage(path))
+    trial = srv2.storage.get_study(study.study_key).trials[0]
+    assert trial.intermediates == {0: 3.0, 5: 1.0}
+    assert trial.value == 1.0
+
+
+def test_horizontally_scaled_workers_share_state():
+    """N server workers + shared storage == paper's Uvicorn×N + PostgreSQL."""
+    from repro.core import InMemoryStorage, TokenManager
+    storage, tokens = InMemoryStorage(), TokenManager()
+    workers = [HopaasServer(storage=storage, tokens=tokens, seed=i,
+                            worker_name=f"uvicorn-{i}") for i in range(4)]
+    tok = tokens.issue("t")
+    cl = Client(RoundRobinTransport(workers), tok)
+    study = ClientStudy(name="scaled", client=cl,
+                        properties={"x": suggestions.uniform(-1, 1)},
+                        sampler={"name": "random"})
+    uids = set()
+    for _ in range(12):
+        with study.trial() as t:
+            uids.add(t.uid)
+            t.loss = abs(t.x)
+    assert len(uids) == 12                       # no id collisions
+    (s,) = [x for x in cl.studies() if x["name"] == "scaled"]
+    assert s["n_trials"] == 12 and s["n_completed"] == 12
+
+
+def test_concurrent_writers_consistent():
+    storage = None
+    srv = HopaasServer(seed=0)
+    tok = srv.tokens.issue("t")
+
+    def go(i):
+        cl = Client(DirectTransport(srv), tok)
+        study = ClientStudy(name="cc", client=cl,
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"})
+        for _ in range(5):
+            with study.trial() as t:
+                t.should_prune(0, t.x)
+                t.loss = t.x
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    study = next(iter(srv.storage.studies()))
+    assert len(study.trials) == 40
+    assert all(t.state.value == "completed" for t in study.trials)
+
+
+def test_study_key_stability():
+    a = StudyConfig(name="x", properties={"p": {"type": "uniform", "low": 0, "high": 1}})
+    b = StudyConfig(name="x", properties={"p": {"type": "uniform", "low": 0, "high": 1}})
+    c = StudyConfig(name="x", properties={"p": {"type": "uniform", "low": 0, "high": 2}})
+    assert a.key() == b.key() != c.key()

@@ -1,0 +1,137 @@
+"""SSD + WKV6 Pallas kernels vs their sequential-recurrence oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.mamba2_ssd import ops as ssd_ops
+from repro.kernels.mamba2_ssd import ref as ssd_ref
+from repro.kernels.rwkv6_scan import ops as wkv_ops
+from repro.kernels.rwkv6_scan import ref as wkv_ref
+
+
+# ------------------------------------------------------------------ #
+# Mamba2 SSD
+# ------------------------------------------------------------------ #
+def _ssd_inputs(key, b, S, nh, hd, ds, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, nh, hd), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(ks[1], (b, S, nh), jnp.float32)).astype(dtype)
+    a_log = jax.random.normal(ks[2], (nh,), jnp.float32) * 0.5
+    B = jax.random.normal(ks[3], (b, S, ds), jnp.float32).astype(dtype)
+    C = jax.random.normal(ks[4], (b, S, ds), jnp.float32).astype(dtype)
+    return x, dt, a_log, B, C
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_matches_recurrence(chunk):
+    x, dt, a_log, B, C = _ssd_inputs(jax.random.key(0), 2, 64, 3, 16, 8)
+    y, h = ssd_ops.ssd(x, dt, a_log, B, C, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssd_ref.ssd_ref(x, dt, a_log, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_bf16_inputs():
+    x, dt, a_log, B, C = _ssd_inputs(jax.random.key(1), 1, 32, 2, 8, 4,
+                                     jnp.bfloat16)
+    y, _ = ssd_ops.ssd(x, dt, a_log, B, C, chunk=16, interpret=True)
+    y_ref, _ = ssd_ref.ssd_ref(x, dt, a_log, B, C)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ssd_matches_model_chunked_form():
+    """The kernel and the model's jnp chunked form agree (same algorithm,
+    different substrate)."""
+    from repro.models.mamba2 import ssd_chunked
+    x, dt, a_log, B, C = _ssd_inputs(jax.random.key(2), 2, 64, 2, 16, 8)
+    y_k, h_k = ssd_ops.ssd(x, dt, a_log, B, C, chunk=16, interpret=True)
+    y_m, h_m = ssd_chunked(x, dt, a_log, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.sampled_from([16, 32, 48]), nh=st.sampled_from([1, 2, 4]),
+       hd=st.sampled_from([8, 16]), ds=st.sampled_from([4, 8]),
+       chunk=st.sampled_from([8, 16]))
+def test_ssd_property_sweep(S, nh, hd, ds, chunk):
+    x, dt, a_log, B, C = _ssd_inputs(jax.random.key(S * nh + hd), 1, S, nh,
+                                     hd, ds)
+    y, h = ssd_ops.ssd(x, dt, a_log, B, C, chunk=chunk, interpret=True)
+    y_ref, h_ref = ssd_ref.ssd_ref(x, dt, a_log, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ------------------------------------------------------------------ #
+# RWKV6 WKV
+# ------------------------------------------------------------------ #
+def _wkv_inputs(key, b, S, nh, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, S, nh, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, S, nh, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, S, nh, hd), jnp.float32).astype(dtype)
+    # realistic decays: logw in (-inf, 0), mostly in (-3, -0.05)
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, S, nh, hd), jnp.float32)
+                    * 0.8 - 0.5)
+    u = jax.random.normal(ks[4], (nh, hd), jnp.float32) * 0.5
+    return r, k, v, logw.astype(dtype), u
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_wkv6_matches_recurrence(chunk):
+    r, k, v, logw, u = _wkv_inputs(jax.random.key(0), 2, 64, 2, 16)
+    o, S = wkv_ops.wkv6(r, k, v, logw, u, chunk=chunk, interpret=True)
+    o_ref, S_ref = wkv_ref.wkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_matches_model_chunked_form():
+    from repro.models.rwkv6 import wkv6_chunked
+    r, k, v, logw, u = _wkv_inputs(jax.random.key(1), 1, 32, 2, 8)
+    o_k, S_k = wkv_ops.wkv6(r, k, v, logw, u, chunk=8, interpret=True)
+    o_m, S_m = wkv6_chunked(r, k, v, logw.astype(jnp.float32), u, chunk=8)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_m),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_m),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_bf16():
+    r, k, v, logw, u = _wkv_inputs(jax.random.key(2), 1, 32, 2, 8,
+                                   jnp.bfloat16)
+    o, _ = wkv_ops.wkv6(r, k, v, logw, u, chunk=16, interpret=True)
+    o_ref, _ = wkv_ref.wkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=6e-2, atol=6e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.sampled_from([16, 32]), nh=st.sampled_from([1, 3]),
+       hd=st.sampled_from([8, 16]), chunk=st.sampled_from([8, 16]))
+def test_wkv6_property_sweep(S, nh, hd, chunk):
+    r, k, v, logw, u = _wkv_inputs(jax.random.key(S + nh * hd), 1, S, nh, hd)
+    o, S_fin = wkv_ops.wkv6(r, k, v, logw, u, chunk=chunk, interpret=True)
+    o_ref, S_ref = wkv_ref.wkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(S_fin), np.asarray(S_ref),
+                               rtol=5e-4, atol=5e-4)

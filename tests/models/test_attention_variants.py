@@ -1,0 +1,82 @@
+"""Blocked (online-softmax) attention and int8 KV-cache decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry, transformer
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mixtral-8x7b",
+                                  "hubert-xlarge"])
+def test_blocked_attention_equals_ref(arch):
+    cfg_ref = registry.get_config(arch, smoke=True)
+    cfg_blk = cfg_ref.replace(attn_impl="blocked")
+    params, _ = transformer.init_params(cfg_ref, jax.random.key(0))
+    if cfg_ref.frontend == "audio":
+        batch = {"features": jax.random.normal(
+            jax.random.key(1), (2, 64, cfg_ref.frontend_dim), jnp.float32)}
+    else:
+        batch = {"tokens": jax.random.randint(
+            jax.random.key(1), (2, 64), 0, cfg_ref.vocab_size)}
+    want, _ = transformer.forward(params, cfg_ref, batch)
+    got, _ = transformer.forward(params, cfg_blk, batch)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_quant_decode_close_to_exact():
+    cfg = registry.get_config("qwen1.5-32b", smoke=True)
+    cfg_q = cfg.replace(kv_quant=True)
+    params, _ = transformer.init_params(cfg, jax.random.key(0))
+    seq = 12
+    toks = jax.random.randint(jax.random.key(2), (2, seq), 0, cfg.vocab_size)
+
+    def run(c):
+        cache, _ = transformer.init_cache_arrays(c, 2, max_len=seq)
+        step = jax.jit(lambda p, ca, t, n: transformer.decode_step(
+            p, c, ca, t, n))
+        for t in range(seq):
+            logits, cache = step(params, cache, toks[:, t: t + 1],
+                                 jnp.int32(t))
+        return np.asarray(logits[:, 0], np.float32)
+
+    exact, quant = run(cfg), run(cfg_q)
+    # int8 cache: small relative error in logits, same argmax
+    np.testing.assert_allclose(quant, exact, rtol=0.15, atol=0.15)
+    np.testing.assert_array_equal(exact.argmax(-1), quant.argmax(-1))
+
+
+def test_kv_quant_cache_is_int8():
+    cfg = registry.get_config("deepseek-7b", smoke=True).replace(
+        kv_quant=True)
+    cache, specs = transformer.init_cache_arrays(cfg, 2, 8, abstract=True)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    assert cache["kv"]["k_scale"].shape == (cfg.n_layers, 2, 8)
+
+
+def test_swa_ring_cache_long_context():
+    """Decode past the window: ring cache == big-cache reference."""
+    cfg = registry.get_config("mixtral-8x7b", smoke=True)  # window=16
+    params, _ = transformer.init_params(cfg, jax.random.key(0))
+    T = 24                                   # > window -> ring wraps
+    toks = jax.random.randint(jax.random.key(3), (1, T), 0, cfg.vocab_size)
+
+    # ring: cache sized to the window
+    cache, _ = transformer.init_cache_arrays(cfg, 1, cfg.sliding_window)
+    step = jax.jit(lambda p, c, t, n: transformer.decode_step(p, cfg, c, t, n))
+    for t in range(T):
+        logits_ring, cache = step(params, cache, toks[:, t: t + 1],
+                                  jnp.int32(t))
+
+    # reference: full-length cache (no wrap)
+    cache2, _ = transformer.init_cache_arrays(cfg, 1, T)
+    for t in range(T):
+        logits_full, cache2 = step(params, cache2, toks[:, t: t + 1],
+                                   jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_ring, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=2e-3, atol=2e-3)

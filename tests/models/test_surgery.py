@@ -1,0 +1,33 @@
+"""Head padding is function-preserving."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models import registry, surgery, transformer
+
+
+def test_padded_heads_equal_forward():
+    cfg = registry.get_config("qwen1.5-32b", smoke=True)   # 4 heads
+    new_cfg = surgery.pad_heads_config(cfg, divisor=3)     # -> 6 heads
+    assert new_cfg.n_heads == 6 and new_cfg.n_kv_heads == 6
+
+    params, _ = transformer.init_params(cfg, jax.random.key(0))
+    padded = surgery.pad_heads_params(params, cfg, new_cfg)
+
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    want, _ = transformer.forward(params, cfg, {"tokens": toks})
+    got, _ = transformer.forward(padded, new_cfg, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_param_shapes_match_abstract_init():
+    cfg = registry.get_config("qwen1.5-32b", smoke=True)
+    new_cfg = surgery.pad_heads_config(cfg, divisor=3)
+    params, _ = transformer.init_params(cfg, jax.random.key(0))
+    padded = surgery.pad_heads_params(params, cfg, new_cfg)
+    abstract, _ = transformer.init_params(new_cfg, None)
+    for (p1, a1) in zip(jax.tree.leaves(padded), jax.tree.leaves(abstract)):
+        assert tuple(p1.shape) == tuple(a1.shape)

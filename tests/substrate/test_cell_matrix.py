@@ -1,0 +1,68 @@
+"""The assigned (arch x shape) matrix: 32 cells, with the documented
+skips, and coherent per-cell configuration."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import shapes as shp
+from repro.models import registry
+
+
+def test_cell_count_is_32():
+    cells = shp.cells()
+    assert len(cells) == 32
+
+
+def test_skips_are_exactly_the_documented_ones():
+    cells = set(shp.cells())
+    # encoder-only: no decode shapes
+    assert ("hubert-xlarge", "decode_32k") not in cells
+    assert ("hubert-xlarge", "long_500k") not in cells
+    # full attention: no 500k
+    for arch in ("qwen1.5-32b", "deepseek-67b", "deepseek-7b", "qwen3-32b",
+                 "pixtral-12b", "qwen2-moe-a2.7b"):
+        assert (arch, "long_500k") not in cells, arch
+    # sub-quadratic archs keep it
+    for arch in ("zamba2-1.2b", "mixtral-8x7b", "rwkv6-7b"):
+        assert (arch, "long_500k") in cells, arch
+    # everyone trains and prefills
+    for arch, _ in cells:
+        assert (arch, "train_4k") in cells
+        assert (arch, "prefill_32k") in cells
+
+
+def test_configure_for_cell_serving_dtypes():
+    cfg = registry.get_config("deepseek-67b")
+    dec = shp.configure_for_cell(cfg, shp.SHAPES["decode_32k"])
+    assert dec.param_dtype == jnp.bfloat16
+    assert dec.kv_quant                      # int8 cache for the big arch
+    pre = shp.configure_for_cell(cfg, shp.SHAPES["prefill_32k"])
+    assert pre.attn_impl == "blocked"
+    trn = shp.configure_for_cell(cfg, shp.SHAPES["train_4k"])
+    assert trn.param_dtype == jnp.float32    # f32 masters for training
+
+
+def test_qwen15_prefill_pads_heads():
+    cfg = registry.get_config("qwen1.5-32b")
+    pre = shp.configure_for_cell(cfg, shp.SHAPES["prefill_32k"])
+    assert pre.n_heads == 48 and pre.n_kv_heads == 48
+    dec = shp.configure_for_cell(cfg, shp.SHAPES["decode_32k"])
+    assert dec.n_heads == 40                 # decode keeps faithful heads
+
+
+def test_swa_decode_cache_is_window_bounded():
+    cfg = registry.get_config("mixtral-8x7b")
+    c = shp.configure_for_cell(cfg, shp.SHAPES["long_500k"])
+    assert shp.decode_cache_len(c, shp.SHAPES["long_500k"]) == 4096
+
+
+def test_input_specs_have_no_arrays():
+    import jax
+    for arch, shape in [("mixtral-8x7b", "decode_32k"),
+                        ("hubert-xlarge", "train_4k"),
+                        ("pixtral-12b", "prefill_32k")]:
+        specs = shp.input_specs(arch, shape)
+        specs.pop("cache_logical", None)     # logical-axes tuples
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)

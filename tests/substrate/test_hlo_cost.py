@@ -1,0 +1,71 @@
+"""Unit tests for the loop-aware HLO cost analyzer (the roofline's
+measurement instrument)."""
+from __future__ import annotations
+
+from repro.launch import hlo_cost
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond.1 (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %init = (s32[], f32[8,8]) tuple(%a, %a)
+  %w2 = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert hlo_cost._shape_bytes("f32[8,8]{1,0}") == 256
+    assert hlo_cost._shape_bytes("bf16[4,2]") == 16
+    assert hlo_cost._shape_bytes("(f32[2], f32[2])") == 16
+    assert hlo_cost._shape_bytes("s8[10]") == 10
+    assert hlo_cost._shape_bytes("f32[]") == 4
+
+
+def test_parse_module_structure():
+    comps, entry = hlo_cost.parse_module(HLO)
+    assert entry == "%main"
+    assert "%body.1" in comps
+    ops = [i.opcode for i in comps["%body.1"]]
+    assert "dot" in ops and "all-reduce" in ops
+
+
+def test_loop_multiplier_applies():
+    cost = hlo_cost.analyze(HLO, total_devices=8)
+    # dot: 2 * 8*8 out * 8 contract = 1024 flops, x5 trips
+    assert cost.flops == 1024 * 5
+    # all-reduce: 2 * 256 * (4-1)/4 = 384 bytes, x5 trips
+    assert cost.collective_bytes == 384 * 5
+    assert cost.collective_calls["all-reduce"] == 5
+    assert cost.unknown_loops == 0
+
+
+def test_group_size_parsing():
+    assert hlo_cost._group_size("replica_groups=[2,4]<=[8]", 8) == 4
+    assert hlo_cost._group_size("replica_groups={{0,1,2}}", 8) == 3
+    assert hlo_cost._group_size("no groups here", 8) == 8
+
+
+def test_traffic_model():
+    t = hlo_cost._TRAFFIC
+    assert t["all-gather"](100, 4) == 75.0
+    assert t["all-reduce"](100, 4) == 150.0
+    assert t["reduce-scatter"](100, 4) == 300.0
+    assert t["collective-permute"](100, 4) == 100.0

@@ -1,0 +1,71 @@
+"""AdamW / schedules / compression."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, compress_int8,
+                         cosine_warmup, decompress_int8, global_norm)
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    opt = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, cfg)
+    assert float(loss(params)) < 1e-3 * l0
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.ones((4, 4))}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    opt = adamw_init(params, cfg)
+    huge = {"w": jnp.full((4, 4), 1e6)}
+    _, _, metrics = adamw_update(huge, opt, params, cfg)
+    assert float(metrics["grad_norm"]) > 1e5       # reported pre-clip
+
+
+def test_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, grad_clip=0.0)
+    opt = adamw_init(params, cfg)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new_p, _, _ = adamw_update(zero_g, opt, params, cfg)
+    assert float(jnp.abs(new_p["w"]).max()) < 1.0   # decayed
+    assert np.allclose(new_p["b"], params["b"])     # not decayed
+
+
+def test_cosine_warmup_shape():
+    f = cosine_warmup(1.0, warmup=10, total=100)
+    lrs = [float(f(jnp.int32(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(max(lrs) - 1.0) < 0.01
+    assert lrs[-1] <= 0.2                           # decayed to ~floor
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 100.0))
+def test_int8_compression_roundtrip_error_bounded(seed, scale):
+    """Property: |x - dec(enc(x))| <= max|row| / 127 elementwise."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 32)) * scale, jnp.float32)
+    q, s = compress_int8(x)
+    err = np.abs(np.asarray(decompress_int8(q, s)) - np.asarray(x))
+    bound = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True) / 127.0
+    assert (err <= bound + 1e-6).all()
+    assert q.dtype == jnp.int8
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert abs(float(global_norm(t)) - np.sqrt(3 + 16)) < 1e-5

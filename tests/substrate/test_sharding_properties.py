@@ -1,0 +1,71 @@
+"""Property tests: the sharding rulebook's invariants hold for arbitrary
+logical-axis/shape combinations (single-device safe — pure spec math)."""
+from __future__ import annotations
+
+import jax
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.dist import sharding as shd
+
+AXES = [None, "embed", "mlp", "heads", "kv_heads", "head_dim", "vocab",
+        "experts", "layers", "batch", "seq"]
+
+
+class _FakeMesh:
+    """Just enough mesh for logical_to_pspec (shape lookup)."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESHES = [
+    _FakeMesh({"data": 16, "model": 16}),
+    _FakeMesh({"pod": 2, "data": 16, "model": 16}),
+    _FakeMesh({"data": 4, "model": 2}),
+]
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    mesh_i=st.integers(0, len(MESHES) - 1),
+    rules_name=st.sampled_from(["train", "decode", "train_ep",
+                                "prefill_sp"]),
+    dims=st.lists(
+        st.tuples(st.sampled_from(AXES), st.integers(1, 4096)),
+        min_size=1, max_size=5),
+)
+def test_pspec_invariants(mesh_i, rules_name, dims):
+    mesh = MESHES[mesh_i]
+    rules = shd.get_rules(rules_name)
+    logical = tuple(d[0] for d in dims)
+    shape = tuple(d[1] for d in dims)
+    spec = shd.logical_to_pspec(logical, shape, mesh, rules)
+
+    used = []
+    for entry, dim in zip(spec, shape):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        for a in axes:
+            # (1) every mesh axis exists and is used at most once
+            assert a in mesh.shape
+            assert a not in used, f"axis {a} used twice in {spec}"
+            used.append(a)
+        # (2) the dim divides evenly (XLA rejects uneven shards)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        assert dim % extent == 0, (dim, extent, spec)
+
+
+@settings(max_examples=50, deadline=None)
+@given(dims=st.lists(st.tuples(st.sampled_from(AXES),
+                               st.sampled_from([1, 2, 3, 16, 128, 4096])),
+                     min_size=1, max_size=4))
+def test_pspec_deterministic(dims):
+    mesh = MESHES[0]
+    logical = tuple(d[0] for d in dims)
+    shape = tuple(d[1] for d in dims)
+    a = shd.logical_to_pspec(logical, shape, mesh, shd.RULES_TRAIN)
+    b = shd.logical_to_pspec(logical, shape, mesh, shd.RULES_TRAIN)
+    assert a == b
