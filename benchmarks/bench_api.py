@@ -1,10 +1,15 @@
 """Paper sec. 3 — service architecture: API latency/throughput across
-transports and horizontal scaling (Uvicorn x N behind the proxy role).
+transports, horizontal scaling (Uvicorn x N behind the proxy role), and
+the sharded-core scenarios: contended multi-study load and the batched
+ask/tell protocol.
 
-Columns: transport, workers, requests, wall_s, req_per_s.
+Columns: scenario, transport, workers, requests, wall_s, req_per_s,
+trials_per_s.  ``trials_per_s`` is the ask+tell pair throughput — the
+number campaigns actually feel.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 from repro.core.auth import TokenManager
@@ -13,6 +18,14 @@ from repro.core.server import HopaasServer
 from repro.core.storage import InMemoryStorage
 from repro.core.transport import (DirectTransport, HttpServiceRunner,
                                   HttpTransport, RoundRobinTransport)
+
+
+def _row(scenario: str, transport: str, workers: int, requests: int,
+         wall: float, n_trials: int) -> dict:
+    return {"scenario": scenario, "transport": transport, "workers": workers,
+            "requests": requests, "wall_s": round(wall, 3),
+            "req_per_s": round(requests / wall, 1),
+            "trials_per_s": round(n_trials / wall, 1)}
 
 
 def _drive(transport, token, n_trials: int) -> float:
@@ -27,24 +40,58 @@ def _drive(transport, token, n_trials: int) -> float:
     return time.time() - t0
 
 
-def run(n_trials: int = 200) -> list[dict]:
+def _drive_contended(transport_factory, token, *, n_client_workers: int,
+                     n_studies: int, trials_per_worker: int,
+                     batch_size: int = 1) -> tuple[float, int]:
+    """8-workers-x-4-studies style load: each client thread hammers one of
+    ``n_studies`` studies.  Returns (wall_s, request_count)."""
+    requests = [0] * n_client_workers
+
+    def worker(widx: int) -> None:
+        client = Client(transport_factory(), token, worker_id=f"w{widx}")
+        study = Study(name=f"bench-multi-{widx % n_studies}",
+                      properties={"x": suggestions.uniform(0.0, 1.0)},
+                      sampler={"name": "random"}, client=client)
+        done = 0
+        while done < trials_per_worker:
+            k = min(batch_size, trials_per_worker - done)
+            if batch_size > 1:
+                trials = study.ask_batch(k)
+                study.tell_batch([(t, (t.x - 0.3) ** 2) for t in trials])
+                requests[widx] += 2
+            else:
+                with study.trial() as t:
+                    t.loss = (t.x - 0.3) ** 2
+                requests[widx] += 2
+            done += k
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_client_workers)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.time() - t0, sum(requests)
+
+
+def run(n_trials: int = 200, smoke: bool = False) -> list[dict]:
+    if smoke:
+        n_trials = 40
     rows = []
     tokens = TokenManager()
     tok = tokens.issue("bench")
 
-    # in-process
+    # -- single-study latency across transports -------------------------
     server = HopaasServer(storage=InMemoryStorage(), tokens=tokens)
     dt = _drive(DirectTransport(server), tok, n_trials)
-    rows.append({"transport": "direct", "workers": 1, "requests": 2 * n_trials,
-                 "wall_s": round(dt, 3), "req_per_s": round(2 * n_trials / dt, 1)})
+    rows.append(_row("single-study", "direct", 1, 2 * n_trials, dt, n_trials))
 
-    # in-process, 4 workers round-robin on shared storage
     storage = InMemoryStorage()
     workers = [HopaasServer(storage=storage, tokens=tokens) for _ in range(4)]
     dt = _drive(RoundRobinTransport(workers), tok, n_trials)
-    rows.append({"transport": "round-robin", "workers": 4,
-                 "requests": 2 * n_trials, "wall_s": round(dt, 3),
-                 "req_per_s": round(2 * n_trials / dt, 1)})
+    rows.append(_row("single-study", "round-robin", 4, 2 * n_trials, dt,
+                     n_trials))
 
     # real HTTP (the wire the paper uses), 1 and 4 backend workers
     for n_workers in (1, 4):
@@ -57,7 +104,37 @@ def run(n_trials: int = 200) -> list[dict]:
                         n_trials)
         finally:
             runner.stop()
-        rows.append({"transport": "http", "workers": n_workers,
-                     "requests": 2 * n_trials, "wall_s": round(dt, 3),
-                     "req_per_s": round(2 * n_trials / dt, 1)})
+        rows.append(_row("single-study", "http", n_workers, 2 * n_trials, dt,
+                         n_trials))
+
+    # -- persistent connection vs reconnect-per-request ------------------
+    for persistent, label in ((False, "http-reconnect"), (True, "http-keepalive")):
+        storage = InMemoryStorage()
+        runner = HttpServiceRunner(
+            [HopaasServer(storage=storage, tokens=tokens)]).start()
+        try:
+            dt = _drive(HttpTransport(runner.host, runner.port,
+                                      persistent=persistent), tok, n_trials)
+        finally:
+            runner.stop()
+        rows.append(_row("single-study", label, 1, 2 * n_trials, dt, n_trials))
+
+    # -- contended multi-study load: 8 client workers x 4 studies --------
+    n_client_workers, n_studies = 8, 4
+    per_worker = max(5, n_trials // n_client_workers)
+    total = n_client_workers * per_worker
+    for batch_size, label in ((1, "http"), (8, "http+batch")):
+        storage = InMemoryStorage()
+        backends = [HopaasServer(storage=storage, tokens=tokens)
+                    for _ in range(4)]
+        runner = HttpServiceRunner(backends).start()
+        try:
+            wall, requests = _drive_contended(
+                lambda: HttpTransport(runner.host, runner.port), tok,
+                n_client_workers=n_client_workers, n_studies=n_studies,
+                trials_per_worker=per_worker, batch_size=batch_size)
+        finally:
+            runner.stop()
+        rows.append(_row(f"contended-{n_client_workers}w-{n_studies}s",
+                         label, 4, requests, wall, total))
     return rows

@@ -3,8 +3,9 @@ heterogeneous, *unreliable* workers driving one study over the real HTTP
 wire.  Reports elasticity (stagger), fault tolerance (failure injection +
 lease requeue), and scaling of trials/s with workers.
 
-Columns: workers, failure_rate, trials, completed, failed, requeued_ok,
-best_loss, wall_s.
+Columns: workers, failure_rate, batch, trials, completed, failed, pruned,
+best_loss, wall_s.  ``batch > 1`` rows drive the batched ask/tell wire
+protocol (one round trip per k trials).
 """
 from __future__ import annotations
 
@@ -26,10 +27,15 @@ def _objective(params, report):
     return val + random.Random(int(params["x"] * 1e6)).gauss(0, 1e-3)
 
 
-def run(n_trials: int = 60) -> list[dict]:
+def run(n_trials: int = 60, smoke: bool = False) -> list[dict]:
     rows = []
-    for n_workers, failure_rate in ((4, 0.0), (16, 0.0), (16, 0.15),
-                                    (24, 0.25)):
+    if smoke:
+        n_trials = 24
+        cases = ((4, 0.0, 1), (8, 0.15, 1), (8, 0.0, 4))
+    else:
+        cases = ((4, 0.0, 1), (16, 0.0, 1), (16, 0.15, 1), (24, 0.25, 1),
+                 (16, 0.0, 4))
+    for n_workers, failure_rate, batch_size in cases:
         storage = InMemoryStorage()
         tokens = TokenManager()
         backends = [HopaasServer(storage=storage, tokens=tokens,
@@ -40,7 +46,7 @@ def run(n_trials: int = 60) -> list[dict]:
             res = run_campaign(
                 _objective,
                 study_spec={
-                    "name": f"campaign-{n_workers}-{failure_rate}",
+                    "name": f"campaign-{n_workers}-{failure_rate}-{batch_size}",
                     "properties": {"x": suggestions.uniform(-1, 1),
                                    "y": suggestions.uniform(-1, 1)},
                     "sampler": {"name": "tpe"},
@@ -49,7 +55,8 @@ def run(n_trials: int = 60) -> list[dict]:
                 transport_factory=lambda: HttpTransport(runner.host,
                                                         runner.port),
                 token=tok, n_workers=n_workers, n_trials=n_trials,
-                failure_rate=failure_rate, stagger_seconds=0.01, seed=5)
+                failure_rate=failure_rate, stagger_seconds=0.01,
+                batch_size=batch_size, seed=5)
             # give the lease sweeper a chance to requeue orphans
             import time
             time.sleep(0.8)
@@ -57,7 +64,7 @@ def run(n_trials: int = 60) -> list[dict]:
         finally:
             runner.stop()
         rows.append({"workers": n_workers, "failure_rate": failure_rate,
-                     "trials": res.n_trials,
+                     "batch": batch_size, "trials": res.n_trials,
                      "completed": res.n_completed, "failed": res.n_failed,
                      "pruned": res.n_pruned,
                      "best_loss": None if res.best_value is None

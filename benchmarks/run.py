@@ -2,14 +2,25 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run --only api,samplers
+  PYTHONPATH=src python -m benchmarks.run --smoke    # fast CI subset
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import os
+import sys
 import time
+
+# support `python benchmarks/run.py` as well as `python -m benchmarks.run`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+# tables fast enough (and dependency-light enough) for the CI smoke run
+SMOKE_TABLES = ("api", "campaign")
 
 TABLES = {
     "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
@@ -39,9 +50,16 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated table names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset with reduced sizes (CI)")
     ap.add_argument("--out", default="experiments/benchmarks")
     args = ap.parse_args()
-    only = set(args.only.split(",")) if args.only else set(TABLES)
+    if args.only:
+        only = set(args.only.split(","))
+    elif args.smoke:
+        only = set(SMOKE_TABLES)
+    else:
+        only = set(TABLES)
 
     os.makedirs(args.out, exist_ok=True)
     failures = []
@@ -52,7 +70,10 @@ def main() -> int:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{module}")
-            rows = mod.run()
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            rows = mod.run(**kwargs)
         except Exception as e:   # keep the harness going
             failures.append((name, repr(e)))
             print(f"  FAILED: {e!r}")

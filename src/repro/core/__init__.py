@@ -1,8 +1,11 @@
 """HOPAAS core — the paper's primary contribution.
 
 Hyperparameter OPtimization As A Service: a client/server protocol
-(`ask` / `tell` / `should_prune` / `version`) coordinating gradient-less
-optimization studies across heterogeneous, elastic compute.
+(`ask` / `tell` / `should_prune` / `version`, plus the batched
+`ask_batch` / `tell_batch` extension) coordinating gradient-less
+optimization studies across heterogeneous, elastic compute.  The service
+core is sharded per study (see ``server.StudyContext``): requests for
+different studies never contend on a common lock.
 """
 from .auth import AuthError, TokenManager
 from .client import Client, HopaasError, Study as ClientStudy, Trial as ClientTrial, suggestions
@@ -10,7 +13,7 @@ from .campaign import CampaignResult, run_campaign
 from .pruners import make_pruner
 from .report import convergence_trace, format_report, study_summary
 from .samplers import make_sampler
-from .server import HOPAAS_VERSION, HopaasServer
+from .server import HOPAAS_VERSION, HopaasServer, StudyContext
 from .space import Param, SearchSpace
 from .storage import InMemoryStorage, JournalStorage
 from .transport import (DirectTransport, HttpServiceRunner, HttpTransport,
@@ -21,7 +24,8 @@ __all__ = [
     "AuthError", "TokenManager", "Client", "HopaasError", "ClientStudy",
     "ClientTrial", "suggestions", "CampaignResult", "run_campaign",
     "make_pruner", "convergence_trace", "format_report", "study_summary",
-    "make_sampler", "HOPAAS_VERSION", "HopaasServer", "Param", "SearchSpace",
+    "make_sampler", "HOPAAS_VERSION", "HopaasServer", "StudyContext",
+    "Param", "SearchSpace",
     "InMemoryStorage", "JournalStorage", "DirectTransport",
     "HttpServiceRunner", "HttpTransport", "RoundRobinTransport", "Transport",
     "Direction", "Study", "StudyConfig", "Trial", "TrialState",

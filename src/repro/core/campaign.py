@@ -45,8 +45,14 @@ def run_campaign(objective: Objective, *, study_spec: dict[str, Any],
                  transport_factory: Callable[[], Transport], token: str,
                  n_workers: int = 8, n_trials: int = 64,
                  failure_rate: float = 0.0, stagger_seconds: float = 0.0,
-                 seed: int = 0) -> CampaignResult:
-    """Run ``n_trials`` total across ``n_workers`` concurrent workers."""
+                 batch_size: int = 1, seed: int = 0) -> CampaignResult:
+    """Run ``n_trials`` total across ``n_workers`` concurrent workers.
+
+    With ``batch_size > 1`` each worker claims up to ``batch_size`` trials
+    per round and uses the batched wire protocol — one ``ask_batch`` round
+    trip to suggest them and one ``tell_batch`` to finalize the survivors —
+    instead of 2·k sequential round trips.
+    """
     counter_lock = threading.Lock()
     issued = {"n": 0}
     per_worker: dict[str, int] = {}
@@ -64,26 +70,40 @@ def run_campaign(objective: Objective, *, study_spec: dict[str, Any],
             with counter_lock:
                 if issued["n"] >= n_trials:
                     return
-                my_idx = issued["n"]
-                issued["n"] += 1
-                per_worker[wid] = per_worker.get(wid, 0) + 1
-            trial = study.ask()
-            die = failure_rate > 0 and fail_draws[my_idx] < failure_rate
+                k = min(max(1, batch_size), n_trials - issued["n"])
+                first_idx = issued["n"]
+                issued["n"] += k
+                per_worker[wid] = per_worker.get(wid, 0) + k
+            trials = study.ask_batch(k) if batch_size > 1 else [study.ask()]
+            finished: list[tuple] = []
+            for j, trial in enumerate(trials):
+                die = (failure_rate > 0
+                       and fail_draws[first_idx + j] < failure_rate)
 
-            def report(step: int, value: float) -> bool:
-                return trial.should_prune(step, value)
+                def report(step: int, value: float, _t=trial) -> bool:
+                    return _t.should_prune(step, value)
 
-            try:
-                value = objective(trial.params, report)
-            except Exception:
-                _safe_tell(study, trial, None, "failed")
-                continue
-            if die:
-                continue          # worker "crashes": never tells -> lease expires
-            # a worker may lose the race against the lease sweeper (it was
-            # declared dead and its trial requeued); the server's verdict
-            # wins — losing this tell is the designed straggler behavior.
-            _safe_tell(study, trial, value, "pruned" if trial.pruned else None)
+                try:
+                    value = objective(trial.params, report)
+                except Exception:
+                    finished.append((trial, None, "failed"))
+                    continue
+                if die:
+                    continue      # worker "crashes": never tells -> lease expires
+                # a worker may lose the race against the lease sweeper (it
+                # was declared dead and its trial requeued); the server's
+                # verdict wins — losing this tell is the designed straggler
+                # behavior.
+                finished.append(
+                    (trial, value, "pruned" if trial.pruned else None))
+            if batch_size > 1:
+                try:
+                    study.tell_batch(finished)
+                except HopaasError:
+                    pass          # whole-batch transport failure: leases expire
+            else:
+                for trial, value, state in finished:
+                    _safe_tell(study, trial, value, state)
 
     threads = [threading.Thread(target=worker, args=(i,)) for i in range(n_workers)]
     for t in threads:

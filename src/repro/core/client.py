@@ -121,7 +121,7 @@ class Study:
         self._client = client
         self.study_key: str | None = None
 
-    def ask(self) -> Trial:
+    def _spec_body(self) -> dict[str, Any]:
         body = {
             "name": self.name, "properties": self.properties,
             "direction": self.direction, "sampler": self.sampler,
@@ -129,9 +129,39 @@ class Study:
         }
         if self.directions:
             body["directions"] = self.directions
-        payload = self._client._post("ask", body)
+        return body
+
+    def ask(self) -> Trial:
+        payload = self._client._post("ask", self._spec_body())
         self.study_key = payload["study_key"]
         return Trial(self, payload)
+
+    def ask_batch(self, n: int) -> list[Trial]:
+        """Suggest ``n`` trials in one round trip (`POST /api/ask_batch`);
+        the server-side sampler sees the whole batch at once."""
+        payload = self._client._post("ask_batch", {**self._spec_body(), "n": n})
+        self.study_key = payload["study_key"]
+        return [Trial(self, p) for p in payload["trials"]]
+
+    def tell_batch(self, results: list[tuple]) -> list[dict[str, Any]]:
+        """Finalize many trials in one round trip (`POST /api/tell_batch`).
+
+        ``results`` holds ``(trial, value)`` or ``(trial, value, state)``
+        tuples.  Returns per-trial outcomes; an already-finalized trial
+        (straggler conflict, item status 409) never fails the batch.
+        """
+        tells = []
+        for item in results:
+            trial, value = item[0], item[1]
+            state = item[2] if len(item) > 2 else None
+            if state is None:
+                state = ("pruned" if trial.pruned else
+                         "failed" if trial.failed else "completed")
+            tells.append({"trial_uid": trial.uid,
+                          "value": trial.loss if value is None else value,
+                          "state": state})
+        payload = self._client._post("tell_batch", {"tells": tells})
+        return payload["results"]
 
     def tell(self, trial: Trial, value: float | None = None,
              state: str | None = None) -> None:

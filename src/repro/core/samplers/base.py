@@ -17,6 +17,25 @@ class Sampler(abc.ABC):
                 direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
         ...
 
+    def suggest_batch(self, space: SearchSpace, trials: list[Trial],
+                      direction: Direction, rng: np.random.Generator,
+                      n: int, **kwargs: Any) -> list[dict[str, Any]]:
+        """Propose ``n`` parameter sets at once (the `ask_batch` path).
+
+        The default extends the trial history with RUNNING placeholders
+        between draws so index-based samplers (grid, Halton) advance and
+        don't hand the same point to every worker in the batch.  Samplers
+        with a vectorized proposal path (e.g. TPE top-k) override this.
+        """
+        virtual = list(trials)
+        out: list[dict[str, Any]] = []
+        for _ in range(n):
+            params = self.suggest(space, virtual, direction, rng, **kwargs)
+            out.append(params)
+            virtual.append(Trial(trial_id=len(virtual), uid="", study_key="",
+                                 params=params, state=TrialState.RUNNING))
+        return out
+
     # -- helpers shared by the numeric samplers -------------------------
     @staticmethod
     def observations(space: SearchSpace, trials: list[Trial], direction: Direction

@@ -84,24 +84,20 @@ class NSGA2Sampler(Sampler):
         self.mutation_prob = mutation_prob
 
     # ------------------------------------------------------------------
-    def suggest(self, space: SearchSpace, trials: list[Trial],
-                direction: Direction, rng: np.random.Generator,
-                signs: list[float] | None = None) -> dict[str, Any]:
-        signs = signs or [1.0]
-        Y, done = _objective_matrix(trials, signs)
-        if len(done) < self.population:
-            return space.sample_uniform(rng)         # random warmup
-
+    def _ranked(self, Y: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         fronts = non_dominated_sort(Y)
         rank = np.zeros(len(Y), dtype=int)
+        crowd = np.zeros(len(Y))
         for r, f in enumerate(fronts):
             rank[f] = r
-        crowd = np.zeros(len(Y))
-        for f in fronts:
             crowd[f] = crowding_distance(Y[f])
+        return rank, crowd
 
+    def _make_child(self, space: SearchSpace, done: list[Trial],
+                    rank: np.ndarray, crowd: np.ndarray,
+                    rng: np.random.Generator) -> dict[str, Any]:
         def tournament() -> int:
-            i, j = rng.integers(0, len(Y), size=2)
+            i, j = rng.integers(0, len(done), size=2)
             if rank[i] != rank[j]:
                 return i if rank[i] < rank[j] else j
             return i if crowd[i] >= crowd[j] else j
@@ -117,6 +113,30 @@ class NSGA2Sampler(Sampler):
         child = self._sbx(np.asarray(p1), np.asarray(p2), rng)
         child = self._mutate(child, rng)
         return space.from_unit_vector(np.clip(child, 0.0, 1.0))
+
+    def suggest(self, space: SearchSpace, trials: list[Trial],
+                direction: Direction, rng: np.random.Generator,
+                signs: list[float] | None = None) -> dict[str, Any]:
+        signs = signs or [1.0]
+        Y, done = _objective_matrix(trials, signs)
+        if len(done) < self.population:
+            return space.sample_uniform(rng)         # random warmup
+        rank, crowd = self._ranked(Y)
+        return self._make_child(space, done, rank, crowd, rng)
+
+    def suggest_batch(self, space: SearchSpace, trials: list[Trial],
+                      direction: Direction, rng: np.random.Generator,
+                      n: int, signs: list[float] | None = None,
+                      **kwargs: Any) -> list[dict[str, Any]]:
+        """One non-dominated sort serves the whole offspring batch — the
+        generational shape NSGA-II actually wants (Deb et al. 2002)."""
+        signs = signs or [1.0]
+        Y, done = _objective_matrix(trials, signs)
+        if len(done) < self.population:
+            return [space.sample_uniform(rng) for _ in range(n)]
+        rank, crowd = self._ranked(Y)
+        return [self._make_child(space, done, rank, crowd, rng)
+                for _ in range(n)]
 
     # ------------------------------------------------------------------
     def _sbx(self, a: np.ndarray, b: np.ndarray,

@@ -35,11 +35,13 @@ def _pad_pow2(n: int, lo: int = 8) -> int:
 def _tpe_propose(xg: jnp.ndarray, mg: jnp.ndarray,
                  xb: jnp.ndarray, mb: jnp.ndarray,
                  key: jax.Array, n_candidates: int) -> jnp.ndarray:
-    """Propose a point on the unit cube.
+    """Propose points on the unit cube, best acquisition score first (the
+    caller slices the top-k it needs — keeping the batch size out of the
+    jit signature avoids a recompile per distinct k).
 
     xg: (Ng, D) good observations (padded), mg: (Ng,) validity mask.
     xb: (Nb, D) bad observations (padded),  mb: (Nb,) validity mask.
-    Returns (D,) best candidate.
+    Returns (n_candidates, D) candidates sorted by descending score.
 
     Both mixtures carry a uniform-prior component (a wide Gaussian at the
     cube center with weight 1, Optuna's ``prior_weight``): without it the
@@ -83,7 +85,7 @@ def _tpe_propose(xg: jnp.ndarray, mg: jnp.ndarray,
         return mix - jnp.log(n + 1.0)
 
     score = log_parzen(cands, xg, mg, bw) - log_parzen(cands, xb, mb, bw_b)
-    return cands[jnp.argmax(score)]
+    return cands[jnp.argsort(-score)]
 
 
 class TPESampler(Sampler):
@@ -99,11 +101,13 @@ class TPESampler(Sampler):
             return max(2, int(math.ceil(self.gamma * n)))
         return max(2, min(int(math.ceil(0.1 * n)), 25))   # Optuna default_gamma
 
-    def suggest(self, space: SearchSpace, trials: list[Trial],
-                direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
+    def _propose(self, space: SearchSpace, trials: list[Trial],
+                 direction: Direction, rng: np.random.Generator,
+                 k: int) -> np.ndarray | None:
+        """(k, D) unit-cube proposals, or None while still in startup."""
         X, y = self.observations(space, trials, direction)
         if len(y) < self.n_startup_trials or space.dim == 0:
-            return self._startup.suggest(space, trials, direction, rng)
+            return None
 
         n_good = self._n_good(len(y))
         order = np.argsort(y)
@@ -118,7 +122,28 @@ class TPESampler(Sampler):
         mb = np.zeros(nb); mb[: len(bad)] = 1.0
 
         key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        # pow-of-two pool growth keeps the jit cache small when k varies
+        pool = (self.n_candidates if k <= self.n_candidates
+                else _pad_pow2(k, self.n_candidates))
         u = _tpe_propose(jnp.asarray(xg), jnp.asarray(mg),
                          jnp.asarray(xb), jnp.asarray(mb),
-                         key, self.n_candidates)
-        return space.from_unit_vector(np.asarray(u))
+                         key, pool)
+        return np.asarray(u[:k])
+
+    def suggest(self, space: SearchSpace, trials: list[Trial],
+                direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
+        u = self._propose(space, trials, direction, rng, 1)
+        if u is None:
+            return self._startup.suggest(space, trials, direction, rng)
+        return space.from_unit_vector(u[0])
+
+    def suggest_batch(self, space: SearchSpace, trials: list[Trial],
+                      direction: Direction, rng: np.random.Generator,
+                      n: int, **kwargs: Any) -> list[dict[str, Any]]:
+        """Vectorized batch proposal: one fused KDE evaluation scores the
+        shared candidate pool and the top-n candidates become the batch."""
+        u = self._propose(space, trials, direction, rng, n)
+        if u is None:           # startup: fall back to the sequential path
+            return super().suggest_batch(space, trials, direction, rng, n,
+                                         **kwargs)
+        return [space.from_unit_vector(u[i]) for i in range(n)]

@@ -1,10 +1,25 @@
-"""The HOPAAS server: ask / tell / should_prune / version (paper Table 1).
+"""The HOPAAS server: ask / tell / should_prune / version (paper Table 1),
+plus the batched ask_batch / tell_batch extension.
 
 ``HopaasServer.handle(method, path, body)`` is transport-independent — the
 same handler is mounted behind the stdlib HTTP transport (the Uvicorn role)
 or called in-process (``DirectTransport``).  Multiple ``HopaasServer``
 *workers* may share one storage object, reproducing the paper's
 "scalable set of Uvicorn instances + shared PostgreSQL" architecture.
+
+Sharding: the server holds one ``StudyContext`` per study — sampler,
+pruner, decoded search space, a per-study RNG, and the storage shard's
+lock.  All request handling serializes on the *per-study* lock, so
+requests for different studies proceed fully in parallel; there is no
+global server lock.  Lease expiry is driven by the storage's per-study
+deadline min-heap, so sweeps touch only expired entries instead of
+scanning every trial.
+
+Batch protocol: ``POST /api/ask_batch`` suggests k trials in one round
+trip (the sampler sees the whole batch at once — ``suggest_batch`` —
+enabling vectorized proposals), and ``POST /api/tell_batch`` finalizes k
+trials with per-item statuses, so a straggler conflict on one trial never
+fails the rest of the batch.
 
 Fault tolerance beyond the paper's text (needed for 1000+-node campaigns):
   * every RUNNING trial carries a *lease*; `should_prune` reports act as
@@ -17,6 +32,7 @@ Fault tolerance beyond the paper's text (needed for 1000+-node campaigns):
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from typing import Any
@@ -30,7 +46,21 @@ from .space import SearchSpace
 from .storage import InMemoryStorage
 from .types import Direction, StudyConfig, TrialState
 
-HOPAAS_VERSION = "1.0.0-jax"
+HOPAAS_VERSION = "1.1.0-jax"
+
+
+@dataclasses.dataclass
+class StudyContext:
+    """Per-study shard of the server: everything `ask`/`tell`/`should_prune`
+    need, guarded by the storage shard's lock (shared across workers)."""
+
+    key: str
+    config: StudyConfig
+    space: SearchSpace
+    sampler: Any
+    pruner: Any
+    lock: threading.RLock
+    rng: np.random.Generator
 
 
 class HopaasServer:
@@ -43,12 +73,49 @@ class HopaasServer:
         self.lease_seconds = float(lease_seconds)
         self.max_retries = int(max_retries)
         self.worker_name = worker_name
-        self._rng = np.random.default_rng(seed)
-        self._lock = threading.RLock()
-        # per-study sampler/pruner/space caches (samplers can be stateful)
-        self._samplers: dict[str, Any] = {}
-        self._pruners: dict[str, Any] = {}
-        self._spaces: dict[str, SearchSpace] = {}
+        self._seed = int(seed)
+        self._contexts: dict[str, StudyContext] = {}
+        self._ctx_lock = threading.Lock()      # guards context creation only
+
+    # ------------------------------------------------------------------ #
+    # per-study contexts
+    # ------------------------------------------------------------------ #
+    def _build_context(self, key: str, config: StudyConfig) -> StudyContext:
+        return StudyContext(
+            key=key, config=config,
+            space=SearchSpace.from_properties(config.properties),
+            sampler=make_sampler(config.sampler),
+            pruner=make_pruner(config.pruner),
+            lock=self.storage.study_lock(key),
+            # per-study stream: concurrent asks on different studies must
+            # not share one (non-thread-safe) Generator
+            rng=np.random.default_rng([self._seed, int(key[:8], 16)]))
+
+    def _context(self, config: StudyConfig) -> tuple[StudyContext, bool]:
+        study, created = self.storage.get_or_create_study(config)
+        key = study.key
+        with self._ctx_lock:
+            ctx = self._contexts.get(key)
+            if ctx is None:
+                ctx = self._build_context(key, study.config)
+                self._contexts[key] = ctx
+        return ctx, created
+
+    def _context_for_key(self, study_key: str) -> StudyContext | None:
+        """Context for a study possibly created by another worker."""
+        with self._ctx_lock:
+            ctx = self._contexts.get(study_key)
+        if ctx is not None:
+            return ctx
+        study = self.storage.get_study(study_key)
+        if study is None:
+            return None
+        with self._ctx_lock:
+            ctx = self._contexts.get(study_key)
+            if ctx is None:
+                ctx = self._build_context(study_key, study.config)
+                self._contexts[study_key] = ctx
+        return ctx
 
     # ------------------------------------------------------------------ #
     # transport-independent request handler
@@ -70,8 +137,12 @@ class HopaasServer:
             body = body or {}
             if method == "POST" and endpoint == "ask":
                 return self._ask(body, identity)
+            if method == "POST" and endpoint == "ask_batch":
+                return self._ask_batch(body, identity)
             if method == "POST" and endpoint == "tell":
                 return self._tell(body)
+            if method == "POST" and endpoint == "tell_batch":
+                return self._tell_batch(body)
             if method == "POST" and endpoint == "should_prune":
                 return self._should_prune(body)
             if method == "GET" and endpoint == "studies":
@@ -83,9 +154,9 @@ class HopaasServer:
     # ------------------------------------------------------------------ #
     # endpoints
     # ------------------------------------------------------------------ #
-    def _ask(self, body: dict[str, Any], identity: dict[str, Any]
-             ) -> tuple[int, dict[str, Any]]:
-        config = StudyConfig(
+    @staticmethod
+    def _study_config(body: dict[str, Any]) -> StudyConfig:
+        return StudyConfig(
             name=body.get("name", "unnamed"),
             properties=body.get("properties", {}),
             direction=Direction(body.get("direction", "minimize")),
@@ -93,37 +164,64 @@ class HopaasServer:
             pruner=body.get("pruner", {"name": "none"}),
             directions=body.get("directions"),
         )
-        with self._lock:
-            study, created = self.storage.get_or_create_study(config)
-            key = study.key
-            if key not in self._spaces:
-                self._spaces[key] = SearchSpace.from_properties(config.properties)
-                self._samplers[key] = make_sampler(config.sampler)
-                self._pruners[key] = make_pruner(config.pruner)
-            self.sweep_expired(key)
 
-            waiting = self.storage.pop_waiting(key)
-            if waiting is not None:      # fault-tolerance requeue path
-                params, retries = waiting["params"], waiting["retries"]
+    def _start_trials(self, ctx: StudyContext, n: int, body: dict[str, Any],
+                      identity: dict[str, Any]) -> list[dict[str, Any]]:
+        """Suggest + register ``n`` trials.  Caller holds ``ctx.lock``."""
+        study = self.storage.get_study(ctx.key)
+        worker_id = body.get("worker_id", identity.get("user"))
+        batch: list[tuple[dict[str, Any], int]] = []    # (params, retries)
+        while len(batch) < n:                 # fault-tolerance requeue path
+            waiting = self.storage.pop_waiting(ctx.key)
+            if waiting is None:
+                break
+            batch.append((waiting["params"], waiting["retries"]))
+        remaining = n - len(batch)
+        if remaining:
+            kwargs: dict[str, Any] = {}
+            if getattr(ctx.sampler, "multi_objective", False):
+                kwargs["signs"] = ctx.config.direction_signs()
+            if remaining == 1:
+                params_list = [ctx.sampler.suggest(
+                    ctx.space, study.trials, ctx.config.direction, ctx.rng,
+                    **kwargs)]
             else:
-                sampler = self._samplers[key]
-                if getattr(sampler, "multi_objective", False):
-                    params = sampler.suggest(
-                        self._spaces[key], study.trials, config.direction,
-                        self._rng, signs=config.direction_signs())
-                else:
-                    params = sampler.suggest(
-                        self._spaces[key], study.trials, config.direction,
-                        self._rng)
-                retries = 0
+                params_list = ctx.sampler.suggest_batch(
+                    ctx.space, study.trials, ctx.config.direction, ctx.rng,
+                    remaining, **kwargs)
+            batch.extend((p, 0) for p in params_list)
+        out = []
+        for params, retries in batch:
             trial = self.storage.add_trial(
-                key, params, worker_id=body.get("worker_id", identity.get("user")),
-                lease_deadline=time.time() + self.lease_seconds, retries=retries)
-        return 200, {"trial_uid": trial.uid, "trial_id": trial.trial_id,
-                     "study_key": key, "study_created": created,
-                     "properties": params}
+                ctx.key, params, worker_id=worker_id,
+                lease_deadline=time.time() + self.lease_seconds,
+                retries=retries)
+            out.append({"trial_uid": trial.uid, "trial_id": trial.trial_id,
+                        "study_key": ctx.key, "properties": params})
+        return out
 
-    def _tell(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
+    def _ask(self, body: dict[str, Any], identity: dict[str, Any]
+             ) -> tuple[int, dict[str, Any]]:
+        ctx, created = self._context(self._study_config(body))
+        with ctx.lock:
+            self._sweep_study(ctx.key, time.time())
+            (payload,) = self._start_trials(ctx, 1, body, identity)
+        payload["study_created"] = created
+        return 200, payload
+
+    def _ask_batch(self, body: dict[str, Any], identity: dict[str, Any]
+                   ) -> tuple[int, dict[str, Any]]:
+        n = int(body.get("n", 1))
+        if n < 1:
+            return 400, {"detail": f"batch size must be >= 1, got {n}"}
+        ctx, created = self._context(self._study_config(body))
+        with ctx.lock:
+            self._sweep_study(ctx.key, time.time())
+            trials = self._start_trials(ctx, n, body, identity)
+        return 200, {"trials": trials, "study_key": ctx.key,
+                     "study_created": created}
+
+    def _tell_one(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
         uid = body.get("trial_uid", "")
         value = body.get("value", None)
         # multi-objective: value may be a list (one entry per objective)
@@ -132,10 +230,10 @@ class HopaasServer:
             values = [float(v) for v in value]
             value = values[0]
         state = TrialState(body.get("state", "completed"))
-        with self._lock:
-            trial = self.storage.get_trial(uid)
-            if trial is None:
-                return 404, {"detail": f"unknown trial {uid!r}"}
+        trial = self.storage.get_trial(uid)
+        if trial is None:
+            return 404, {"detail": f"unknown trial {uid!r}"}
+        with self.storage.study_lock(trial.study_key):
             if trial.state == TrialState.PRUNED:
                 # the server already finalized this trial on should_prune;
                 # accept the client's value but keep the PRUNED state.
@@ -151,14 +249,28 @@ class HopaasServer:
                 state=state, finished_at=time.time(), lease_deadline=None)
         return 200, {"trial_uid": uid, "state": state.value}
 
+    def _tell(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
+        return self._tell_one(body)
+
+    def _tell_batch(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
+        tells = body.get("tells")
+        if not isinstance(tells, list):
+            return 400, {"detail": "tell_batch needs a 'tells' list"}
+        results = []
+        for item in tells:
+            status, payload = self._tell_one(item or {})
+            results.append({"status": status, **payload})
+        return 200, {"results": results}
+
     def _should_prune(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
         uid = body.get("trial_uid", "")
         step = int(body.get("step", 0))
         value = float(body.get("value", 0.0))
-        with self._lock:
-            trial = self.storage.get_trial(uid)
-            if trial is None:
-                return 404, {"detail": f"unknown trial {uid!r}"}
+        trial = self.storage.get_trial(uid)
+        if trial is None:
+            return 404, {"detail": f"unknown trial {uid!r}"}
+        ctx = self._context_for_key(trial.study_key)
+        with ctx.lock:
             if trial.state != TrialState.RUNNING:
                 # zombie worker: its lease was revoked (or the trial pruned)
                 # while it was away — instruct it to abandon the trial.
@@ -169,9 +281,7 @@ class HopaasServer:
             self.storage.update_trial(
                 uid, intermediate=(step, value),
                 lease_deadline=time.time() + self.lease_seconds)
-            pruner = self._pruners.get(trial.study_key) or make_pruner(
-                study.config.pruner)
-            prune = bool(pruner.should_prune(study, trial, step))
+            prune = bool(ctx.pruner.should_prune(study, trial, step))
             if prune:
                 self.storage.update_trial(
                     uid, state=TrialState.PRUNED, finished_at=time.time(),
@@ -181,41 +291,44 @@ class HopaasServer:
     def _studies(self) -> tuple[int, dict[str, Any]]:
         out = []
         for s in self.storage.studies():
-            best = s.best_trial()
-            rec = {
-                "key": s.key, "name": s.config.name,
-                "n_trials": len(s.trials),
-                "n_completed": len(s.completed()),
-                "n_pruned": sum(t.state == TrialState.PRUNED for t in s.trials),
-                "n_failed": sum(t.state == TrialState.FAILED for t in s.trials),
-                "best_value": None if best is None else best.value,
-                "best_params": None if best is None else best.params,
-            }
-            if s.config.directions:
-                rec["pareto_front"] = [
-                    {"params": t.params, "values": t.values}
-                    for t in s.pareto_front()]
+            with self.storage.study_lock(s.key):
+                counts = self.storage.counts(s.key)
+                best = s.best_trial()
+                rec = {
+                    "key": s.key, "name": s.config.name,
+                    "n_trials": len(s.trials),
+                    "n_completed": counts[TrialState.COMPLETED],
+                    "n_pruned": counts[TrialState.PRUNED],
+                    "n_failed": counts[TrialState.FAILED],
+                    "best_value": None if best is None else best.value,
+                    "best_params": None if best is None else best.params,
+                }
+                if s.config.directions:
+                    rec["pareto_front"] = [
+                        {"params": t.params, "values": t.values}
+                        for t in s.pareto_front()]
             out.append(rec)
         return 200, {"studies": out}
 
     # ------------------------------------------------------------------ #
     # fault tolerance
     # ------------------------------------------------------------------ #
+    def _sweep_study(self, study_key: str, now: float) -> int:
+        """Fail this study's lapsed-lease trials; requeue params (bounded).
+        Heap-backed: cost is O(expired · log n), not a trial scan."""
+        with self.storage.study_lock(study_key):
+            expired = self.storage.pop_expired(study_key, now)
+            for t in expired:
+                self.storage.update_trial(
+                    t.uid, state=TrialState.FAILED, finished_at=now,
+                    lease_deadline=None)
+                if t.retries < self.max_retries:
+                    self.storage.enqueue_params(
+                        study_key, t.params, t.retries + 1)
+        return len(expired)
+
     def sweep_expired(self, study_key: str | None = None) -> int:
-        """Fail trials whose lease lapsed; requeue their params (bounded)."""
         now = time.time()
-        n = 0
-        for study in self.storage.studies():
-            if study_key is not None and study.key != study_key:
-                continue
-            for t in study.trials:
-                if (t.state == TrialState.RUNNING and t.lease_deadline is not None
-                        and t.lease_deadline < now):
-                    self.storage.update_trial(
-                        t.uid, state=TrialState.FAILED, finished_at=now,
-                        lease_deadline=None)
-                    if t.retries < self.max_retries:
-                        self.storage.enqueue_params(
-                            study.key, t.params, t.retries + 1)
-                    n += 1
-        return n
+        keys = ([study_key] if study_key is not None
+                else [s.key for s in self.storage.studies()])
+        return sum(self._sweep_study(k, now) for k in keys)

@@ -3,6 +3,9 @@
 Starts N stateless server workers behind the threaded HTTP frontend
 (Uvicorn x N + NGINX role), backed by a WAL-journaled storage
 (PostgreSQL role) that survives restarts, and prints a fresh API token.
+Workers share per-study storage shards, so requests for different
+studies run in parallel; clients may use the batched `ask_batch` /
+`tell_batch` endpoints (see README.md, "Wire protocol").
 
   PYTHONPATH=src python -m repro.core.service --port 8731 \
       --workers 4 --journal hopaas.wal

@@ -1,80 +1,151 @@
-"""Shared persistency layer.
+"""Shared persistency layer, sharded per study.
 
 The paper's reference implementation uses a PostgreSQL instance to give
 *shared persistency to the multiple instances of the web application
-backend* (sec. 3).  Here the same role is played by a thread-safe storage
-object that multiple ``HopaasServer`` workers share, with an optional
-append-only JSONL write-ahead journal providing crash-restart recovery
-(``JournalStorage.replay``).
+backend* (sec. 3).  Here the same role is played by a storage object that
+multiple ``HopaasServer`` workers share.  Internally the store is split
+into per-study shards (``_StudyShard``): each shard owns its own lock,
+an O(1) ``uid -> Trial`` index, per-state uid buckets, a min-heap of
+lease deadlines, and the requeue queue.  Requests touching different
+studies therefore never contend on a common lock; only study *creation*
+takes the (short) registry lock.
+
+Lease bookkeeping is heap-based: every ``add_trial``/lease renewal pushes
+a ``(deadline, uid)`` entry, and ``pop_expired`` pops only entries whose
+deadline has lapsed, discarding stale entries lazily (a renewal leaves the
+superseded entry in the heap; it is dropped when popped because the
+trial's *current* deadline is newer).  Sweeps are O(expired · log n)
+instead of a full scan of every trial of every study.
+
+An optional append-only JSONL write-ahead journal (``JournalStorage``)
+provides crash-restart recovery: every mutation is journaled under the
+owning shard's lock (so per-study order is preserved) before being
+acknowledged, and ``replay`` reconstructs the full state — including the
+indices and lease heap — from the log.
 """
 from __future__ import annotations
 
+import heapq
 import json
 import os
 import threading
-from typing import Any, Callable, Iterable
+from collections import deque
+from typing import Any, Callable
 
 from .types import Study, StudyConfig, Trial, TrialState
 
 
+class _StudyShard:
+    """Everything the storage tracks for one study, under one lock."""
+
+    __slots__ = ("study", "lock", "by_uid", "state_uids", "lease_heap",
+                 "waiting")
+
+    def __init__(self, study: Study):
+        self.study = study
+        self.lock = threading.RLock()
+        self.by_uid: dict[str, Trial] = {}
+        self.state_uids: dict[TrialState, set[str]] = {
+            s: set() for s in TrialState}
+        # (deadline, uid) entries; renewals push fresh entries and stale
+        # ones are dropped lazily on pop
+        self.lease_heap: list[tuple[float, str]] = []
+        self.waiting: deque[dict[str, Any]] = deque()
+
+
 class InMemoryStorage:
-    """Thread-safe in-memory study/trial store (the PostgreSQL stand-in)."""
+    """Thread-safe sharded study/trial store (the PostgreSQL stand-in)."""
 
     def __init__(self):
-        self._studies: dict[str, Study] = {}
-        self._lock = threading.RLock()
-        self._waiting: dict[str, list[dict[str, Any]]] = {}  # requeued params
+        self._shards: dict[str, _StudyShard] = {}
+        self._registry_lock = threading.RLock()
 
     # -- studies --------------------------------------------------------
     def get_or_create_study(self, config: StudyConfig) -> tuple[Study, bool]:
-        with self._lock:
-            key = config.key()
-            if key in self._studies:
-                return self._studies[key], False
+        key = config.key()
+        with self._registry_lock:
+            shard = self._shards.get(key)
+            if shard is not None:
+                return shard.study, False
             study = Study(config=config)
-            self._studies[key] = study
-            self._log({"op": "create_study", "config": config.to_record()})
+            self._shards[key] = shard = _StudyShard(study)
+            with shard.lock:
+                self._log({"op": "create_study", "config": config.to_record()})
             return study, True
 
     def get_study(self, key: str) -> Study | None:
-        with self._lock:
-            return self._studies.get(key)
+        with self._registry_lock:
+            shard = self._shards.get(key)
+            return None if shard is None else shard.study
 
     def studies(self) -> list[Study]:
-        with self._lock:
-            return list(self._studies.values())
+        with self._registry_lock:
+            return [s.study for s in self._shards.values()]
+
+    def study_lock(self, key: str) -> threading.RLock:
+        """The per-study shard lock — servers serialize per-study request
+        handling on this, so different studies never contend."""
+        with self._registry_lock:
+            return self._shards[key].lock
 
     # -- trials ---------------------------------------------------------
-    def add_trial(self, study_key: str, params: dict[str, Any], worker_id: str | None,
-                  lease_deadline: float | None, retries: int = 0) -> Trial:
-        with self._lock:
-            study = self._studies[study_key]
-            tid = len(study.trials)
-            trial = Trial(trial_id=tid, uid=f"{study_key}:{tid}", study_key=study_key,
-                          params=params, worker_id=worker_id,
-                          lease_deadline=lease_deadline, retries=retries)
-            study.trials.append(trial)
+    def _shard(self, study_key: str) -> _StudyShard | None:
+        with self._registry_lock:
+            return self._shards.get(study_key)
+
+    def _index_trial(self, shard: _StudyShard, trial: Trial) -> None:
+        """Append ``trial`` to the shard and maintain every index."""
+        shard.study.trials.append(trial)
+        shard.by_uid[trial.uid] = trial
+        shard.state_uids[trial.state].add(trial.uid)
+        if trial.state == TrialState.RUNNING and trial.lease_deadline is not None:
+            heapq.heappush(shard.lease_heap, (trial.lease_deadline, trial.uid))
+
+    def add_trial(self, study_key: str, params: dict[str, Any],
+                  worker_id: str | None, lease_deadline: float | None,
+                  retries: int = 0) -> Trial:
+        shard = self._shard(study_key)
+        if shard is None:
+            raise KeyError(study_key)
+        with shard.lock:
+            tid = len(shard.study.trials)
+            trial = Trial(trial_id=tid, uid=f"{study_key}:{tid}",
+                          study_key=study_key, params=params,
+                          worker_id=worker_id, lease_deadline=lease_deadline,
+                          retries=retries)
+            self._index_trial(shard, trial)
             self._log({"op": "add_trial", "trial": trial.to_record()})
             return trial
 
     def get_trial(self, uid: str) -> Trial | None:
-        with self._lock:
-            study_key, _, tid = uid.partition(":")
-            study = self._studies.get(study_key)
-            if study is None:
-                return None
-            tid = int(tid)
-            return study.trials[tid] if tid < len(study.trials) else None
+        study_key, _, _ = uid.partition(":")
+        shard = self._shard(study_key)
+        if shard is None:
+            return None
+        with shard.lock:
+            return shard.by_uid.get(uid)
 
     def update_trial(self, uid: str, **fields: Any) -> Trial:
-        with self._lock:
-            trial = self.get_trial(uid)
+        shard = self._shard(uid.partition(":")[0])
+        if shard is None:
+            raise KeyError(uid)
+        with shard.lock:
+            trial = shard.by_uid.get(uid)
             if trial is None:
                 raise KeyError(uid)
             for k, v in fields.items():
                 if k == "intermediate":            # (step, value) append
                     step, value = v
                     trial.intermediates[int(step)] = float(value)
+                elif k == "state":
+                    if v != trial.state:
+                        shard.state_uids[trial.state].discard(uid)
+                        shard.state_uids[v].add(uid)
+                    trial.state = v
+                elif k == "lease_deadline":
+                    trial.lease_deadline = v
+                    if v is not None and trial.state == TrialState.RUNNING:
+                        heapq.heappush(shard.lease_heap, (float(v), uid))
                 else:
                     setattr(trial, k, v)
             self._log({"op": "update_trial", "uid": uid,
@@ -83,19 +154,75 @@ class InMemoryStorage:
                                   for k, v in fields.items()}})
             return trial
 
+    # -- indexed views ---------------------------------------------------
+    def counts(self, study_key: str) -> dict[TrialState, int]:
+        """Per-state trial counts from the shard index (no trial scan)."""
+        shard = self._shard(study_key)
+        if shard is None:
+            return {s: 0 for s in TrialState}
+        with shard.lock:
+            return {s: len(uids) for s, uids in shard.state_uids.items()}
+
+    def trials_in_state(self, study_key: str, state: TrialState) -> list[Trial]:
+        shard = self._shard(study_key)
+        if shard is None:
+            return []
+        with shard.lock:
+            return [shard.by_uid[u] for u in shard.state_uids[state]]
+
+    # -- lease heap ------------------------------------------------------
+    def pop_expired(self, study_key: str, now: float) -> list[Trial]:
+        """Pop trials whose lease lapsed, in deadline order.
+
+        Touches only expired heap entries (plus stale ones superseded by a
+        renewal, which are discarded).  The caller is expected to finalize
+        the returned trials — they are *not* mutated here.
+        """
+        shard = self._shard(study_key)
+        if shard is None:
+            return []
+        expired: list[Trial] = []
+        seen: set[str] = set()
+        with shard.lock:
+            heap = shard.lease_heap
+            while heap and heap[0][0] <= now:
+                deadline, uid = heapq.heappop(heap)
+                trial = shard.by_uid.get(uid)
+                if trial is None or trial.state != TrialState.RUNNING:
+                    continue                     # already finalized
+                if trial.lease_deadline is None or trial.lease_deadline > now:
+                    continue                     # renewed: stale entry
+                if trial.lease_deadline != deadline or uid in seen:
+                    continue                     # superseded / duplicate entry
+                seen.add(uid)
+                expired.append(trial)
+        return expired
+
+    def lease_heap_size(self, study_key: str) -> int:
+        shard = self._shard(study_key)
+        if shard is None:
+            return 0
+        with shard.lock:
+            return len(shard.lease_heap)
+
     # -- fault tolerance: requeue params of expired/failed trials --------
-    def enqueue_params(self, study_key: str, params: dict[str, Any], retries: int) -> None:
-        with self._lock:
-            self._waiting.setdefault(study_key, []).append(
-                {"params": params, "retries": retries})
+    def enqueue_params(self, study_key: str, params: dict[str, Any],
+                       retries: int) -> None:
+        shard = self._shard(study_key)
+        if shard is None:
+            raise KeyError(study_key)
+        with shard.lock:
+            shard.waiting.append({"params": params, "retries": retries})
             self._log({"op": "enqueue", "study_key": study_key,
                        "params": params, "retries": retries})
 
     def pop_waiting(self, study_key: str) -> dict[str, Any] | None:
-        with self._lock:
-            q = self._waiting.get(study_key)
-            if q:
-                item = q.pop(0)
+        shard = self._shard(study_key)
+        if shard is None:
+            return None
+        with shard.lock:
+            if shard.waiting:
+                item = shard.waiting.popleft()
                 self._log({"op": "pop_waiting", "study_key": study_key})
                 return item
             return None
@@ -105,7 +232,9 @@ class InMemoryStorage:
         pass
 
     def atomically(self, fn: Callable[[], Any]) -> Any:
-        with self._lock:
+        """Run ``fn`` under the registry lock (cross-study invariants only;
+        per-study work should use ``study_lock`` instead)."""
+        with self._registry_lock:
             return fn()
 
 
@@ -115,10 +244,12 @@ class JournalStorage(InMemoryStorage):
     Every mutation is journaled before being acknowledged; a freshly
     constructed ``JournalStorage`` pointed at an existing journal replays it
     to reconstruct the full service state (crash-restart of the service,
-    paper sec. 3 'shared persistency').
+    paper sec. 3 'shared persistency').  Journal appends are serialized on
+    a dedicated lock because shards write concurrently.
     """
 
     def __init__(self, path: str):
+        self._journal_lock = threading.Lock()
         super().__init__()
         self._path = path
         self._file = None
@@ -129,7 +260,8 @@ class JournalStorage(InMemoryStorage):
 
     def _log(self, record: dict[str, Any]) -> None:
         if self._file is not None and not self._replaying:
-            self._file.write(json.dumps(record) + "\n")
+            with self._journal_lock:
+                self._file.write(json.dumps(record) + "\n")
 
     def replay(self, path: str) -> int:
         """Reconstruct state from the journal.  Returns #records applied."""
@@ -148,17 +280,24 @@ class JournalStorage(InMemoryStorage):
             self._replaying = False
         return n
 
+    def _insert_trial(self, trial: Trial) -> None:
+        """Replay path: insert preserving ``trial_id``, padding journal gaps
+        with explicit failed tombstones so uid->trial lookups stay aligned."""
+        shard = self._shard(trial.study_key)
+        if shard is None:
+            raise KeyError(trial.study_key)
+        with shard.lock:
+            while len(shard.study.trials) < trial.trial_id:
+                self._index_trial(shard, Trial.tombstone(
+                    trial.study_key, len(shard.study.trials)))
+            self._index_trial(shard, trial)
+
     def _apply(self, rec: dict[str, Any]) -> None:
         op = rec["op"]
         if op == "create_study":
             self.get_or_create_study(StudyConfig.from_record(rec["config"]))
         elif op == "add_trial":
-            t = Trial.from_record(rec["trial"])
-            study = self._studies[t.study_key]
-            # pad in case of gaps (shouldn't happen with a consistent journal)
-            while len(study.trials) < t.trial_id:
-                study.trials.append(t)
-            study.trials.append(t)
+            self._insert_trial(Trial.from_record(rec["trial"]))
         elif op == "update_trial":
             fields = dict(rec["fields"])
             if "state" in fields:

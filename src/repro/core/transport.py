@@ -55,6 +55,10 @@ class RoundRobinTransport(Transport):
 # --------------------------------------------------------------------------- #
 def _make_handler(target):
     class Handler(BaseHTTPRequestHandler):
+        # HTTP/1.1 => persistent connections; every response carries an
+        # explicit Content-Length so keep-alive framing is unambiguous.
+        protocol_version = "HTTP/1.1"
+
         def log_message(self, *a):   # quiet
             pass
 
@@ -75,6 +79,7 @@ def _make_handler(target):
                 return {}
 
         def do_GET(self):
+            self._body()     # drain any body so keep-alive framing survives
             self._respond(*target(self.path, "GET", {}))
 
         def do_POST(self):
@@ -118,25 +123,81 @@ class HttpServiceRunner:
 
 
 class HttpTransport(Transport):
-    """Client side of the HTTP transport (stdlib http.client)."""
+    """Client side of the HTTP transport (stdlib http.client).
 
-    def __init__(self, host: str, port: int, timeout: float = 30.0):
+    Keeps one persistent connection per transport (HTTP/1.1 keep-alive)
+    and transparently reconnects once when the socket has gone stale —
+    a dropped keep-alive never surfaces to the caller.  Pass
+    ``persistent=False`` for the old connection-per-request behavior
+    (kept for the benchmark comparison).
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0,
+                 persistent: bool = True):
         self.host, self.port, self.timeout = host, int(port), timeout
+        self.persistent = bool(persistent)
+        self._conn: http.client.HTTPConnection | None = None
+        self._lock = threading.Lock()     # the connection is not thread-safe
 
     @classmethod
-    def from_url(cls, url: str, timeout: float = 30.0) -> "HttpTransport":
+    def from_url(cls, url: str, timeout: float = 30.0,
+                 persistent: bool = True) -> "HttpTransport":
         url = url.replace("http://", "")
         host, _, port = url.partition(":")
-        return cls(host, int(port or 80), timeout)
+        return cls(host, int(port or 80), timeout, persistent=persistent)
+
+    def _exchange(self, method: str, path: str, payload: str | None
+                  ) -> tuple[int, dict[str, Any]]:
+        if self._conn is None:
+            self._conn = http.client.HTTPConnection(
+                self.host, self.port, timeout=self.timeout)
+        self._conn.request(method, path, body=payload,
+                           headers={"Content-Type": "application/json"})
+        resp = self._conn.getresponse()
+        data = resp.read()
+        return resp.status, json.loads(data or b"{}")
+
+    # failure modes of an idle keep-alive socket the server closed between
+    # requests — the only case where resending is known-safe (the request
+    # never reached the application).  Timeouts and fresh-connection errors
+    # must surface: the server may already have processed the (non-
+    # idempotent) ask/tell, and a blind resend would duplicate it.
+    _STALE_ERRORS = (http.client.RemoteDisconnected,
+                     http.client.BadStatusLine,
+                     ConnectionResetError, BrokenPipeError)
 
     def request(self, method, path, body=None):
-        conn = http.client.HTTPConnection(self.host, self.port, timeout=self.timeout)
-        try:
-            payload = json.dumps(body or {})
-            conn.request(method, path, body=payload,
-                         headers={"Content-Type": "application/json"})
-            resp = conn.getresponse()
-            data = resp.read()
-            return resp.status, json.loads(data or b"{}")
-        finally:
-            conn.close()
+        # GET carries no body: unread body bytes would corrupt keep-alive
+        # framing on servers that don't drain them.
+        payload = None if method == "GET" else json.dumps(body or {})
+        with self._lock:
+            reused = self._conn is not None
+            try:
+                try:
+                    return self._exchange(method, path, payload)
+                except self._STALE_ERRORS:
+                    self._close_conn()
+                    if not reused:
+                        raise
+                    try:
+                        return self._exchange(method, path, payload)
+                    except (http.client.HTTPException, OSError):
+                        self._close_conn()
+                        raise
+                except (http.client.HTTPException, OSError):
+                    self._close_conn()
+                    raise
+            finally:
+                if not self.persistent:
+                    self._close_conn()
+
+    def _close_conn(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            finally:
+                self._conn = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._close_conn()

@@ -56,6 +56,15 @@ class Trial:
     def last_step(self) -> int:
         return max(self.intermediates) if self.intermediates else -1
 
+    @classmethod
+    def tombstone(cls, study_key: str, trial_id: int) -> "Trial":
+        """Explicit placeholder for a journal gap: a FAILED trial that holds
+        the slot so uid->trial lookups of later trials stay aligned."""
+        t = cls(trial_id=trial_id, uid=f"{study_key}:{trial_id}",
+                study_key=study_key, params={}, state=TrialState.FAILED)
+        t.finished_at = t.created_at
+        return t
+
     def to_record(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
         d["state"] = self.state.value

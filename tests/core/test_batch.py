@@ -1,0 +1,162 @@
+"""Batched ask/tell wire protocol: one round trip suggests/finalizes k
+trials, with the same accounting invariants as the sequential path."""
+import threading
+
+import pytest
+
+from repro.core import (Client, ClientStudy, DirectTransport, HopaasServer,
+                        HttpServiceRunner, HttpTransport, InMemoryStorage,
+                        TokenManager, run_campaign, suggestions)
+from repro.core.types import TrialState
+
+
+@pytest.fixture()
+def server():
+    return HopaasServer(seed=0)
+
+
+@pytest.fixture()
+def client(server):
+    return Client(DirectTransport(server), server.tokens.issue("tester"))
+
+
+def make_study(client, name="b", sampler=None):
+    return ClientStudy(
+        name=name,
+        properties={"x": suggestions.uniform(0.0, 1.0),
+                    "n": suggestions.int(1, 9)},
+        sampler=sampler or {"name": "random"}, client=client)
+
+
+def test_ask_batch_returns_distinct_trials(client):
+    study = make_study(client)
+    trials = study.ask_batch(6)
+    assert len(trials) == 6
+    assert len({t.uid for t in trials}) == 6
+    assert [t.id for t in trials] == list(range(6))
+    for t in trials:
+        assert 0.0 <= t.x <= 1.0 and 1 <= t.n <= 9
+
+
+def test_ask_batch_advances_index_based_samplers(client):
+    """Grid/Halton must not hand the same lattice point to every worker in
+    the batch (the base suggest_batch extends the history between draws)."""
+    study = ClientStudy(name="grid-batch", client=client,
+                        properties={"x": suggestions.uniform(0.0, 1.0)},
+                        sampler={"name": "grid", "points_per_dim": 5})
+    xs = [t.x for t in study.ask_batch(5)]
+    assert len(set(xs)) == 5
+
+
+def test_tell_batch_finalizes_all(server, client):
+    study = make_study(client)
+    trials = study.ask_batch(4)
+    results = study.tell_batch([(t, float(i)) for i, t in enumerate(trials)])
+    assert [r["status"] for r in results] == [200] * 4
+    for i, t in enumerate(trials):
+        stored = server.storage.get_trial(t.uid)
+        assert stored.state == TrialState.COMPLETED and stored.value == float(i)
+
+
+def test_tell_batch_partial_conflict(server, client):
+    """An already-finalized trial yields a per-item 409; the rest of the
+    batch still lands."""
+    study = make_study(client)
+    t1, t2 = study.ask_batch(2)
+    study.tell(t1, value=0.1)
+    results = study.tell_batch([(t1, 0.2), (t2, 0.3)])
+    assert results[0]["status"] == 409
+    assert results[1]["status"] == 200
+    assert server.storage.get_trial(t1.uid).value == 0.1
+    assert server.storage.get_trial(t2.uid).value == 0.3
+
+
+def test_tpe_batch_suggests_after_startup(server, client):
+    """Past startup, ask_batch flows through the vectorized TPE top-k path."""
+    study = make_study(client, sampler={"name": "tpe", "n_startup_trials": 4})
+    for i in range(6):
+        t = study.ask()
+        study.tell(t, value=(t.x - 0.5) ** 2)
+    batch = study.ask_batch(5)
+    assert len({t.uid for t in batch}) == 5
+    for t in batch:
+        assert 0.0 <= t.x <= 1.0
+    study.tell_batch([(t, (t.x - 0.5) ** 2) for t in batch])
+    (s,) = [x for x in client.studies() if x["name"] == "b"]
+    assert s["n_completed"] == 11
+
+
+def test_batch_concurrent_workers_unique_trials(server):
+    """8 concurrent batch workers over 4 studies: every suggested uid is
+    unique and per-study accounting closes."""
+    tok = server.tokens.issue("t")
+    uids, lock = [], threading.Lock()
+
+    def go(widx):
+        cl = Client(DirectTransport(server), tok, worker_id=f"w{widx}")
+        study = make_study(cl, name=f"cc-{widx % 4}")
+        for _ in range(3):
+            trials = study.ask_batch(4)
+            with lock:
+                uids.extend(t.uid for t in trials)
+            study.tell_batch([(t, t.x) for t in trials])
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(uids) == len(set(uids)) == 8 * 3 * 4
+    for study in server.storage.studies():
+        counts = server.storage.counts(study.key)
+        assert counts[TrialState.COMPLETED] == len(study.trials) == 24
+
+
+def _objective(params, report):
+    val = (params["x"] - 0.6) ** 2
+    for step in range(3):
+        if report(step, val + (3 - step) * 0.1):
+            return val
+    return val
+
+
+def test_batch_campaign_accounting_matches_sequential():
+    """run_campaign(batch_size=k) completes with the same trial accounting
+    invariant (n_trials == completed + pruned + failed) as batch_size=1."""
+    outcomes = {}
+    for batch_size in (1, 4):
+        srv = HopaasServer(seed=0)
+        tok = srv.tokens.issue("c")
+        res = run_campaign(
+            _objective,
+            study_spec=dict(name="bc",
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "tpe", "n_startup_trials": 6},
+                            pruner={"name": "median", "n_warmup_steps": 1}),
+            transport_factory=lambda srv=srv: DirectTransport(srv),
+            token=tok, n_workers=4, n_trials=32, batch_size=batch_size,
+            seed=7)
+        assert res.n_trials == 32
+        assert res.n_completed + res.n_pruned + res.n_failed == 32
+        outcomes[batch_size] = res
+    assert outcomes[4].best_value is not None
+
+
+def test_batch_campaign_over_http_wire():
+    storage, tokens = InMemoryStorage(), TokenManager()
+    workers = [HopaasServer(storage=storage, tokens=tokens, seed=i)
+               for i in range(2)]
+    runner = HttpServiceRunner(workers).start()
+    try:
+        res = run_campaign(
+            _objective,
+            study_spec=dict(name="http-batch",
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"}),
+            transport_factory=lambda: HttpTransport(runner.host, runner.port),
+            token=tokens.issue("c"), n_workers=4, n_trials=24, batch_size=3,
+            seed=1)
+    finally:
+        runner.stop()
+    assert res.n_trials == 24
+    assert res.n_completed + res.n_pruned + res.n_failed == 24

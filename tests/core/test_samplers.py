@@ -3,10 +3,9 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.samplers import make_sampler
-from repro.core.space import Param, SearchSpace
+from repro.core.space import SearchSpace
 from repro.core.types import Direction, Trial, TrialState
 
 SPACE_2D = {"x": {"type": "uniform", "low": -5, "high": 5},
@@ -96,50 +95,3 @@ def test_halton_low_discrepancy():
             n = np.sum((pts[:, 0] >= qx * .5) & (pts[:, 0] < qx * .5 + .5) &
                        (pts[:, 1] >= qy * .5) & (pts[:, 1] < qy * .5 + .5))
             assert 8 <= n <= 24
-
-
-# ---------------------- property-based space tests ----------------------
-@given(low=st.floats(-1e3, 1e3), width=st.floats(1e-3, 1e3),
-       u=st.floats(0, 1))
-@settings(max_examples=200, deadline=None)
-def test_uniform_roundtrip(low, width, u):
-    p = Param(name="p", kind="uniform", low=low, high=low + width)
-    v = p.from_unit(u)
-    assert low - 1e-6 <= v <= low + width + 1e-6
-    assert abs(p.to_unit(v) - u) < 1e-6
-
-
-@given(low=st.floats(1e-6, 1e3), ratio=st.floats(1.001, 1e6),
-       u=st.floats(0, 1))
-@settings(max_examples=200, deadline=None)
-def test_loguniform_roundtrip(low, ratio, u):
-    p = Param(name="p", kind="loguniform", low=low, high=low * ratio)
-    v = p.from_unit(u)
-    assert low * 0.999 <= v <= low * ratio * 1.001
-    assert abs(p.to_unit(v) - u) < 1e-5
-
-
-@given(low=st.integers(-100, 100), width=st.integers(1, 200),
-       u=st.floats(0, 1))
-@settings(max_examples=200, deadline=None)
-def test_int_roundtrip(low, width, u):
-    p = Param(name="p", kind="int", low=low, high=low + width)
-    v = p.from_unit(u)
-    assert isinstance(v, int) and low <= v <= low + width
-
-
-@given(n=st.integers(1, 10), u=st.floats(0, 1))
-@settings(max_examples=100, deadline=None)
-def test_categorical_roundtrip(n, u):
-    choices = tuple(f"c{i}" for i in range(n))
-    p = Param(name="p", kind="categorical", choices=choices)
-    assert p.from_unit(u) in choices
-
-
-@given(st.lists(st.floats(0, 1), min_size=2, max_size=2))
-@settings(max_examples=50, deadline=None)
-def test_vector_roundtrip(us):
-    space = SearchSpace.from_properties(SPACE_2D)
-    params = space.from_unit_vector(np.array(us))
-    back = space.to_unit_vector(params)
-    np.testing.assert_allclose(back, np.clip(us, 0, 1), atol=1e-9)

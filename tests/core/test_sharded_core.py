@@ -1,0 +1,182 @@
+"""Sharded storage internals: lease-heap expiry ordering, state indices,
+journal gap padding, and journal replay of a full faulty campaign."""
+import json
+import time
+
+from repro.core import (Client, ClientStudy, DirectTransport, HopaasServer,
+                        InMemoryStorage, JournalStorage, run_campaign,
+                        suggestions)
+from repro.core.types import StudyConfig, TrialState
+
+PROPS = {"x": {"type": "uniform", "low": 0.0, "high": 1.0}}
+
+
+def _make_study(storage):
+    config = StudyConfig(name="s", properties=PROPS)
+    study, _ = storage.get_or_create_study(config)
+    return study.key
+
+
+# ---------------------------------------------------------------- lease heap
+def test_pop_expired_returns_deadline_order():
+    storage = InMemoryStorage()
+    key = _make_study(storage)
+    now = time.time()
+    deadlines = [now - 3.0, now - 1.0, now - 2.0, now + 60.0]
+    for dl in deadlines:
+        storage.add_trial(key, {"x": 0.5}, worker_id="w", lease_deadline=dl)
+    expired = storage.pop_expired(key, now)
+    assert [t.trial_id for t in expired] == [0, 2, 1]     # soonest first
+    assert storage.pop_expired(key, now) == []            # heap drained
+    # the live-lease trial is untouched
+    assert storage.get_trial(f"{key}:3").state == TrialState.RUNNING
+
+
+def test_lease_renewal_supersedes_old_heap_entry():
+    storage = InMemoryStorage()
+    key = _make_study(storage)
+    now = time.time()
+    t = storage.add_trial(key, {"x": 0.5}, worker_id="w",
+                          lease_deadline=now - 1.0)
+    # heartbeat: renew past the sweep horizon
+    storage.update_trial(t.uid, lease_deadline=now + 60.0)
+    assert storage.lease_heap_size(key) == 2              # old + renewed entry
+    assert storage.pop_expired(key, now) == []            # stale entry dropped
+    assert storage.lease_heap_size(key) == 1              # live lease remains
+    assert storage.get_trial(t.uid).state == TrialState.RUNNING
+
+
+def test_finalized_trial_never_reported_expired():
+    storage = InMemoryStorage()
+    key = _make_study(storage)
+    now = time.time()
+    t = storage.add_trial(key, {"x": 0.1}, worker_id="w",
+                          lease_deadline=now - 1.0)
+    storage.update_trial(t.uid, state=TrialState.COMPLETED, value=0.1,
+                         lease_deadline=None)
+    assert storage.pop_expired(key, now) == []
+
+
+def test_state_indices_track_transitions():
+    storage = InMemoryStorage()
+    key = _make_study(storage)
+    trials = [storage.add_trial(key, {"x": i / 4}, worker_id="w",
+                                lease_deadline=None) for i in range(4)]
+    storage.update_trial(trials[0].uid, state=TrialState.COMPLETED)
+    storage.update_trial(trials[1].uid, state=TrialState.PRUNED)
+    storage.update_trial(trials[2].uid, state=TrialState.FAILED)
+    counts = storage.counts(key)
+    assert counts[TrialState.COMPLETED] == 1
+    assert counts[TrialState.PRUNED] == 1
+    assert counts[TrialState.FAILED] == 1
+    assert counts[TrialState.RUNNING] == 1
+    assert {t.trial_id for t in
+            storage.trials_in_state(key, TrialState.RUNNING)} == {3}
+
+
+def test_sweep_is_per_study():
+    """A sweep triggered by one study's ask must not scan or mutate other
+    studies (the old global-scan behavior)."""
+    srv = HopaasServer(lease_seconds=0.01, seed=0)
+    cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+    a = ClientStudy(name="a", client=cl, properties=PROPS,
+                    sampler={"name": "random"})
+    b = ClientStudy(name="b", client=cl, properties=PROPS,
+                    sampler={"name": "random"})
+    ta, tb = a.ask(), b.ask()
+    time.sleep(0.03)
+    assert srv.sweep_expired(ta.uid.partition(":")[0]) == 1
+    assert srv.storage.get_trial(ta.uid).state == TrialState.FAILED
+    assert srv.storage.get_trial(tb.uid).state == TrialState.RUNNING
+
+
+# ------------------------------------------------------------------ journal
+def test_journal_gap_padding_regression(tmp_path):
+    """A journal gap (lost add_trial record) must pad with tombstones, not
+    duplicate the next trial object across slots (old bug: uid->trial
+    lookups of the padded slots returned the wrong trial)."""
+    path = str(tmp_path / "gap.jsonl")
+    config = StudyConfig(name="g", properties=PROPS)
+    key = config.key()
+    mem = InMemoryStorage()
+    mem.get_or_create_study(config)
+    real = {"op": "add_trial",
+            "trial": {"trial_id": 2, "uid": f"{key}:2", "study_key": key,
+                      "params": {"x": 0.9}, "state": "running", "value": None,
+                      "values": None, "intermediates": {}, "worker_id": "w",
+                      "lease_deadline": None, "created_at": time.time(),
+                      "finished_at": None, "retries": 0}}
+    with open(path, "w") as f:
+        f.write(json.dumps({"op": "create_study",
+                            "config": config.to_record()}) + "\n")
+        f.write(json.dumps(real) + "\n")
+
+    storage = JournalStorage(path)
+    study = storage.get_study(key)
+    assert len(study.trials) == 3
+    for i in (0, 1):                      # padded slots: explicit tombstones
+        pad = storage.get_trial(f"{key}:{i}")
+        assert pad.trial_id == i and pad.uid == f"{key}:{i}"
+        assert pad.state == TrialState.FAILED and pad.params == {}
+    survivor = storage.get_trial(f"{key}:2")
+    assert survivor.trial_id == 2 and survivor.params == {"x": 0.9}
+    storage.close()
+
+
+def _objective(params, report):
+    val = (params["x"] - 0.3) ** 2
+    for step in range(3):
+        if report(step, val + (3 - step) * 0.05):
+            return val
+    return val
+
+
+def test_journal_replay_roundtrip_through_faulty_campaign(tmp_path):
+    """Full campaign with injected deaths, pruning and requeues journals to
+    a log that replays to the exact same service state."""
+    path = str(tmp_path / "campaign.jsonl")
+    srv = HopaasServer(storage=JournalStorage(path), lease_seconds=0.2,
+                       seed=0)
+    tok = srv.tokens.issue("c")
+    run_campaign(
+        _objective,
+        study_spec=dict(name="wal",
+                        properties={"x": suggestions.uniform(0, 1)},
+                        sampler={"name": "random"},
+                        pruner={"name": "median", "n_warmup_steps": 1}),
+        transport_factory=lambda: DirectTransport(srv),
+        token=tok, n_workers=6, n_trials=36, failure_rate=0.2, seed=11)
+    time.sleep(0.25)
+    srv.sweep_expired()                   # requeues the orphaned params
+    cl = Client(DirectTransport(srv), tok)
+    before = cl.studies()
+    key = srv.storage.studies()[0].key
+    waiting_before = []
+    while True:
+        item = srv.storage.pop_waiting(key)
+        if item is None:
+            break
+        waiting_before.append(item)
+    srv.storage.close()
+
+    srv2 = HopaasServer(storage=JournalStorage(path), seed=0)
+    cl2 = Client(DirectTransport(srv2), srv2.tokens.issue("c"))
+    assert cl2.studies() == before
+    # requeue queue state replays too (pops above were journaled)
+    waiting_after = []
+    while True:
+        item = srv2.storage.pop_waiting(key)
+        if item is None:
+            break
+        waiting_after.append(item)
+    assert waiting_after == []
+    # the restarted service keeps serving the study
+    study = ClientStudy(name="wal", client=cl2,
+                        properties={"x": suggestions.uniform(0, 1)},
+                        sampler={"name": "random"},
+                        pruner={"name": "median", "n_warmup_steps": 1})
+    with study.trial() as t:
+        t.loss = abs(t.x)
+    (s,) = [x for x in cl2.studies() if x["name"] == "wal"]
+    assert s["n_trials"] == before[0]["n_trials"] + 1
+    srv2.storage.close()
