@@ -1,0 +1,127 @@
+"""PR 2 claim — ask latency is independent of history length.
+
+Measures sampler ``suggest`` / ``suggest_batch`` latency against trial
+histories of increasing length, in three modes:
+
+  * ``legacy``  — the pre-PR ask path: the observation matrix is rebuilt
+                  from scratch with per-trial scalar featurization
+                  (``Param.to_unit`` in a Python loop, per-dim math.log);
+  * ``scratch`` — from-scratch rebuild through the vectorized codec
+                  (what direct sampler users get today);
+  * ``cached``  — the service ask path: the incremental
+                  ``ObservationCache`` (O(1) sync, pre-padded buffers).
+
+Emits ``BENCH_sampler.json``.  Acceptance: TPE cached at the longest
+history >= 5x faster than legacy, and cached latency near-flat (within
+2x) from 1k to 5k trials.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.obs_cache import ObservationCache
+from repro.core.samplers.base import Sampler
+from repro.core.samplers.gp import GPSampler
+from repro.core.samplers.tpe import TPESampler
+from repro.core.space import SearchSpace
+from repro.core.storage import InMemoryStorage
+from repro.core.types import Direction, StudyConfig, TrialState
+
+PROPS = {"lr": {"type": "loguniform", "low": 1e-5, "high": 1e-1},
+         "wd": {"type": "loguniform", "low": 1e-6, "high": 1e-2},
+         "width": {"type": "int", "low": 32, "high": 1024},
+         "act": {"type": "categorical", "choices": ["relu", "gelu", "silu"]},
+         "dropout": {"type": "uniform", "low": 0.0, "high": 0.5}}
+
+
+def _legacy_observations(space, trials, direction, cache=None):
+    """The seed implementation of ``Sampler.observations``: one Python
+    featurization call per trial, one scalar ``to_unit`` per dim."""
+    done = [t for t in trials
+            if t.state == TrialState.COMPLETED and t.value is not None]
+    if not done:
+        return np.zeros((0, space.dim)), np.zeros((0,))
+    X = np.stack([
+        np.array([p.to_unit(t.params[p.name]) for p in space.searchable],
+                 dtype=np.float64)
+        for t in done])
+    sign = 1.0 if direction == Direction.MINIMIZE else -1.0
+    y = np.array([sign * t.value for t in done], dtype=np.float64)
+    return X, y
+
+
+class _LegacyTPE(TPESampler):
+    observations = staticmethod(_legacy_observations)
+
+
+class _LegacyGP(GPSampler):
+    observations = staticmethod(_legacy_observations)
+
+
+def _build_history(space, n, seed=0):
+    cfg = StudyConfig(name=f"bench-{n}-{seed}", properties=PROPS)
+    storage = InMemoryStorage()
+    study, _ = storage.get_or_create_study(cfg)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        t = storage.add_trial(study.key, space.sample_uniform(rng), None, None)
+        storage.update_trial(t.uid, value=float(rng.uniform(0, 10)),
+                             state=TrialState.COMPLETED, lease_deadline=None)
+    cache = ObservationCache(space, cfg.direction)
+    cache.sync(storage, study.key)
+    return study, cache
+
+
+def _time_ask(sampler, space, trials, rng, batch, cache, repeats=7):
+    def ask():
+        if batch == 1:
+            sampler.suggest(space, trials, Direction.MINIMIZE, rng,
+                            cache=cache)
+        else:
+            sampler.suggest_batch(space, trials, Direction.MINIMIZE, rng,
+                                  batch, cache=cache)
+    ask()                                   # warm-up (jit compile)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ask()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e3    # ms
+
+
+def run(smoke: bool = False) -> list[dict]:
+    histories = (100, 500) if smoke else (100, 1000, 5000)
+    space = SearchSpace.from_properties(PROPS)
+    variants = {
+        "tpe": (TPESampler, _LegacyTPE, {"n_startup_trials": 10}, (1, 16)),
+        "gp": (GPSampler, _LegacyGP, {"n_startup_trials": 8}, (1,)),
+    }
+    rows = []
+    for name, (cls, legacy_cls, kw, batches) in variants.items():
+        for n in histories:
+            study, cache = _build_history(space, n)
+            for batch in batches:
+                timings = {}
+                for mode in ("legacy", "scratch", "cached"):
+                    sampler = (legacy_cls if mode == "legacy" else cls)(**kw)
+                    timings[mode] = _time_ask(
+                        sampler, space, study.trials,
+                        np.random.default_rng(1), batch,
+                        cache if mode == "cached" else None)
+                rows.append({
+                    "sampler": name, "history": n, "batch": batch,
+                    "legacy_ms": round(timings["legacy"], 3),
+                    "scratch_ms": round(timings["scratch"], 3),
+                    "cached_ms": round(timings["cached"], 3),
+                    "speedup_vs_legacy": round(
+                        timings["legacy"] / max(timings["cached"], 1e-9), 2),
+                })
+    out_dir = "experiments/benchmarks"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_sampler.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

@@ -9,6 +9,7 @@ different studies never contend on a common lock.
 """
 from .auth import AuthError, TokenManager
 from .client import Client, HopaasError, Study as ClientStudy, Trial as ClientTrial, suggestions
+from .obs_cache import ObservationCache
 from .campaign import CampaignResult, run_campaign
 from .pruners import make_pruner
 from .report import convergence_trace, format_report, study_summary
@@ -25,7 +26,7 @@ __all__ = [
     "ClientTrial", "suggestions", "CampaignResult", "run_campaign",
     "make_pruner", "convergence_trace", "format_report", "study_summary",
     "make_sampler", "HOPAAS_VERSION", "HopaasServer", "StudyContext",
-    "Param", "SearchSpace",
+    "ObservationCache", "Param", "SearchSpace",
     "InMemoryStorage", "JournalStorage", "DirectTransport",
     "HttpServiceRunner", "HttpTransport", "RoundRobinTransport", "Transport",
     "Direction", "Study", "StudyConfig", "Trial", "TrialState",

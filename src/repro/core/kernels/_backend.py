@@ -1,0 +1,31 @@
+"""Backend selection shared by the acquisition kernels (see package doc)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_VALID = ("pallas", "pallas_interpret", "jnp")
+
+
+def backend() -> str:
+    """The kernel backend in effect for this process."""
+    env = os.environ.get("REPRO_HPO_KERNELS", "").strip().lower()
+    if env:
+        if env not in _VALID:
+            raise ValueError(
+                f"REPRO_HPO_KERNELS={env!r}; expected one of {_VALID}")
+        return env
+    try:
+        on_tpu = jax.default_backend() == "tpu"
+    except Exception:          # backend discovery can fail in odd sandboxes
+        on_tpu = False
+    return "pallas" if on_tpu else "jnp"
+
+
+def largest_divisor_block(n: int, cap: int) -> int:
+    """Largest block size <= cap dividing n (grids need exact tiling)."""
+    b = min(cap, n)
+    while n % b:
+        b -= 1
+    return b

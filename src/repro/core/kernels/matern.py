@@ -1,0 +1,80 @@
+"""Fused Matérn-5/2 cross-covariance for the GP sampler.
+
+The seed implementation built the (A, B) kernel matrix through an
+(A, B, D) pairwise-difference tensor.  Expanding the squared distance,
+
+    d²[a,b] = |as_a|² + |bs_b|² - 2 as_a · bs_b     (as = a/ls, bs = b/ls)
+
+turns it into one (A, D)x(D, B) matmul plus rank-1 terms, which the
+Pallas kernel folds into a single augmented contraction per tile
+(aug_a = [-2·as, |as|², 1], aug_b = [bs, 1, |bs|²]) followed by the
+element-wise Matérn form — no rank-3 intermediate in either backend.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._backend import backend as _select_backend
+from ._backend import largest_divisor_block
+
+_SQRT5 = math.sqrt(5.0)
+
+
+def _matern_form(d2: jax.Array) -> jax.Array:
+    d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+    s5d = _SQRT5 * d
+    return (1.0 + s5d + s5d * s5d / 3.0) * jnp.exp(-s5d)
+
+
+def _matern_kernel(aa_ref, bb_ref, out_ref):
+    aa = aa_ref[...].astype(jnp.float32)               # (ba, D+2)
+    bb = bb_ref[...].astype(jnp.float32)               # (bb, D+2)
+    d2 = jax.lax.dot_general(
+        aa, bb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (ba, bb) = d²
+    out_ref[...] = _matern_form(d2).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _matern_pallas_impl(aa: jax.Array, bb: jax.Array, *,
+                        interpret: bool = False) -> jax.Array:
+    A, da = aa.shape
+    B, _ = bb.shape
+    ba = largest_divisor_block(A, 128)
+    bb_blk = largest_divisor_block(B, 128)
+    return pl.pallas_call(
+        _matern_kernel,
+        grid=(A // ba, B // bb_blk),
+        in_specs=[
+            pl.BlockSpec((ba, da), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb_blk, da), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ba, bb_blk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((A, B), jnp.float32),
+        interpret=interpret,
+    )(aa, bb)
+
+
+def matern52_cross(a: jax.Array, b: jax.Array, ls: jax.Array, *,
+                   backend: str | None = None) -> jax.Array:
+    """(A, B) Matérn-5/2 cross-covariance of two point sets on the unit
+    cube with per-dim lengthscales ``ls``.  Jit-composable."""
+    be = backend or _select_backend()
+    as_ = a / ls
+    bs = b / ls
+    sa = jnp.sum(as_ * as_, axis=-1)                   # (A,)
+    sb = jnp.sum(bs * bs, axis=-1)                     # (B,)
+    if be == "jnp":
+        d2 = sa[:, None] + sb[None, :] - 2.0 * (as_ @ bs.T)
+        return _matern_form(d2)
+    ones_a = jnp.ones_like(sa)[:, None]
+    ones_b = jnp.ones_like(sb)[:, None]
+    aa = jnp.concatenate([-2.0 * as_, sa[:, None], ones_a], axis=1)
+    bb = jnp.concatenate([bs, ones_b, sb[:, None]], axis=1)
+    return _matern_pallas_impl(aa, bb,
+                               interpret=(be == "pallas_interpret"))

@@ -1,0 +1,127 @@
+"""Incremental observation cache — the ask-hot-path accelerator.
+
+Before this cache, every ``ask`` re-featurized the *entire* trial history
+(per-trial ``space.to_unit_vector`` in a Python loop, per-dim ``math.log``)
+to rebuild the ``(X, y)`` observation matrix the numeric samplers (TPE /
+GP / CMA-ES) consume, making ask cost O(n_trials * dim) in pure Python.
+The cache instead appends one featurized row per *completion event*:
+
+  * the storage shard keeps an append-only ``completed_log`` of trials
+    that became observations (COMPLETED with a value) plus a mutation
+    ``version`` counter;
+  * ``sync`` compares one integer, consumes only log entries it has not
+    seen, and featurizes them with the vectorized space codec — O(new),
+    O(1) for the common ask-after-ask case;
+  * rows live in amortized-doubling buffers kept at power-of-two capacity
+    so the padded views handed to jitted/Pallas kernels keep a stable
+    shape signature across history growth (one recompile per doubling,
+    not per trial count).
+
+Row order: internally rows sit in completion order; ``observations()``
+returns them sorted by ``trial_id`` through a lazily-maintained
+permutation so the result is bit-identical to the from-scratch
+``Sampler.observations`` scan (which walks ``study.trials`` in id order).
+That keeps sampler proposals byte-for-byte reproducible whether or not
+the cache is used, including across journal replay.
+
+Thread-safety: sync/reads are performed under the owning study's shard
+lock (the server serializes per-study request handling on it).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .space import SearchSpace
+from .types import Direction, Trial
+
+_MIN_CAPACITY = 8
+
+
+def pad_pow2(n: int, lo: int = _MIN_CAPACITY) -> int:
+    """Smallest power of two >= n (floor ``lo``) — the shared padding
+    width for cache capacity and the samplers' jit-stable buffers.  One
+    definition: cached and from-scratch paths must agree on shapes."""
+    return max(lo, 1 << max(n - 1, 0).bit_length())
+
+
+class ObservationCache:
+    """Incrementally maintained ``(X, y)`` of a study's observations."""
+
+    def __init__(self, space: SearchSpace, direction: Direction):
+        self._space = space
+        self._sign = 1.0 if direction == Direction.MINIMIZE else -1.0
+        cap = _MIN_CAPACITY
+        self._X = np.zeros((cap, space.dim), dtype=np.float64)
+        self._y = np.zeros(cap, dtype=np.float64)
+        self._ids = np.zeros(cap, dtype=np.int64)
+        self._n = 0
+        self._log_position = 0        # consumed prefix of the completion log
+        self._version = -2            # last storage version seen (fast no-op)
+        self._ordered: tuple[np.ndarray, np.ndarray] | None = None
+        self._padded: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+
+    # -- properties ------------------------------------------------------
+    @property
+    def count(self) -> int:
+        return self._n
+
+    @property
+    def capacity(self) -> int:
+        return len(self._y)
+
+    # -- ingestion -------------------------------------------------------
+    def sync(self, storage, study_key: str) -> "ObservationCache":
+        """Pull completion events the cache has not seen.  Call under the
+        study's shard lock.  One int compare when nothing changed."""
+        version = storage.data_version(study_key)
+        if version == self._version:
+            return self
+        new = storage.completed_since(study_key, self._log_position)
+        if new:
+            self._append(new)
+            self._log_position += len(new)
+        self._version = version
+        return self
+
+    def _append(self, trials: list[Trial]) -> None:
+        k = len(trials)
+        need = self._n + k
+        if need > self.capacity:
+            cap = pad_pow2(need)
+            X = np.zeros((cap, self._space.dim), dtype=np.float64)
+            y = np.zeros(cap, dtype=np.float64)
+            ids = np.zeros(cap, dtype=np.int64)
+            X[: self._n] = self._X[: self._n]
+            y[: self._n] = self._y[: self._n]
+            ids[: self._n] = self._ids[: self._n]
+            self._X, self._y, self._ids = X, y, ids
+        rows = self._space.to_unit_matrix([t.params for t in trials])
+        self._X[self._n: need] = rows
+        self._y[self._n: need] = [self._sign * t.value for t in trials]
+        self._ids[self._n: need] = [t.trial_id for t in trials]
+        self._n = need
+        self._ordered = None
+        self._padded = None
+
+    # -- read views ------------------------------------------------------
+    def observations(self) -> tuple[np.ndarray, np.ndarray]:
+        """(X, y) in trial-id order — bit-identical to the from-scratch
+        ``Sampler.observations`` scan.  Cached until the next append."""
+        if self._ordered is None:
+            n = self._n
+            order = np.argsort(self._ids[:n], kind="stable")
+            self._ordered = (self._X[:n][order], self._y[:n][order])
+        return self._ordered
+
+    def padded(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(X, y, mask) zero-padded to the pow-2 capacity, trial-id order.
+        Stable shapes across asks -> stable jit signatures."""
+        if self._padded is None:
+            cap = pad_pow2(self._n)
+            X = np.zeros((cap, self._space.dim), dtype=np.float64)
+            y = np.zeros(cap, dtype=np.float64)
+            mask = np.zeros(cap, dtype=np.float64)
+            Xs, ys = self.observations()
+            X[: self._n], y[: self._n], mask[: self._n] = Xs, ys, 1.0
+            self._padded = (X, y, mask)
+        return self._padded

@@ -2,7 +2,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..types import Study, Trial, TrialState
+from ..types import Study, Trial
 from .base import Pruner
 
 
@@ -23,13 +23,11 @@ class PercentilePruner(Pruner):
         if (step - self.n_warmup_steps) % self.interval_steps != 0:
             return False
         sign = self._sign(study)
-        # competitors: trials (finished or further along) that reported at `step`
-        others = []
-        for t in study.trials:
-            if t.uid == trial.uid or step not in t.intermediates:
-                continue
-            if t.state in (TrialState.COMPLETED, TrialState.PRUNED) or t.last_step() >= step:
-                others.append(sign * t.intermediates[step])
+        # competitors: every other trial that reported at `step`, read from
+        # the study's incremental per-step report index (maintained on
+        # report under the shard lock) — no scan over the trial list
+        others = [sign * v for uid, v in study.reports_at(step).items()
+                  if uid != trial.uid]
         if len(others) < self.n_startup_trials:
             return False
         threshold = float(np.percentile(others, self.percentile))

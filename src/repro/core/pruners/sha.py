@@ -40,17 +40,15 @@ class SuccessiveHalvingPruner(Pruner):
             return False
         sign = self._sign(study)
         resource = self.rung_resource(k)
-        # value of a trial "at rung k" = best intermediate within the resource
-        def at_rung(t: Trial) -> float | None:
-            vals = [sign * v for s, v in t.intermediates.items() if s + 1 <= resource]
-            return min(vals) if vals else None
-
-        mine = at_rung(trial)
+        # value of a trial "at rung k" = best intermediate within the
+        # resource, read from the study's incremental rung snapshot
+        # (maintained per report under the shard lock) — heartbeats no
+        # longer rescan every trial's intermediates
+        mine = study.rung_value(trial.uid, resource, sign)
         if mine is None:
             return False
-        others = [v for t in study.trials
-                  if t.uid != trial.uid and t.last_step() + 1 >= resource
-                  and (v := at_rung(t)) is not None]
+        # competitors: other trials that *reached* the rung
+        others = study.rung_competitors(resource, sign, trial.uid)
         if len(others) < self.rf - 1:
             return False         # not enough rung population yet
         cutoff = float(np.percentile(others, 100.0 / self.rf))

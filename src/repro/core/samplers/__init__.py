@@ -1,8 +1,13 @@
 """Gradient-less optimization backends (the Optuna role in the paper).
 
-All samplers implement ``suggest(space, trials, rng) -> params`` where
-``trials`` is the list of *completed* trials of the study.  Registry keyed
-by the ``sampler`` spec of the study config, e.g. ``{"name": "tpe"}``.
+All samplers implement ``suggest(space, trials, direction, rng) ->
+params`` where ``trials`` is the study's full trial list (the numeric
+samplers filter completed observations themselves).  On the service ask
+path the samplers that set ``uses_cache`` additionally receive the
+per-study ``ObservationCache`` (``cache=`` kwarg), so the observation
+matrix is an O(1) incrementally maintained buffer instead of a per-ask
+rescan of the history.  Registry keyed by the ``sampler`` spec of the
+study config, e.g. ``{"name": "tpe"}``.
 """
 from __future__ import annotations
 

@@ -12,6 +12,11 @@ from ..types import Direction, Trial, TrialState
 class Sampler(abc.ABC):
     """Strategy that proposes the next hyperparameter set for a study."""
 
+    #: numeric samplers set this so the server hands them the per-study
+    #: ObservationCache (``cache=`` kwarg) instead of letting them rescan
+    #: the trial list on every ask
+    uses_cache = False
+
     @abc.abstractmethod
     def suggest(self, space: SearchSpace, trials: list[Trial],
                 direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
@@ -38,13 +43,22 @@ class Sampler(abc.ABC):
 
     # -- helpers shared by the numeric samplers -------------------------
     @staticmethod
-    def observations(space: SearchSpace, trials: list[Trial], direction: Direction
-                     ) -> tuple[np.ndarray, np.ndarray]:
-        """(X, y) of completed trials in unit-cube coords, minimization sign."""
-        done = [t for t in trials if t.state == TrialState.COMPLETED and t.value is not None]
+    def observations(space: SearchSpace, trials: list[Trial], direction: Direction,
+                     cache: Any = None) -> tuple[np.ndarray, np.ndarray]:
+        """(X, y) of observations in unit-cube coords, minimization sign.
+
+        With an ``ObservationCache`` (the service ask path) this is O(1):
+        the cache was synced incrementally on tell.  Without one (direct
+        sampler use, tests) the trial list is featurized from scratch with
+        the vectorized space codec — same rows, bit-identical.
+        """
+        if cache is not None:
+            return cache.observations()
+        done = [t for t in trials
+                if t.state == TrialState.COMPLETED and t.value is not None]
         if not done:
             return np.zeros((0, space.dim)), np.zeros((0,))
-        X = np.stack([space.to_unit_vector(t.params) for t in done])
+        X = space.to_unit_matrix([t.params for t in done])
         sign = 1.0 if direction == Direction.MINIMIZE else -1.0
         y = np.array([sign * t.value for t in done], dtype=np.float64)
         return X, y

@@ -19,6 +19,8 @@ from .base import Sampler
 
 
 class CmaEsSampler(Sampler):
+    uses_cache = True
+
     def __init__(self, sigma0: float = 0.3, popsize: int | None = None, seed: int = 0):
         self.sigma0 = float(sigma0)
         self.popsize = popsize
@@ -73,14 +75,15 @@ class CmaEsSampler(Sampler):
         s["gen"] += 1
 
     def suggest(self, space: SearchSpace, trials: list[Trial],
-                direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
+                direction: Direction, rng: np.random.Generator,
+                cache: Any = None) -> dict[str, Any]:
         d = space.dim
         if d == 0:
             return space.sample_uniform(rng)
         if self._state is None:
             self._state = self._init_state(d)
 
-        X, y = self.observations(space, trials, direction)
+        X, y = self.observations(space, trials, direction, cache=cache)
         # consume newly completed evaluations generation-wise
         if len(y) - self._seen >= self._state["lam"]:
             self._update(X[self._seen:], y[self._seen:])

@@ -3,10 +3,16 @@
 A second Bayesian backend beside TPE (the paper plans 'future extensions to
 additional frameworks').  Matérn-5/2 kernel on the unit cube, Cholesky
 posterior in JAX, EI acquisition maximized over quasi-random candidates.
+
+The covariance matrices go through ``repro.core.kernels.matern52_cross``
+(Pallas tiled matmul-form on TPU, equivalent jnp fallback elsewhere — no
+(A, B, D) pairwise-difference intermediate), the EI pipeline is one fused
+jit, and on the service ask path the padded (X, y, mask) buffers come
+straight from the per-study ``ObservationCache`` (pow-2 capacity, so the
+jit signature only changes when the history doubles).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 
@@ -14,21 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import matern52_cross
+from ..obs_cache import pad_pow2 as _pad_pow2
 from ..space import SearchSpace
 from ..types import Direction, Trial
 from .base import Sampler
 from .quasirandom import QuasiRandomSampler
-
-
-def _pad_pow2(n: int, lo: int = 8) -> int:
-    return max(lo, 1 << (n - 1).bit_length())
-
-
-def _matern52(x1: jnp.ndarray, x2: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
-    d = jnp.sqrt(jnp.maximum(
-        ((x1[:, None, :] - x2[None, :, :]) ** 2 / ls ** 2).sum(-1), 1e-12))
-    s5d = math.sqrt(5.0) * d
-    return (1.0 + s5d + s5d ** 2 / 3.0) * jnp.exp(-s5d)
 
 
 @jax.jit
@@ -40,14 +37,14 @@ def _gp_ei(X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
     var0 = ((y - mu0) ** 2 * mask).sum() / n + 1e-12
     yn = (y - mu0) / jnp.sqrt(var0)
 
-    K = _matern52(X, X, ls)
+    K = matern52_cross(X, X, ls)
     K = jnp.where(mask[:, None] * mask[None, :] > 0, K, 0.0)
     diag = jnp.where(mask > 0, 1e-6 + 1e-3, 1.0)   # unit diag for padded rows
     K = K + jnp.diag(diag)
     L = jnp.linalg.cholesky(K)
     alpha = jax.scipy.linalg.cho_solve((L, True), yn * mask)
 
-    Ks = _matern52(cands, X, ls) * mask[None, :]
+    Ks = matern52_cross(cands, X, ls) * mask[None, :]
     mu = Ks @ alpha
     v = jax.scipy.linalg.solve_triangular(L, Ks.T, lower=True)
     var = jnp.maximum(1.0 - (v ** 2).sum(0), 1e-9)
@@ -61,6 +58,8 @@ def _gp_ei(X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
 
 
 class GPSampler(Sampler):
+    uses_cache = True
+
     def __init__(self, n_startup_trials: int = 8, n_candidates: int = 256,
                  lengthscale: float = 0.25, seed: int = 0):
         self.n_startup_trials = int(n_startup_trials)
@@ -69,21 +68,29 @@ class GPSampler(Sampler):
         self._startup = QuasiRandomSampler(seed=seed)
 
     def suggest(self, space: SearchSpace, trials: list[Trial],
-                direction: Direction, rng: np.random.Generator) -> dict[str, Any]:
-        X, y = self.observations(space, trials, direction)
-        if len(y) < self.n_startup_trials or space.dim == 0 or len(y) > 512:
+                direction: Direction, rng: np.random.Generator,
+                cache: Any = None) -> dict[str, Any]:
+        if cache is not None:
+            n_obs = cache.count
+        else:
+            X, y = self.observations(space, trials, direction)
+            n_obs = len(y)
+        if n_obs < self.n_startup_trials or space.dim == 0 or n_obs > 512:
             # GP is O(n^3); beyond 512 observations defer to quasirandom
             # exploration (TPE is the scalable default anyway).
             return self._startup.suggest(space, trials, direction, rng)
 
-        n = _pad_pow2(len(y))
-        Xp = np.zeros((n, space.dim)); Xp[: len(y)] = X
-        mp = np.zeros(n); mp[: len(y)] = 1.0
-        yp = np.zeros(n); yp[: len(y)] = y
+        if cache is not None:
+            Xp, yp, mp = cache.padded()     # pre-padded, pow-2 capacity
+        else:
+            n = _pad_pow2(n_obs)
+            Xp = np.zeros((n, space.dim)); Xp[:n_obs] = X
+            mp = np.zeros(n); mp[:n_obs] = 1.0
+            yp = np.zeros(n); yp[:n_obs] = y
 
-        cands = np.stack([
-            QuasiRandomSampler(seed=int(rng.integers(0, 2**31 - 1))).point(i, space.dim)
-            for i in range(self.n_candidates)])
+        # one batched Halton draw — no per-candidate sampler construction
+        qr = QuasiRandomSampler(seed=int(rng.integers(0, 2**31 - 1)))
+        cands = qr.points(0, self.n_candidates, space.dim)
         ls = jnp.full((space.dim,), self.lengthscale)
         ei = _gp_ei(jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mp),
                     jnp.asarray(cands), ls)

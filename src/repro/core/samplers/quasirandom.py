@@ -12,9 +12,12 @@ _PRIMES = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59,
            61, 67, 71, 73, 79, 83, 89, 97, 101, 103, 107, 109, 113]
 
 
-def _radical_inverse(i: int, base: int) -> float:
-    f, r = 1.0, 0.0
-    while i > 0:
+def _radical_inverse(i: np.ndarray, base: int) -> np.ndarray:
+    """Vectorized van-der-Corput radical inverse of an index array."""
+    i = np.asarray(i, dtype=np.int64).copy()
+    f = 1.0
+    r = np.zeros(i.shape, dtype=np.float64)
+    while i.max(initial=0) > 0:
         f /= base
         r += f * (i % base)
         i //= base
@@ -32,13 +35,20 @@ class QuasiRandomSampler(Sampler):
         self.scramble = scramble
         self.seed = int(seed)
 
-    def point(self, index: int, dim: int) -> np.ndarray:
-        u = np.array([_radical_inverse(index + 1, _PRIMES[d % len(_PRIMES)])
-                      for d in range(dim)])
+    def points(self, start: int, n: int, dim: int) -> np.ndarray:
+        """(n, dim) Halton points for indices start..start+n-1, computed
+        as one array expression per dimension (no per-point Python)."""
+        idx = np.arange(start + 1, start + n + 1, dtype=np.int64)
+        u = np.empty((n, dim), dtype=np.float64)
+        for d in range(dim):
+            u[:, d] = _radical_inverse(idx, _PRIMES[d % len(_PRIMES)])
         if self.scramble:
             shift = np.random.default_rng(self.seed).uniform(size=dim)
             u = (u + shift) % 1.0
         return u
+
+    def point(self, index: int, dim: int) -> np.ndarray:
+        return self.points(index, 1, dim)[0]
 
     def suggest(self, space: SearchSpace, trials: list[Trial],
                 direction: Direction, rng: np.random.Generator) -> dict[str, Any]:

@@ -8,12 +8,18 @@ or called in-process (``DirectTransport``).  Multiple ``HopaasServer``
 "scalable set of Uvicorn instances + shared PostgreSQL" architecture.
 
 Sharding: the server holds one ``StudyContext`` per study — sampler,
-pruner, decoded search space, a per-study RNG, and the storage shard's
-lock.  All request handling serializes on the *per-study* lock, so
-requests for different studies proceed fully in parallel; there is no
-global server lock.  Lease expiry is driven by the storage's per-study
-deadline min-heap, so sweeps touch only expired entries instead of
-scanning every trial.
+pruner, decoded search space, a per-study RNG, the storage shard's
+lock, and an incremental ``ObservationCache``.  All request handling
+serializes on the *per-study* lock, so requests for different studies
+proceed fully in parallel; there is no global server lock.  Lease
+expiry is driven by the storage's per-study deadline min-heap, so
+sweeps touch only expired entries instead of scanning every trial.
+
+Hot-path cost model: `ask` syncs the observation cache (O(1) when
+nothing completed, O(new) otherwise — never a history rescan) and hands
+it to the sampler; `should_prune` heartbeats aggregate over the study's
+per-step report indices; `/api/studies` reads the incrementally raced
+incumbent.  Nothing on the request path scales with trial count.
 
 Batch protocol: ``POST /api/ask_batch`` suggests k trials in one round
 trip (the sampler sees the whole batch at once — ``suggest_batch`` —
@@ -40,6 +46,7 @@ from typing import Any
 import numpy as np
 
 from .auth import AuthError, TokenManager
+from .obs_cache import ObservationCache
 from .pruners import make_pruner
 from .samplers import make_sampler
 from .space import SearchSpace
@@ -61,6 +68,10 @@ class StudyContext:
     pruner: Any
     lock: threading.RLock
     rng: np.random.Generator
+    # incremental (X, y) featurization of this study's observations —
+    # synced from the storage's completion log under the shard lock, so
+    # ask cost no longer scales with history length
+    cache: ObservationCache
 
 
 class HopaasServer:
@@ -81,15 +92,16 @@ class HopaasServer:
     # per-study contexts
     # ------------------------------------------------------------------ #
     def _build_context(self, key: str, config: StudyConfig) -> StudyContext:
+        space = SearchSpace.from_properties(config.properties)
         return StudyContext(
-            key=key, config=config,
-            space=SearchSpace.from_properties(config.properties),
+            key=key, config=config, space=space,
             sampler=make_sampler(config.sampler),
             pruner=make_pruner(config.pruner),
             lock=self.storage.study_lock(key),
             # per-study stream: concurrent asks on different studies must
             # not share one (non-thread-safe) Generator
-            rng=np.random.default_rng([self._seed, int(key[:8], 16)]))
+            rng=np.random.default_rng([self._seed, int(key[:8], 16)]),
+            cache=ObservationCache(space, config.direction))
 
     def _context(self, config: StudyConfig) -> tuple[StudyContext, bool]:
         study, created = self.storage.get_or_create_study(config)
@@ -181,6 +193,10 @@ class HopaasServer:
             kwargs: dict[str, Any] = {}
             if getattr(ctx.sampler, "multi_objective", False):
                 kwargs["signs"] = ctx.config.direction_signs()
+            if getattr(ctx.sampler, "uses_cache", False):
+                # O(1) when nothing completed since the last ask; O(new)
+                # otherwise — never a rescan of the trial list
+                kwargs["cache"] = ctx.cache.sync(self.storage, ctx.key)
             if remaining == 1:
                 params_list = [ctx.sampler.suggest(
                     ctx.space, study.trials, ctx.config.direction, ctx.rng,
@@ -270,6 +286,12 @@ class HopaasServer:
         if trial is None:
             return 404, {"detail": f"unknown trial {uid!r}"}
         ctx = self._context_for_key(trial.study_key)
+        if ctx is None:
+            # the trial exists but its study is not resolvable (e.g. a
+            # partially replayed or externally mutated store) — a client
+            # error, not a server crash
+            return 404, {"detail": f"study {trial.study_key!r} for trial "
+                                   f"{uid!r} is not resolvable"}
         with ctx.lock:
             if trial.state != TrialState.RUNNING:
                 # zombie worker: its lease was revoked (or the trial pruned)
@@ -293,7 +315,8 @@ class HopaasServer:
         for s in self.storage.studies():
             with self.storage.study_lock(s.key):
                 counts = self.storage.counts(s.key)
-                best = s.best_trial()
+                # incumbent is tracked incrementally on tell — no scan
+                best = self.storage.best_trial(s.key)
                 rec = {
                     "key": s.key, "name": s.config.name,
                     "n_trials": len(s.trials),

@@ -17,11 +17,19 @@ superseded entry in the heap; it is dropped when popped because the
 trial's *current* deadline is newer).  Sweeps are O(expired · log n)
 instead of a full scan of every trial of every study.
 
+Read-side acceleration: every shard carries a mutation ``version``
+counter, an append-only ``completed_log`` of trials that became
+observations (consumed incrementally by per-study ``ObservationCache``s
+so `ask` never rescans the history), and an incrementally raced
+incumbent (``best_trial`` is O(1), no scan).  Intermediate reports feed
+the study's per-step / per-rung indices (see ``types.Study``) so pruner
+heartbeats aggregate without walking the trial list.
+
 An optional append-only JSONL write-ahead journal (``JournalStorage``)
 provides crash-restart recovery: every mutation is journaled under the
 owning shard's lock (so per-study order is preserved) before being
 acknowledged, and ``replay`` reconstructs the full state — including the
-indices and lease heap — from the log.
+indices, lease heap, completion log, and incumbent — from the log.
 """
 from __future__ import annotations
 
@@ -32,14 +40,14 @@ import threading
 from collections import deque
 from typing import Any, Callable
 
-from .types import Study, StudyConfig, Trial, TrialState
+from .types import Direction, Study, StudyConfig, Trial, TrialState
 
 
 class _StudyShard:
     """Everything the storage tracks for one study, under one lock."""
 
     __slots__ = ("study", "lock", "by_uid", "state_uids", "lease_heap",
-                 "waiting")
+                 "waiting", "version", "completed_log", "best_uid")
 
     def __init__(self, study: Study):
         self.study = study
@@ -51,6 +59,17 @@ class _StudyShard:
         # ones are dropped lazily on pop
         self.lease_heap: list[tuple[float, str]] = []
         self.waiting: deque[dict[str, Any]] = deque()
+        # monotonically increasing mutation counter: bumped on every shard
+        # mutation, so read-side caches can detect staleness with one int
+        # compare instead of scanning
+        self.version = 0
+        # append-only log of trial uids in the order they became
+        # observations (COMPLETED with a value) — consumed incrementally
+        # by per-study ObservationCaches
+        self.completed_log: list[str] = []
+        # incumbent: uid of the best completed trial (strictly-better
+        # replacement, so ties keep the earliest completion)
+        self.best_uid: str | None = None
 
 
 class InMemoryStorage:
@@ -68,6 +87,7 @@ class InMemoryStorage:
             if shard is not None:
                 return shard.study, False
             study = Study(config=config)
+            study._managed = True       # mutations route through this store
             self._shards[key] = shard = _StudyShard(study)
             with shard.lock:
                 self._log({"op": "create_study", "config": config.to_record()})
@@ -96,10 +116,30 @@ class InMemoryStorage:
     def _index_trial(self, shard: _StudyShard, trial: Trial) -> None:
         """Append ``trial`` to the shard and maintain every index."""
         shard.study.trials.append(trial)
+        shard.study.note_trial_added()
         shard.by_uid[trial.uid] = trial
         shard.state_uids[trial.state].add(trial.uid)
         if trial.state == TrialState.RUNNING and trial.lease_deadline is not None:
             heapq.heappush(shard.lease_heap, (trial.lease_deadline, trial.uid))
+        shard.version += 1
+        if trial.state == TrialState.COMPLETED and trial.value is not None:
+            self._note_observation(shard, trial)
+
+    @staticmethod
+    def _note_observation(shard: _StudyShard, trial: Trial) -> None:
+        """A trial just became an observation: log it and race the incumbent.
+        Tie-break on equal values by lowest trial_id, matching the
+        ``Study.best_trial()`` scan exactly."""
+        shard.completed_log.append(trial.uid)
+        sign = (1.0 if shard.study.config.direction == Direction.MINIMIZE
+                else -1.0)
+        best = (shard.by_uid.get(shard.best_uid)
+                if shard.best_uid is not None else None)
+        if (best is None or best.value is None
+                or sign * trial.value < sign * best.value
+                or (sign * trial.value == sign * best.value
+                    and trial.trial_id < best.trial_id)):
+            shard.best_uid = trial.uid
 
     def add_trial(self, study_key: str, params: dict[str, Any],
                   worker_id: str | None, lease_deadline: float | None,
@@ -133,10 +173,13 @@ class InMemoryStorage:
             trial = shard.by_uid.get(uid)
             if trial is None:
                 raise KeyError(uid)
+            was_observation = (trial.state == TrialState.COMPLETED
+                               and trial.value is not None)
             for k, v in fields.items():
                 if k == "intermediate":            # (step, value) append
                     step, value = v
                     trial.intermediates[int(step)] = float(value)
+                    shard.study.record_report(uid, int(step), float(value))
                 elif k == "state":
                     if v != trial.state:
                         shard.state_uids[trial.state].discard(uid)
@@ -148,6 +191,10 @@ class InMemoryStorage:
                         heapq.heappush(shard.lease_heap, (float(v), uid))
                 else:
                     setattr(trial, k, v)
+            shard.version += 1
+            if (not was_observation and trial.state == TrialState.COMPLETED
+                    and trial.value is not None):
+                self._note_observation(shard, trial)
             self._log({"op": "update_trial", "uid": uid,
                        "fields": {k: (list(v) if k == "intermediate" else
                                       (v.value if isinstance(v, TrialState) else v))
@@ -169,6 +216,35 @@ class InMemoryStorage:
             return []
         with shard.lock:
             return [shard.by_uid[u] for u in shard.state_uids[state]]
+
+    def data_version(self, study_key: str) -> int:
+        """Shard mutation counter — equal versions mean nothing changed."""
+        shard = self._shard(study_key)
+        if shard is None:
+            return -1
+        with shard.lock:
+            return shard.version
+
+    def completed_since(self, study_key: str, position: int) -> list[Trial]:
+        """Observations (COMPLETED trials with a value) appended to the
+        shard's completion log at index >= ``position``, in completion
+        order.  O(new) — the incremental feed for ObservationCache."""
+        shard = self._shard(study_key)
+        if shard is None:
+            return []
+        with shard.lock:
+            return [shard.by_uid[u]
+                    for u in shard.completed_log[position:]]
+
+    def best_trial(self, study_key: str) -> Trial | None:
+        """The incumbent, maintained incrementally on completion — O(1),
+        no trial scan (ties keep the earliest completion)."""
+        shard = self._shard(study_key)
+        if shard is None:
+            return None
+        with shard.lock:
+            return (None if shard.best_uid is None
+                    else shard.by_uid.get(shard.best_uid))
 
     # -- lease heap ------------------------------------------------------
     def pop_expired(self, study_key: str, now: float) -> list[Trial]:
@@ -213,6 +289,7 @@ class InMemoryStorage:
             raise KeyError(study_key)
         with shard.lock:
             shard.waiting.append({"params": params, "retries": retries})
+            shard.version += 1
             self._log({"op": "enqueue", "study_key": study_key,
                        "params": params, "retries": retries})
 
@@ -223,6 +300,7 @@ class InMemoryStorage:
         with shard.lock:
             if shard.waiting:
                 item = shard.waiting.popleft()
+                shard.version += 1
                 self._log({"op": "pop_waiting", "study_key": study_key})
                 return item
             return None

@@ -134,10 +134,116 @@ class Study:
     config: StudyConfig
     trials: list[Trial] = dataclasses.field(default_factory=list)
     created_at: float = dataclasses.field(default_factory=time.time)
+    # -- runtime read-path indices (never serialized) -------------------
+    # step -> {trial_uid -> latest reported value}; lets the median /
+    # percentile / SHA pruner heartbeats aggregate over "who reported at
+    # this step" without scanning every trial's intermediates dict.
+    _step_reports: dict[int, dict[str, float]] | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _last_steps: dict[str, int] = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    # (resource, sign) -> {uid -> best sign*value within the resource};
+    # built on first SHA/hyperband query, then maintained per report
+    _rung_cache: dict[tuple[int, float], dict[str, float]] = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _indexed_trials: int = dataclasses.field(
+        default=0, init=False, repr=False, compare=False)
+    # True only for studies owned by a storage layer, which routes every
+    # mutation through record_report/note_trial_added under the shard
+    # lock — the precondition for trusting the incremental indices
+    _managed: bool = dataclasses.field(
+        default=False, init=False, repr=False, compare=False)
 
     @property
     def key(self) -> str:
         return self.config.key()
+
+    # -- incremental report index --------------------------------------
+    # Maintained by the storage layer under the shard lock: every
+    # ``update_trial(intermediate=...)`` calls ``record_report`` and every
+    # ``add_trial`` calls ``note_trial_added``.  Studies built by hand
+    # (tests, library use) are not managed and rebuild the index on every
+    # query — the pre-cache live-scan semantics, so direct mutation of
+    # ``trial.intermediates`` is always observed.
+    def _ensure_index(self) -> None:
+        if (self._managed and self._step_reports is not None
+                and self._indexed_trials == len(self.trials)):
+            return
+        idx: dict[int, dict[str, float]] = {}
+        last: dict[str, int] = {}
+        for t in self.trials:
+            for s, v in t.intermediates.items():
+                idx.setdefault(s, {})[t.uid] = v
+            if t.intermediates:
+                last[t.uid] = max(t.intermediates)
+        self._step_reports = idx
+        self._last_steps = last
+        self._rung_cache = {}
+        self._indexed_trials = len(self.trials)
+
+    def note_trial_added(self) -> None:
+        """O(1) index maintenance for a freshly created (report-less) trial."""
+        if (self._managed and self._step_reports is not None
+                and self._indexed_trials == len(self.trials) - 1):
+            self._indexed_trials += 1
+
+    def record_report(self, uid: str, step: int, value: float) -> None:
+        """O(1) index maintenance for one intermediate report."""
+        if (not self._managed or self._step_reports is None
+                or self._indexed_trials != len(self.trials)):
+            return                      # stale: next query rebuilds anyway
+        reports = self._step_reports.setdefault(step, {})
+        re_report = uid in reports
+        reports[uid] = value
+        if step > self._last_steps.get(uid, -1):
+            self._last_steps[uid] = step
+        for (resource, sign), rung in self._rung_cache.items():
+            if step + 1 > resource:
+                continue
+            if not re_report:
+                sv = sign * value
+                if sv < rung.get(uid, float("inf")):
+                    rung[uid] = sv
+            else:
+                # a step's value was *replaced* (client retry): the min is
+                # not incrementally updatable, recompute this uid's entry
+                # from its latest-per-step reports
+                rung[uid] = min(
+                    sign * reps[uid]
+                    for s, reps in self._step_reports.items()
+                    if s + 1 <= resource and uid in reps)
+
+    def reports_at(self, step: int) -> dict[str, float]:
+        """{trial_uid: latest value reported at ``step``} from the index."""
+        self._ensure_index()
+        return self._step_reports.get(step, {})
+
+    def _rung_snapshot(self, resource: int, sign: float) -> dict[str, float]:
+        self._ensure_index()
+        key = (int(resource), float(sign))
+        snap = self._rung_cache.get(key)
+        if snap is None:
+            snap = {}
+            for s, reports in self._step_reports.items():
+                if s + 1 <= resource:
+                    for uid, v in reports.items():
+                        sv = sign * v
+                        if sv < snap.get(uid, float("inf")):
+                            snap[uid] = sv
+            self._rung_cache[key] = snap
+        return snap
+
+    def rung_value(self, uid: str, resource: int, sign: float) -> float | None:
+        """Best sign*value ``uid`` achieved within ``resource`` steps."""
+        return self._rung_snapshot(resource, sign).get(uid)
+
+    def rung_competitors(self, resource: int, sign: float,
+                         exclude_uid: str) -> list[float]:
+        """Rung values of every *other* trial that reached the rung."""
+        snap = self._rung_snapshot(resource, sign)
+        last = self._last_steps
+        return [v for uid, v in snap.items()
+                if uid != exclude_uid and last.get(uid, -1) + 1 >= resource]
 
     def completed(self) -> list[Trial]:
         return [t for t in self.trials if t.state == TrialState.COMPLETED]

@@ -1,0 +1,346 @@
+"""Cache-coherence and codec-equivalence regression tests.
+
+The incremental ``ObservationCache`` must stay *bit-identical* to the
+from-scratch ``Sampler.observations`` scan through every mutation the
+service can apply (tell / prune / fail / lease-expiry requeue) and across
+journal replay, and the vectorized space codec must agree with the scalar
+per-kind reference — otherwise cached and uncached asks would propose
+different points.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.obs_cache import ObservationCache
+from repro.core.samplers import make_sampler
+from repro.core.samplers.base import Sampler
+from repro.core.server import HopaasServer
+from repro.core.space import Param, SearchSpace
+from repro.core.storage import InMemoryStorage, JournalStorage
+from repro.core.types import Direction, StudyConfig, TrialState
+
+PROPS = {"x": {"type": "uniform", "low": -5, "high": 5},
+         "lr": {"type": "loguniform", "low": 1e-5, "high": 1e-1},
+         "n": {"type": "int", "low": 2, "high": 9},
+         "c": {"type": "categorical", "choices": ["a", "b", "c"]}}
+
+
+def _scratch(ctx, storage):
+    study = storage.get_study(ctx.key)
+    return Sampler.observations(ctx.space, study.trials, ctx.config.direction)
+
+
+def _assert_coherent(ctx, storage):
+    ctx.cache.sync(storage, ctx.key)
+    Xc, yc = ctx.cache.observations()
+    Xs, ys = _scratch(ctx, storage)
+    assert Xc.shape == Xs.shape and yc.shape == ys.shape
+    assert np.array_equal(Xc, Xs), "cache X diverged from scratch scan"
+    assert np.array_equal(yc, ys), "cache y diverged from scratch scan"
+
+
+def _drive_sequence(server, body):
+    """Mixed tell/prune/fail/requeue traffic; checks coherence throughout."""
+    ident = {"user": "t"}
+    rng = np.random.default_rng(7)
+    pruned_at = {3, 11}
+    failed_at = {5, 13}
+    for i in range(24):
+        status, payload = server._ask(dict(body), ident)
+        assert status == 200
+        uid = payload["trial_uid"]
+        ctx = server._context_for_key(payload["study_key"])
+        _assert_coherent(ctx, server.storage)
+        if i in pruned_at:       # server-side prune via heartbeat
+            server._should_prune({"trial_uid": uid, "step": 0, "value": 1e9})
+            server._tell({"trial_uid": uid, "value": float(rng.uniform()),
+                          "state": "pruned"})
+        elif i in failed_at:     # worker died after reporting
+            server._tell({"trial_uid": uid, "value": None, "state": "failed"})
+        else:
+            server._tell({"trial_uid": uid,
+                          "value": float(rng.uniform(-10, 10)),
+                          "state": "completed"})
+        _assert_coherent(ctx, server.storage)
+    return ctx
+
+
+def test_cache_matches_scratch_through_mixed_traffic():
+    server = HopaasServer(seed=0)
+    body = {"name": "coherence", "properties": PROPS,
+            "sampler": {"name": "tpe", "n_startup_trials": 4}}
+    ctx = _drive_sequence(server, body)
+    Xc, yc = ctx.cache.observations()
+    assert len(yc) == 24 - 2 - 2      # minus 2 failed, minus 2 pruned
+    # pruned trials must not be observations
+    study = server.storage.get_study(ctx.key)
+    n_completed = sum(t.state == TrialState.COMPLETED for t in study.trials)
+    assert len(yc) == n_completed
+
+
+def test_cache_coherent_across_requeue():
+    server = HopaasServer(seed=1, lease_seconds=0.01)
+    body = {"name": "requeue", "properties": PROPS,
+            "sampler": {"name": "tpe", "n_startup_trials": 2}}
+    ident = {"user": "t"}
+    _, p1 = server._ask(dict(body), ident)
+    ctx = server._context_for_key(p1["study_key"])
+    time.sleep(0.03)                   # lease lapses -> FAILED + requeue
+    _, p2 = server._ask(dict(body), ident)
+    assert p2["properties"] == p1["properties"]   # requeued params
+    _assert_coherent(ctx, server.storage)
+    server._tell({"trial_uid": p2["trial_uid"], "value": 1.0,
+                  "state": "completed"})
+    _assert_coherent(ctx, server.storage)
+
+
+def test_cache_coherent_after_journal_replay(tmp_path):
+    path = os.path.join(tmp_path, "journal.jsonl")
+    server = HopaasServer(storage=JournalStorage(path), seed=3)
+    body = {"name": "replay", "properties": PROPS,
+            "sampler": {"name": "tpe", "n_startup_trials": 4}}
+    ctx = _drive_sequence(server, body)
+    before = ctx.cache.observations()
+    server.storage.close()
+
+    restarted = HopaasServer(storage=JournalStorage(path), seed=3)
+    ctx2 = restarted._context_for_key(ctx.key)
+    assert ctx2 is not None
+    _assert_coherent(ctx2, restarted.storage)
+    after = ctx2.cache.observations()
+    assert np.array_equal(before[0], after[0])
+    assert np.array_equal(before[1], after[1])
+    restarted.storage.close()
+
+
+@pytest.mark.parametrize("name", ["tpe", "gp", "cmaes"])
+def test_cached_and_uncached_proposals_identical(name):
+    """The cache must not change what the sampler proposes — same rng,
+    same history, with/without cache => byte-identical params."""
+    space = SearchSpace.from_properties(PROPS)
+    cfg = StudyConfig(name="ident", properties=PROPS)
+    storage = InMemoryStorage()
+    study, _ = storage.get_or_create_study(cfg)
+    rng = np.random.default_rng(5)
+    for i in range(20):
+        t = storage.add_trial(study.key, space.sample_uniform(rng), None, None)
+        storage.update_trial(t.uid, value=float(rng.uniform(-3, 3)),
+                             state=TrialState.COMPLETED, lease_deadline=None)
+    cache = ObservationCache(space, cfg.direction)
+    cache.sync(storage, study.key)
+
+    s1 = make_sampler({"name": name})
+    s2 = make_sampler({"name": name})
+    r1 = np.random.default_rng(42)
+    r2 = np.random.default_rng(42)
+    p_cached = s1.suggest(space, study.trials, cfg.direction, r1, cache=cache)
+    p_scratch = s2.suggest(space, study.trials, cfg.direction, r2)
+    assert p_cached == p_scratch
+
+
+def test_cache_padded_pow2_signature_stability():
+    space = SearchSpace.from_properties(PROPS)
+    cfg = StudyConfig(name="pad", properties=PROPS)
+    storage = InMemoryStorage()
+    study, _ = storage.get_or_create_study(cfg)
+    cache = ObservationCache(space, cfg.direction)
+    rng = np.random.default_rng(0)
+    shapes = set()
+    for i in range(40):
+        t = storage.add_trial(study.key, space.sample_uniform(rng), None, None)
+        storage.update_trial(t.uid, value=float(i), state=TrialState.COMPLETED,
+                             lease_deadline=None)
+        cache.sync(storage, study.key)
+        X, y, mask = cache.padded()
+        assert X.shape[0] == y.shape[0] == mask.shape[0]
+        assert X.shape[0] & (X.shape[0] - 1) == 0       # power of two
+        assert int(mask.sum()) == i + 1
+        shapes.add(X.shape)
+    # 40 observations -> only the pow-2 ladder of shapes, not 40 distinct
+    assert len(shapes) <= 4
+
+
+def test_incremental_best_matches_scan():
+    for direction in (Direction.MINIMIZE, Direction.MAXIMIZE):
+        cfg = StudyConfig(name=f"best-{direction.value}", properties=PROPS,
+                          direction=direction)
+        storage = InMemoryStorage()
+        study, _ = storage.get_or_create_study(cfg)
+        space = SearchSpace.from_properties(PROPS)
+        rng = np.random.default_rng(11)
+        for i in range(30):
+            t = storage.add_trial(study.key, space.sample_uniform(rng),
+                                  None, None)
+            if i % 5 == 3:
+                storage.update_trial(t.uid, state=TrialState.FAILED,
+                                     lease_deadline=None)
+                continue
+            storage.update_trial(t.uid, value=float(rng.uniform(-9, 9)),
+                                 state=TrialState.COMPLETED,
+                                 lease_deadline=None)
+            fast = storage.best_trial(study.key)
+            slow = study.best_trial()
+            assert fast is not None and slow is not None
+            assert fast.value == slow.value
+
+
+# ---------------------------------------------------------------------- #
+# vectorized codec vs the scalar per-kind reference
+# ---------------------------------------------------------------------- #
+KIND_PARAMS = [
+    Param(name="u", kind="uniform", low=-5.0, high=5.0),
+    Param(name="lg", kind="loguniform", low=1e-6, high=1e2),
+    Param(name="i", kind="int", low=-3, high=12),
+    Param(name="li", kind="logint", low=1, high=4096),
+    Param(name="c", kind="categorical", choices=("a", "b", "c", "d", "e")),
+]
+
+
+@pytest.mark.parametrize("param", KIND_PARAMS, ids=lambda p: p.kind)
+def test_vector_codec_matches_scalar_per_kind(param):
+    space = SearchSpace([param])
+    us = np.linspace(0.0, 1.0, 257)[:, None]
+    decoded = space.from_unit_matrix(us)
+    for row, u in zip(decoded, us[:, 0]):
+        ref = param.from_unit(u)
+        if isinstance(ref, float):
+            assert row[param.name] == pytest.approx(ref, rel=1e-12)
+        else:
+            assert row[param.name] == ref
+    encoded = space.to_unit_matrix(decoded)
+    for enc, row in zip(encoded[:, 0], decoded):
+        assert enc == pytest.approx(param.to_unit(row[param.name]),
+                                    rel=1e-9, abs=1e-12)
+
+
+def test_all_constant_space_decodes():
+    """dim-0 spaces (every property pinned to a constant) must decode to
+    the constants dict, not crash the vectorized codec."""
+    space = SearchSpace.from_properties({"lr": 0.1, "opt": "adam"})
+    assert space.dim == 0
+    rng = np.random.default_rng(0)
+    assert space.sample_uniform(rng) == {"lr": 0.1, "opt": "adam"}
+    assert space.from_unit_vector(np.zeros(0)) == {"lr": 0.1, "opt": "adam"}
+    assert space.grid() == [{"lr": 0.1, "opt": "adam"}]
+    for name in ("random", "tpe", "gp", "cmaes", "halton"):
+        s = make_sampler({"name": name})
+        assert s.suggest(space, [], Direction.MINIMIZE, rng) == \
+            {"lr": 0.1, "opt": "adam"}
+
+
+def test_categorical_equal_width_bins():
+    """Uniform candidates must weight every choice equally (the old
+    round(u*(n-1)) binning gave edge choices half-width bins)."""
+    p = Param(name="c", kind="categorical", choices=("a", "b", "c", "d"))
+    us = np.linspace(0.0, 1.0, 4000, endpoint=False)
+    space = SearchSpace([p])
+    rows = space.from_unit_matrix(us[:, None])
+    counts = {ch: 0 for ch in p.choices}
+    for r in rows:
+        counts[r["c"]] += 1
+    assert max(counts.values()) == min(counts.values())
+    for ch in p.choices:            # inverse maps back into the same bin
+        assert p.from_unit(p.to_unit(ch)) == ch
+        assert space.from_unit_matrix(
+            np.array([[p.to_unit(ch)]]))[0]["c"] == ch
+
+
+# ---------------------------------------------------------------------- #
+# incremental pruner indices vs a reference scan
+# ---------------------------------------------------------------------- #
+def test_step_report_index_matches_scan():
+    server = HopaasServer(seed=2)
+    body = {"name": "reports", "properties": {"x": PROPS["x"]},
+            "sampler": {"name": "random"}, "pruner": {"name": "median"}}
+    ident = {"user": "t"}
+    rng = np.random.default_rng(3)
+    uids = []
+    for i in range(8):
+        _, p = server._ask(dict(body), ident)
+        uids.append(p["trial_uid"])
+        for step in range(1 + int(rng.integers(0, 4))):
+            server._should_prune({"trial_uid": p["trial_uid"], "step": step,
+                                  "value": float(rng.uniform())})
+        server._tell({"trial_uid": p["trial_uid"],
+                      "value": float(rng.uniform()), "state": "completed"})
+    ctx = server._context_for_key(p["study_key"])
+    study = server.storage.get_study(ctx.key)
+    for step in range(4):
+        ref = {t.uid: t.intermediates[step] for t in study.trials
+               if step in t.intermediates}
+        assert study.reports_at(step) == ref
+
+
+def test_unmanaged_study_sees_inplace_report_mutation():
+    """Hand-built studies (direct Pruner API use) must keep live-scan
+    semantics: mutating trial.intermediates in place is always observed."""
+    from repro.core.types import Study, Trial
+
+    cfg = StudyConfig(name="um", properties={})
+    trials = [Trial(trial_id=i, uid=f"um:{i}", study_key="um", params={},
+                    state=TrialState.RUNNING, intermediates={0: float(i)})
+              for i in range(3)]
+    study = Study(config=cfg, trials=trials)
+    assert study.reports_at(0) == {"um:0": 0.0, "um:1": 1.0, "um:2": 2.0}
+    trials[1].intermediates[1] = 7.0          # in-place, no append
+    assert study.reports_at(1) == {"um:1": 7.0}
+
+
+def test_rung_cache_consistent_on_step_rereport():
+    """Re-reporting a step (client retry) replaces its value; the rung
+    snapshot must agree with a from-scratch rebuild, not keep the min of
+    old and new."""
+    server = HopaasServer(seed=4)
+    body = {"name": "rereport", "properties": {"x": PROPS["x"]},
+            "sampler": {"name": "random"},
+            "pruner": {"name": "sha", "min_resource": 1}}
+    ident = {"user": "t"}
+    _, p = server._ask(dict(body), ident)
+    server._should_prune({"trial_uid": p["trial_uid"], "step": 0, "value": 1.0})
+    ctx = server._context_for_key(p["study_key"])
+    study = server.storage.get_study(ctx.key)
+    assert study.rung_value(p["trial_uid"], 1, 1.0) == 1.0
+    server._should_prune({"trial_uid": p["trial_uid"], "step": 0, "value": 9.0})
+    incremental = study.rung_value(p["trial_uid"], 1, 1.0)
+    study._step_reports = None                 # force full rebuild
+    rebuilt = study.rung_value(p["trial_uid"], 1, 1.0)
+    assert incremental == rebuilt == 9.0
+
+
+def test_incumbent_tie_breaks_by_trial_id():
+    """Equal values: storage.best_trial must name the lowest trial_id,
+    exactly like the Study.best_trial() scan, regardless of completion
+    order."""
+    cfg = StudyConfig(name="tie", properties=PROPS)
+    storage = InMemoryStorage()
+    study, _ = storage.get_or_create_study(cfg)
+    t0 = storage.add_trial(study.key, {"x": 0.0}, None, None)
+    t1 = storage.add_trial(study.key, {"x": 1.0}, None, None)
+    storage.update_trial(t1.uid, value=0.5, state=TrialState.COMPLETED,
+                         lease_deadline=None)   # trial 1 completes first
+    storage.update_trial(t0.uid, value=0.5, state=TrialState.COMPLETED,
+                         lease_deadline=None)
+    assert storage.best_trial(study.key).trial_id == \
+        study.best_trial().trial_id == 0
+
+
+def test_should_prune_unresolvable_study_is_404():
+    """A trial whose study context cannot be resolved must yield a clean
+    404, not a 500 from dereferencing a None context."""
+    class AmnesiacStorage(InMemoryStorage):
+        def get_study(self, key):
+            return None             # simulates a partially replayed store
+
+    storage = AmnesiacStorage()
+    server = HopaasServer(storage=storage)
+    cfg = StudyConfig(name="ghost", properties={"x": PROPS["x"]})
+    study, _ = InMemoryStorage.get_or_create_study(storage, cfg)
+    trial = storage.add_trial(study.key, {"x": 0.0}, None, None)
+    server._contexts.clear()        # force the _context_for_key lookup
+    status, payload = server.handle(
+        "POST", f"/api/should_prune/{server.tokens.issue('t')}",
+        {"trial_uid": trial.uid, "step": 0, "value": 1.0})
+    assert status == 404
+    assert "not resolvable" in payload["detail"]
