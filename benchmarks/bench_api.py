@@ -1,7 +1,8 @@
 """Paper sec. 3 — service architecture: API latency/throughput across
-transports, horizontal scaling (Uvicorn x N behind the proxy role), and
-the sharded-core scenarios: contended multi-study load and the batched
-ask/tell protocol.
+transports, horizontal scaling (Uvicorn x N behind the proxy role), the
+sharded-core scenarios (contended multi-study load, batched ask/tell),
+and the wire-layer overhead of the typed v2 surface vs the v1 shim
+(router + schema validation cost per request).
 
 Columns: scenario, transport, workers, requests, wall_s, req_per_s,
 trials_per_s.  ``trials_per_s`` is the ask+tell pair throughput — the
@@ -37,6 +38,22 @@ def _drive(transport, token, n_trials: int) -> float:
     for _ in range(n_trials):
         with study.trial() as t:
             t.loss = (t.x - 0.3) ** 2
+    return time.time() - t0
+
+
+def _drive_v1(transport, token, n_trials: int) -> float:
+    """The same ask/tell loop through the v1 compat shim (token in path,
+    spec inline on every ask) — the pre-v2 wire protocol."""
+    client = Client(transport, token)
+    spec = {"name": "bench-api-v1",
+            "properties": {"x": suggestions.uniform(0.0, 1.0)},
+            "sampler": {"name": "random"}}
+    t0 = time.time()
+    for _ in range(n_trials):
+        trial = client._post("ask", dict(spec))
+        value = (trial["properties"]["x"] - 0.3) ** 2
+        client._post("tell", {"trial_uid": trial["trial_uid"],
+                              "value": value})
     return time.time() - t0
 
 
@@ -118,6 +135,26 @@ def run(n_trials: int = 200, smoke: bool = False) -> list[dict]:
         finally:
             runner.stop()
         rows.append(_row("single-study", label, 1, 2 * n_trials, dt, n_trials))
+
+    # -- wire-layer overhead: v1 shim vs typed v2, same core -------------
+    # DirectTransport isolates the router + schema-validation cost from
+    # socket noise; HTTP shows what real clients see.
+    for label, driver in (("direct-v1", _drive_v1), ("direct-v2", _drive)):
+        server = HopaasServer(storage=InMemoryStorage(), tokens=tokens)
+        dt = driver(DirectTransport(server), tok, n_trials)
+        rows.append(_row("proto-overhead", label, 1, 2 * n_trials, dt,
+                         n_trials))
+    for label, driver in (("http-v1", _drive_v1), ("http-v2", _drive)):
+        storage = InMemoryStorage()
+        runner = HttpServiceRunner(
+            [HopaasServer(storage=storage, tokens=tokens)]).start()
+        try:
+            dt = driver(HttpTransport(runner.host, runner.port), tok,
+                        n_trials)
+        finally:
+            runner.stop()
+        rows.append(_row("proto-overhead", label, 1, 2 * n_trials, dt,
+                         n_trials))
 
     # -- contended multi-study load: 8 client workers x 4 studies --------
     n_client_workers, n_studies = 8, 4

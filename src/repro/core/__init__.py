@@ -1,19 +1,25 @@
 """HOPAAS core — the paper's primary contribution.
 
 Hyperparameter OPtimization As A Service: a client/server protocol
-(`ask` / `tell` / `should_prune` / `version`, plus the batched
-`ask_batch` / `tell_batch` extension) coordinating gradient-less
-optimization studies across heterogeneous, elastic compute.  The service
-core is sharded per study (see ``server.StudyContext``): requests for
-different studies never contend on a common lock.
+coordinating gradient-less optimization studies across heterogeneous,
+elastic compute.  The wire layer is a versioned, resource-oriented REST
+surface (``repro.core.api``): typed schemas validated at the boundary, a
+declarative router, bearer-header auth, and paginated monitoring
+endpoints — with the paper's original RPC endpoints (`ask` / `tell` /
+`should_prune` / `version`, plus the batched `ask_batch` / `tell_batch`
+extension) mounted as a byte-compatible v1 shim over the same core.
+The service core is sharded per study (see ``server.StudyContext``):
+requests for different studies never contend on a common lock.
 """
+from .api import ApiError, Route, Router, build_openapi, build_router
 from .auth import AuthError, TokenManager
-from .client import Client, HopaasError, Study as ClientStudy, Trial as ClientTrial, suggestions
+from .client import (Client, HopaasError, RetryPolicy, Study as ClientStudy,
+                     Trial as ClientTrial, suggestions)
 from .obs_cache import ObservationCache
 from .campaign import CampaignResult, run_campaign
-from .pruners import make_pruner
+from .pruners import known_pruners, make_pruner
 from .report import convergence_trace, format_report, study_summary
-from .samplers import make_sampler
+from .samplers import known_samplers, make_sampler
 from .server import HOPAAS_VERSION, HopaasServer, StudyContext
 from .space import Param, SearchSpace
 from .storage import InMemoryStorage, JournalStorage
@@ -22,10 +28,12 @@ from .transport import (DirectTransport, HttpServiceRunner, HttpTransport,
 from .types import Direction, Study, StudyConfig, Trial, TrialState
 
 __all__ = [
-    "AuthError", "TokenManager", "Client", "HopaasError", "ClientStudy",
-    "ClientTrial", "suggestions", "CampaignResult", "run_campaign",
-    "make_pruner", "convergence_trace", "format_report", "study_summary",
-    "make_sampler", "HOPAAS_VERSION", "HopaasServer", "StudyContext",
+    "ApiError", "Route", "Router", "build_openapi", "build_router",
+    "AuthError", "TokenManager", "Client", "HopaasError", "RetryPolicy",
+    "ClientStudy", "ClientTrial", "suggestions", "CampaignResult",
+    "run_campaign", "make_pruner", "known_pruners", "convergence_trace",
+    "format_report", "study_summary", "make_sampler", "known_samplers",
+    "HOPAAS_VERSION", "HopaasServer", "StudyContext",
     "ObservationCache", "Param", "SearchSpace",
     "InMemoryStorage", "JournalStorage", "DirectTransport",
     "HttpServiceRunner", "HttpTransport", "RoundRobinTransport", "Transport",

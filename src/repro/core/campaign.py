@@ -16,6 +16,7 @@ import numpy as np
 
 from .client import Client, HopaasError, Study, Trial
 from .transport import Transport
+from .types import Direction, StudyConfig
 
 
 def _safe_tell(study: Study, trial: Trial, value: float | None,
@@ -111,11 +112,20 @@ def run_campaign(objective: Objective, *, study_spec: dict[str, Any],
     for t in threads:
         t.join()
 
-    # summarize through the service API (what the web UI would show)
+    # summarize through the service API (what the web UI would show):
+    # the study key is content-addressed, so it can be derived locally and
+    # its v2 resource fetched directly — a pure read (no study list scan,
+    # and no accidental create if every worker died before its first ask)
     client = Client(transport_factory(), token)
-    summary = [s for s in client.studies()
-               if s["name"] == study_spec.get("name")]
-    s = summary[0] if summary else {}
+    probe = Study(client=client, **study_spec)
+    key = StudyConfig(
+        name=probe.name, properties=probe.properties,
+        direction=Direction(probe.direction), sampler=probe.sampler,
+        pruner=probe.pruner, directions=probe.directions).key()
+    try:
+        s: dict[str, Any] = client.study(key)
+    except HopaasError:
+        s = {}
     return CampaignResult(
         n_trials=s.get("n_trials", 0), n_completed=s.get("n_completed", 0),
         n_pruned=s.get("n_pruned", 0), n_failed=s.get("n_failed", 0),

@@ -21,6 +21,11 @@ _REGISTRY = {
 }
 
 
+def known_pruners() -> list[str]:
+    """Registered pruner names (used by the API schema validation)."""
+    return sorted(_REGISTRY)
+
+
 def make_pruner(spec: dict[str, Any]) -> Pruner:
     spec = dict(spec or {"name": "none"})
     name = spec.pop("name", "none")
@@ -31,6 +36,6 @@ def make_pruner(spec: dict[str, Any]) -> Pruner:
     return cls(**spec)
 
 
-__all__ = ["Pruner", "make_pruner", "NonePruner", "MedianPruner",
+__all__ = ["Pruner", "make_pruner", "known_pruners", "NonePruner", "MedianPruner",
            "PercentilePruner", "SuccessiveHalvingPruner", "HyperbandPruner",
            "PatientPruner"]

@@ -34,6 +34,11 @@ _REGISTRY = {
 }
 
 
+def known_samplers() -> list[str]:
+    """Registered sampler names (used by the API schema validation)."""
+    return sorted(_REGISTRY)
+
+
 def make_sampler(spec: dict[str, Any]) -> Sampler:
     spec = dict(spec or {"name": "tpe"})
     name = spec.pop("name", "tpe")
@@ -44,5 +49,5 @@ def make_sampler(spec: dict[str, Any]) -> Sampler:
     return cls(**spec)
 
 
-__all__ = ["Sampler", "make_sampler", "RandomSampler", "GridSampler",
+__all__ = ["Sampler", "make_sampler", "known_samplers", "RandomSampler", "GridSampler",
            "QuasiRandomSampler", "TPESampler", "GPSampler", "CmaEsSampler"]

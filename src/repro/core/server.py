@@ -1,11 +1,21 @@
 """The HOPAAS server: ask / tell / should_prune / version (paper Table 1),
-plus the batched ask_batch / tell_batch extension.
+the batched ask_batch / tell_batch extension, and the v2 resource surface.
 
-``HopaasServer.handle(method, path, body)`` is transport-independent — the
-same handler is mounted behind the stdlib HTTP transport (the Uvicorn role)
-or called in-process (``DirectTransport``).  Multiple ``HopaasServer``
-*workers* may share one storage object, reproducing the paper's
-"scalable set of Uvicorn instances + shared PostgreSQL" architecture.
+The wire layer is declarative (``repro.core.api``): routes are data —
+method + path template + typed schemas — dispatched by a router that
+enforces validation, header auth, 405-with-Allow, and structured error
+envelopes *before* a handler runs.  ``HopaasServer`` itself exposes
+transport-independent core operations (``op_ask``/``op_tell``/...) that
+raise ``ApiError`` for client failures; the v1 compat shim and the v2
+resource routes are both thin adapters over the same ops, mounted by
+``api.build_router``.
+
+``handle_request(method, path, body, headers)`` is the full entry point
+(status, payload, response headers); ``handle(method, path, body)`` is
+the pre-router signature kept for in-process callers.  Multiple
+``HopaasServer`` *workers* may share one storage object, reproducing the
+paper's "scalable set of Uvicorn instances + shared PostgreSQL"
+architecture.
 
 Sharding: the server holds one ``StudyContext`` per study — sampler,
 pruner, decoded search space, a per-study RNG, the storage shard's
@@ -17,18 +27,13 @@ sweeps touch only expired entries instead of scanning every trial.
 
 Hot-path cost model: `ask` syncs the observation cache (O(1) when
 nothing completed, O(new) otherwise — never a history rescan) and hands
-it to the sampler; `should_prune` heartbeats aggregate over the study's
-per-step report indices; `/api/studies` reads the incrementally raced
-incumbent.  Nothing on the request path scales with trial count.
-
-Batch protocol: ``POST /api/ask_batch`` suggests k trials in one round
-trip (the sampler sees the whole batch at once — ``suggest_batch`` —
-enabling vectorized proposals), and ``POST /api/tell_batch`` finalizes k
-trials with per-item statuses, so a straggler conflict on one trial never
-fails the rest of the batch.
+it to the sampler; intermediate reports aggregate over the study's
+per-step indices; study summaries read the incrementally raced
+incumbent; paginated trial listings answer from the per-state uid
+buckets.  Nothing on the request path scales with trial count.
 
 Fault tolerance beyond the paper's text (needed for 1000+-node campaigns):
-  * every RUNNING trial carries a *lease*; `should_prune` reports act as
+  * every RUNNING trial carries a *lease*; intermediate reports act as
     heartbeats that renew it;
   * `sweep_expired()` marks trials whose lease lapsed as FAILED and
     re-enqueues their parameters so another worker picks them up (straggler
@@ -45,15 +50,22 @@ from typing import Any
 
 import numpy as np
 
-from .auth import AuthError, TokenManager
+from .api import ApiError, build_openapi, build_router
+from .api.router import Router
+from .auth import TokenManager
 from .obs_cache import ObservationCache
 from .pruners import make_pruner
 from .samplers import make_sampler
 from .space import SearchSpace
 from .storage import InMemoryStorage
-from .types import Direction, StudyConfig, TrialState
+from .types import Direction, StudyConfig, Trial, TrialState
 
 HOPAAS_VERSION = "1.1.0-jax"
+
+# the exact key set (and order) of a pre-router /api/studies record —
+# the v1 shim projects the richer v2 resource down to this
+_V1_STUDY_KEYS = ("key", "name", "n_trials", "n_completed", "n_pruned",
+                  "n_failed", "best_value", "best_params")
 
 
 @dataclasses.dataclass
@@ -87,6 +99,32 @@ class HopaasServer:
         self._seed = int(seed)
         self._contexts: dict[str, StudyContext] = {}
         self._ctx_lock = threading.Lock()      # guards context creation only
+        self._router: Router | None = None
+
+    # ------------------------------------------------------------------ #
+    # wire entry points
+    # ------------------------------------------------------------------ #
+    @property
+    def router(self) -> Router:
+        if self._router is None:
+            self._router = build_router(self)
+        return self._router
+
+    def handle_request(self, method: str, path: str, body: Any = None,
+                       headers: dict[str, str] | None = None,
+                       body_error: str | None = None
+                       ) -> tuple[int, dict[str, Any], dict[str, str]]:
+        """Full dispatch: (status, payload, response headers)."""
+        return self.router.dispatch(method, path, body, headers, body_error)
+
+    def handle(self, method: str, path: str, body: dict[str, Any] | None = None
+               ) -> tuple[int, dict[str, Any]]:
+        """Pre-router signature kept for in-process callers and tests."""
+        status, payload, _ = self.handle_request(method, path, body)
+        return status, payload
+
+    def openapi_document(self) -> dict[str, Any]:
+        return build_openapi(self.router, HOPAAS_VERSION)
 
     # ------------------------------------------------------------------ #
     # per-study contexts
@@ -130,58 +168,224 @@ class HopaasServer:
         return ctx
 
     # ------------------------------------------------------------------ #
-    # transport-independent request handler
-    # ------------------------------------------------------------------ #
-    def handle(self, method: str, path: str, body: dict[str, Any] | None = None
-               ) -> tuple[int, dict[str, Any]]:
-        try:
-            parts = [p for p in path.split("/") if p]
-            if parts[:1] != ["api"]:
-                return 404, {"detail": "not found"}
-            endpoint = parts[1] if len(parts) > 1 else ""
-            if method == "GET" and endpoint == "version":
-                return 200, {"version": HOPAAS_VERSION}
-            token = parts[2] if len(parts) > 2 else ""
-            try:
-                identity = self.tokens.verify(token)
-            except AuthError as e:
-                return 401, {"detail": str(e)}
-            body = body or {}
-            if method == "POST" and endpoint == "ask":
-                return self._ask(body, identity)
-            if method == "POST" and endpoint == "ask_batch":
-                return self._ask_batch(body, identity)
-            if method == "POST" and endpoint == "tell":
-                return self._tell(body)
-            if method == "POST" and endpoint == "tell_batch":
-                return self._tell_batch(body)
-            if method == "POST" and endpoint == "should_prune":
-                return self._should_prune(body)
-            if method == "GET" and endpoint == "studies":
-                return self._studies()
-            return 404, {"detail": f"unknown endpoint {endpoint!r}"}
-        except Exception as e:  # a production server never drops the socket
-            return 500, {"detail": f"{type(e).__name__}: {e}"}
-
-    # ------------------------------------------------------------------ #
-    # endpoints
+    # study resolution + config validation
     # ------------------------------------------------------------------ #
     @staticmethod
     def _study_config(body: dict[str, Any]) -> StudyConfig:
         return StudyConfig(
             name=body.get("name", "unnamed"),
             properties=body.get("properties", {}),
-            direction=Direction(body.get("direction", "minimize")),
-            sampler=body.get("sampler", {"name": "tpe"}),
-            pruner=body.get("pruner", {"name": "none"}),
+            direction=Direction(body.get("direction") or "minimize"),
+            sampler=body.get("sampler") or {"name": "tpe"},
+            pruner=body.get("pruner") or {"name": "none"},
             directions=body.get("directions"),
         )
 
-    def _start_trials(self, ctx: StudyContext, n: int, body: dict[str, Any],
-                      identity: dict[str, Any]) -> list[dict[str, Any]]:
+    def _validate_config(self, config: StudyConfig) -> None:
+        """Dry-run the context pieces so a bad spec is a 422 *before* the
+        study is persisted — never a 500 and never a poisoned study."""
+        try:
+            SearchSpace.from_properties(config.properties)
+        except Exception as e:
+            raise ApiError(422, "invalid_space",
+                           f"invalid search space: {e}", field="properties")
+        try:
+            make_sampler(config.sampler)
+        except Exception as e:
+            raise ApiError(422, "invalid_sampler", str(e), field="sampler")
+        try:
+            make_pruner(config.pruner)
+        except Exception as e:
+            raise ApiError(422, "invalid_pruner", str(e), field="pruner")
+
+    def op_resolve_study(self, spec: dict[str, Any]
+                         ) -> tuple[StudyContext, bool]:
+        """Create-or-get the study a spec describes (content-addressed)."""
+        config = self._study_config(spec)
+        if self.storage.get_study(config.key()) is None:
+            self._validate_config(config)
+        return self._context(config)
+
+    # ------------------------------------------------------------------ #
+    # resource serialization
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def trial_resource(t: Trial) -> dict[str, Any]:
+        return {"uid": t.uid, "trial_id": t.trial_id,
+                "study_key": t.study_key, "params": t.params,
+                "state": t.state.value, "value": t.value, "values": t.values,
+                "worker_id": t.worker_id, "retries": t.retries,
+                "last_step": t.last_step(), "created_at": t.created_at,
+                "finished_at": t.finished_at}
+
+    def study_resource(self, study) -> dict[str, Any]:
+        key = study.key
+        with self.storage.study_lock(key):
+            counts = self.storage.counts(key)
+            # incumbent is tracked incrementally on tell — no scan
+            best = self.storage.best_trial(key)
+            res: dict[str, Any] = {
+                "key": key, "name": study.config.name,
+                "n_trials": len(study.trials),
+                "n_completed": counts[TrialState.COMPLETED],
+                "n_pruned": counts[TrialState.PRUNED],
+                "n_failed": counts[TrialState.FAILED],
+                "best_value": None if best is None else best.value,
+                "best_params": None if best is None else best.params,
+            }
+            if study.config.directions:
+                res["pareto_front"] = [
+                    {"params": t.params, "values": t.values}
+                    for t in study.pareto_front()]
+            # no created_at here: it is not journaled, and the resource
+            # must be identical across a crash-restart replay
+            res.update({
+                "n_running": counts[TrialState.RUNNING],
+                "direction": study.config.direction.value,
+                "directions": study.config.directions,
+                "sampler": study.config.sampler.get("name", "tpe"),
+                "pruner": study.config.pruner.get("name", "none"),
+            })
+        return res
+
+    # ------------------------------------------------------------------ #
+    # core operations (raise ApiError on client failures)
+    # ------------------------------------------------------------------ #
+    def op_version(self) -> dict[str, Any]:
+        return {"version": HOPAAS_VERSION}
+
+    def op_create_study(self, spec: dict[str, Any]
+                        ) -> tuple[bool, dict[str, Any]]:
+        ctx, created = self.op_resolve_study(spec)
+        return created, self.study_resource(self.storage.get_study(ctx.key))
+
+    def op_get_study(self, key: str) -> dict[str, Any]:
+        study = self.storage.get_study(key)
+        if study is None:
+            raise ApiError(404, "study_not_found", f"unknown study {key!r}")
+        return self.study_resource(study)
+
+    def op_list_studies(self, cursor: int | None = None, limit: int = 100
+                        ) -> tuple[list[dict[str, Any]], int | None]:
+        studies = self.storage.studies()      # registry order (stable)
+        start = 0 if cursor is None else int(cursor) + 1
+        page = studies[start:start + limit]
+        next_cursor = (start + len(page) - 1) if len(page) == limit else None
+        return [self.study_resource(s) for s in page], next_cursor
+
+    def op_list_trials(self, key: str, state: str | None = None,
+                       cursor: int | None = None, limit: int = 100
+                       ) -> tuple[list[dict[str, Any]], int | None]:
+        page = self.storage.trials_page(
+            key, state=None if state is None else TrialState(state),
+            cursor=cursor, limit=limit)
+        if page is None:
+            raise ApiError(404, "study_not_found", f"unknown study {key!r}")
+        trials, next_cursor = page
+        return [self.trial_resource(t) for t in trials], next_cursor
+
+    def op_get_trial(self, uid: str) -> dict[str, Any]:
+        trial = self.storage.get_trial(uid)
+        if trial is None:
+            raise ApiError(404, "trial_not_found", f"unknown trial {uid!r}")
+        return self.trial_resource(trial)
+
+    def op_ask(self, study_key: str, worker_id: str | None, n: int = 1
+               ) -> list[dict[str, Any]]:
+        """Suggest ``n`` trials for an *existing* study (v2 path)."""
+        ctx = self._context_for_key(study_key)
+        if ctx is None:
+            raise ApiError(404, "study_not_found",
+                           f"unknown study {study_key!r}")
+        with ctx.lock:
+            self._sweep_study(ctx.key, time.time())
+            trials = self._start_trials(ctx, n, worker_id)
+        return [self.trial_resource(t) for t in trials]
+
+    def op_tell(self, uid: str, value: Any = None,
+                state: str = "completed") -> dict[str, Any]:
+        # multi-objective: value may be a list (one entry per objective)
+        values = None
+        if isinstance(value, (list, tuple)):
+            values = [float(v) for v in value]
+            value = values[0]
+        final_state = TrialState(state or "completed")
+        trial = self.storage.get_trial(uid)
+        if trial is None:
+            raise ApiError(404, "trial_not_found", f"unknown trial {uid!r}")
+        with self.storage.study_lock(trial.study_key):
+            if trial.state == TrialState.PRUNED:
+                # the server already finalized this trial on a report;
+                # accept the client's value but keep the PRUNED state.
+                self.storage.update_trial(
+                    uid, value=(None if value is None else float(value)),
+                    values=values)
+                return {"uid": uid, "state": trial.state.value}
+            if trial.state != TrialState.RUNNING:
+                raise ApiError(409, "conflict",
+                               f"trial {uid} already {trial.state.value}")
+            self.storage.update_trial(
+                uid, value=(None if value is None else float(value)),
+                values=values, state=final_state, finished_at=time.time(),
+                lease_deadline=None)
+        return {"uid": uid, "state": final_state.value}
+
+    def op_tell_batch(self, tells: list[dict[str, Any]]
+                      ) -> list[dict[str, Any]]:
+        """Per-item finalization: one conflict never fails the batch."""
+        results = []
+        for item in tells:
+            try:
+                out = self.op_tell(item.get("trial_uid", ""),
+                                   item.get("value"),
+                                   item.get("state") or "completed")
+                results.append({"status": 200, **out})
+            except ApiError as e:
+                results.append({"status": e.status,
+                                "uid": item.get("trial_uid", ""),
+                                "error": e.payload()["error"]})
+        return results
+
+    def op_report(self, uid: str, step: int = 0, value: float = 0.0
+                  ) -> dict[str, Any]:
+        """Record an intermediate value (lease heartbeat) and return the
+        pruning verdict — v1 ``should_prune``."""
+        trial = self.storage.get_trial(uid)
+        if trial is None:
+            raise ApiError(404, "trial_not_found", f"unknown trial {uid!r}")
+        ctx = self._context_for_key(trial.study_key)
+        if ctx is None:
+            # the trial exists but its study is not resolvable (e.g. a
+            # partially replayed or externally mutated store) — a client
+            # error, not a server crash
+            raise ApiError(404, "study_not_found",
+                           f"study {trial.study_key!r} for trial "
+                           f"{uid!r} is not resolvable")
+        with ctx.lock:
+            if trial.state != TrialState.RUNNING:
+                # zombie worker: its lease was revoked (or the trial pruned)
+                # while it was away — instruct it to abandon the trial.
+                return {"uid": uid, "should_prune": True,
+                        "note": f"trial is {trial.state.value}"}
+            study = self.storage.get_study(trial.study_key)
+            # heartbeat: renew the lease + record the intermediate
+            self.storage.update_trial(
+                uid, intermediate=(int(step), float(value)),
+                lease_deadline=time.time() + self.lease_seconds)
+            prune = bool(ctx.pruner.should_prune(study, trial, int(step)))
+            if prune:
+                self.storage.update_trial(
+                    uid, state=TrialState.PRUNED, finished_at=time.time(),
+                    lease_deadline=None)
+        return {"uid": uid, "should_prune": prune}
+
+    # ------------------------------------------------------------------ #
+    # trial suggestion (shared by v1 and v2 ask paths)
+    # ------------------------------------------------------------------ #
+    def _start_trials(self, ctx: StudyContext, n: int,
+                      worker_id: str | None) -> list[Trial]:
         """Suggest + register ``n`` trials.  Caller holds ``ctx.lock``."""
         study = self.storage.get_study(ctx.key)
-        worker_id = body.get("worker_id", identity.get("user"))
         batch: list[tuple[dict[str, Any], int]] = []    # (params, retries)
         while len(batch) < n:                 # fault-tolerance requeue path
             waiting = self.storage.pop_waiting(ctx.key)
@@ -206,22 +410,32 @@ class HopaasServer:
                     ctx.space, study.trials, ctx.config.direction, ctx.rng,
                     remaining, **kwargs)
             batch.extend((p, 0) for p in params_list)
-        out = []
-        for params, retries in batch:
-            trial = self.storage.add_trial(
-                ctx.key, params, worker_id=worker_id,
-                lease_deadline=time.time() + self.lease_seconds,
-                retries=retries)
-            out.append({"trial_uid": trial.uid, "trial_id": trial.trial_id,
-                        "study_key": ctx.key, "properties": params})
-        return out
+        return [self.storage.add_trial(
+                    ctx.key, params, worker_id=worker_id,
+                    lease_deadline=time.time() + self.lease_seconds,
+                    retries=retries)
+                for params, retries in batch]
+
+    # ------------------------------------------------------------------ #
+    # v1 compat endpoints (byte-compatible success payloads; also the
+    # in-process API used by existing tests and tools)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _v1_trial(trial: Trial, study_key: str) -> dict[str, Any]:
+        return {"trial_uid": trial.uid, "trial_id": trial.trial_id,
+                "study_key": study_key, "properties": trial.params}
 
     def _ask(self, body: dict[str, Any], identity: dict[str, Any]
              ) -> tuple[int, dict[str, Any]]:
-        ctx, created = self._context(self._study_config(body))
-        with ctx.lock:
-            self._sweep_study(ctx.key, time.time())
-            (payload,) = self._start_trials(ctx, 1, body, identity)
+        try:
+            ctx, created = self.op_resolve_study(body)
+            worker_id = body.get("worker_id") or identity.get("user")
+            with ctx.lock:
+                self._sweep_study(ctx.key, time.time())
+                (trial,) = self._start_trials(ctx, 1, worker_id)
+        except ApiError as e:
+            return e.status, e.payload()
+        payload = self._v1_trial(trial, ctx.key)
         payload["study_created"] = created
         return 200, payload
 
@@ -229,107 +443,61 @@ class HopaasServer:
                    ) -> tuple[int, dict[str, Any]]:
         n = int(body.get("n", 1))
         if n < 1:
+            # direct in-process callers only: the wire path rejects this
+            # with a schema 422 before the handler runs
             return 400, {"detail": f"batch size must be >= 1, got {n}"}
-        ctx, created = self._context(self._study_config(body))
-        with ctx.lock:
-            self._sweep_study(ctx.key, time.time())
-            trials = self._start_trials(ctx, n, body, identity)
-        return 200, {"trials": trials, "study_key": ctx.key,
-                     "study_created": created}
-
-    def _tell_one(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
-        uid = body.get("trial_uid", "")
-        value = body.get("value", None)
-        # multi-objective: value may be a list (one entry per objective)
-        values = None
-        if isinstance(value, (list, tuple)):
-            values = [float(v) for v in value]
-            value = values[0]
-        state = TrialState(body.get("state", "completed"))
-        trial = self.storage.get_trial(uid)
-        if trial is None:
-            return 404, {"detail": f"unknown trial {uid!r}"}
-        with self.storage.study_lock(trial.study_key):
-            if trial.state == TrialState.PRUNED:
-                # the server already finalized this trial on should_prune;
-                # accept the client's value but keep the PRUNED state.
-                self.storage.update_trial(
-                    uid, value=(None if value is None else float(value)),
-                    values=values)
-                return 200, {"trial_uid": uid, "state": trial.state.value}
-            if trial.state != TrialState.RUNNING:
-                return 409, {"detail": f"trial {uid} already {trial.state.value}"}
-            self.storage.update_trial(
-                uid, value=(None if value is None else float(value)),
-                values=values,
-                state=state, finished_at=time.time(), lease_deadline=None)
-        return 200, {"trial_uid": uid, "state": state.value}
+        try:
+            ctx, created = self.op_resolve_study(body)
+            worker_id = body.get("worker_id") or identity.get("user")
+            with ctx.lock:
+                self._sweep_study(ctx.key, time.time())
+                trials = self._start_trials(ctx, n, worker_id)
+        except ApiError as e:
+            return e.status, e.payload()
+        return 200, {"trials": [self._v1_trial(t, ctx.key) for t in trials],
+                     "study_key": ctx.key, "study_created": created}
 
     def _tell(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
-        return self._tell_one(body)
+        try:
+            out = self.op_tell(body.get("trial_uid", ""), body.get("value"),
+                               body.get("state") or "completed")
+        except ApiError as e:
+            return e.status, e.payload()
+        return 200, {"trial_uid": out["uid"], "state": out["state"]}
 
     def _tell_batch(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
         tells = body.get("tells")
         if not isinstance(tells, list):
+            # direct in-process callers only: the wire path rejects this
+            # with a schema 422 before the handler runs
             return 400, {"detail": "tell_batch needs a 'tells' list"}
         results = []
         for item in tells:
-            status, payload = self._tell_one(item or {})
+            status, payload = self._tell(item or {})
             results.append({"status": status, **payload})
         return 200, {"results": results}
 
-    def _should_prune(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
-        uid = body.get("trial_uid", "")
-        step = int(body.get("step", 0))
-        value = float(body.get("value", 0.0))
-        trial = self.storage.get_trial(uid)
-        if trial is None:
-            return 404, {"detail": f"unknown trial {uid!r}"}
-        ctx = self._context_for_key(trial.study_key)
-        if ctx is None:
-            # the trial exists but its study is not resolvable (e.g. a
-            # partially replayed or externally mutated store) — a client
-            # error, not a server crash
-            return 404, {"detail": f"study {trial.study_key!r} for trial "
-                                   f"{uid!r} is not resolvable"}
-        with ctx.lock:
-            if trial.state != TrialState.RUNNING:
-                # zombie worker: its lease was revoked (or the trial pruned)
-                # while it was away — instruct it to abandon the trial.
-                return 200, {"trial_uid": uid, "should_prune": True,
-                             "detail": f"trial is {trial.state.value}"}
-            study = self.storage.get_study(trial.study_key)
-            # heartbeat: renew the lease + record the intermediate
-            self.storage.update_trial(
-                uid, intermediate=(step, value),
-                lease_deadline=time.time() + self.lease_seconds)
-            prune = bool(ctx.pruner.should_prune(study, trial, step))
-            if prune:
-                self.storage.update_trial(
-                    uid, state=TrialState.PRUNED, finished_at=time.time(),
-                    lease_deadline=None)
-        return 200, {"trial_uid": uid, "should_prune": prune}
+    def _should_prune(self, body: dict[str, Any]
+                      ) -> tuple[int, dict[str, Any]]:
+        try:
+            out = self.op_report(body.get("trial_uid", ""),
+                                 int(body.get("step", 0)),
+                                 float(body.get("value", 0.0)))
+        except ApiError as e:
+            return e.status, e.payload()
+        payload = {"trial_uid": out["uid"],
+                   "should_prune": out["should_prune"]}
+        if "note" in out:
+            payload["detail"] = out["note"]
+        return 200, payload
 
     def _studies(self) -> tuple[int, dict[str, Any]]:
         out = []
         for s in self.storage.studies():
-            with self.storage.study_lock(s.key):
-                counts = self.storage.counts(s.key)
-                # incumbent is tracked incrementally on tell — no scan
-                best = self.storage.best_trial(s.key)
-                rec = {
-                    "key": s.key, "name": s.config.name,
-                    "n_trials": len(s.trials),
-                    "n_completed": counts[TrialState.COMPLETED],
-                    "n_pruned": counts[TrialState.PRUNED],
-                    "n_failed": counts[TrialState.FAILED],
-                    "best_value": None if best is None else best.value,
-                    "best_params": None if best is None else best.params,
-                }
-                if s.config.directions:
-                    rec["pareto_front"] = [
-                        {"params": t.params, "values": t.values}
-                        for t in s.pareto_front()]
+            res = self.study_resource(s)
+            rec = {k: res[k] for k in _V1_STUDY_KEYS}
+            if "pareto_front" in res:
+                rec["pareto_front"] = res["pareto_front"]
             out.append(rec)
         return 200, {"studies": out}
 

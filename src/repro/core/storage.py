@@ -78,6 +78,11 @@ class InMemoryStorage:
     def __init__(self):
         self._shards: dict[str, _StudyShard] = {}
         self._registry_lock = threading.RLock()
+        # read-path instrumentation: number of full trial-list walks done
+        # by storage read helpers.  The indexed monitoring endpoints must
+        # keep this at 0 (asserted in tests) — any growth means a read
+        # path regressed to scanning.
+        self.trial_scans = 0
 
     # -- studies --------------------------------------------------------
     def get_or_create_study(self, config: StudyConfig) -> tuple[Study, bool]:
@@ -235,6 +240,53 @@ class InMemoryStorage:
         with shard.lock:
             return [shard.by_uid[u]
                     for u in shard.completed_log[position:]]
+
+    def _scan_trials(self, shard: _StudyShard) -> list[Trial]:
+        """Full walk of a shard's trial list — the instrumented slow path.
+        No serving read uses it today (every endpoint answers from an
+        index); any future read that cannot must go through here so
+        ``trial_scans`` stays honest."""
+        self.trial_scans += 1
+        return list(shard.study.trials)
+
+    def trials_page(self, study_key: str, *, state: TrialState | None = None,
+                    cursor: int | None = None, limit: int = 100
+                    ) -> tuple[list[Trial], int | None] | None:
+        """One page of a study's trials in ``trial_id`` order.
+
+        ``cursor`` is the last ``trial_id`` of the previous page (None =
+        start).  Returns ``(trials, next_cursor)`` where ``next_cursor``
+        is None once the page is not full, or None if the study is
+        unknown.  Unfiltered pages slice the trial list directly (ids are
+        list indices, O(limit)); state-filtered pages are served from the
+        per-state uid buckets — O(bucket) worst case, never a walk of the
+        full trial list.
+        """
+        shard = self._shard(study_key)
+        if shard is None:
+            return None
+        start = 0 if cursor is None else int(cursor) + 1
+        limit = max(1, int(limit))
+        with shard.lock:
+            if state is None:
+                trials = list(shard.study.trials[start:start + limit])
+            else:
+                bucket = shard.state_uids[state]
+                ids = sorted(
+                    tid for tid in (shard.by_uid[u].trial_id
+                                    for u in bucket) if tid >= start)
+                trials = [shard.by_uid[f"{study_key}:{tid}"]
+                          for tid in ids[:limit]]
+            next_cursor = (trials[-1].trial_id
+                           if len(trials) == limit else None)
+            return trials, next_cursor
+
+    def n_trials(self, study_key: str) -> int:
+        shard = self._shard(study_key)
+        if shard is None:
+            return 0
+        with shard.lock:
+            return len(shard.study.trials)
 
     def best_trial(self, study_key: str) -> Trial | None:
         """The incumbent, maintained incrementally on completion — O(1),

@@ -3,11 +3,17 @@
 * ``DirectTransport``    — in-process function call (fast path for tests
                            and single-host campaigns).
 * ``HttpTransport``      — real HTTP over a socket using only the standard
-                           library; the server side (``serve_http``) mounts
-                           ``HopaasServer.handle`` behind a threading HTTP
-                           server (the Uvicorn role in the paper, sec. 3).
+                           library; the server side (``HttpServiceRunner``)
+                           mounts ``HopaasServer.handle_request`` behind a
+                           threading HTTP server (the Uvicorn role, sec. 3).
 * ``ReverseProxy``       — round-robin fan-out to N backend workers
                            sharing one storage (the NGINX role, sec. 3).
+
+All transports carry request *headers* (the v2 surface authenticates via
+``Authorization: Bearer``) and pass query strings through untouched, so
+``GET /api/v2/studies/{key}/trials?state=completed&limit=50`` works
+identically in-process and over the wire.  ``request_full`` additionally
+exposes response headers (e.g. the ``Allow`` list on a 405).
 """
 from __future__ import annotations
 
@@ -20,10 +26,20 @@ from typing import Any
 
 from .server import HopaasServer
 
+# (status, payload) / (status, payload, response headers)
+Result = tuple[int, dict[str, Any]]
+FullResult = tuple[int, dict[str, Any], dict[str, str]]
+
 
 class Transport:
-    def request(self, method: str, path: str, body: dict[str, Any] | None = None
-                ) -> tuple[int, dict[str, Any]]:
+    def request(self, method: str, path: str,
+                body: dict[str, Any] | None = None,
+                headers: dict[str, str] | None = None) -> Result:
+        return self.request_full(method, path, body, headers)[:2]
+
+    def request_full(self, method: str, path: str,
+                     body: dict[str, Any] | None = None,
+                     headers: dict[str, str] | None = None) -> FullResult:
         raise NotImplementedError
 
 
@@ -31,8 +47,8 @@ class DirectTransport(Transport):
     def __init__(self, server: HopaasServer):
         self.server = server
 
-    def request(self, method, path, body=None):
-        return self.server.handle(method, path, body)
+    def request_full(self, method, path, body=None, headers=None):
+        return self.server.handle_request(method, path, body, headers)
 
 
 class RoundRobinTransport(Transport):
@@ -44,10 +60,10 @@ class RoundRobinTransport(Transport):
         self._cycle = itertools.cycle(range(len(servers)))
         self._lock = threading.Lock()
 
-    def request(self, method, path, body=None):
+    def request_full(self, method, path, body=None, headers=None):
         with self._lock:
             i = next(self._cycle)
-        return self.servers[i].handle(method, path, body)
+        return self.servers[i].handle_request(method, path, body, headers)
 
 
 # --------------------------------------------------------------------------- #
@@ -62,28 +78,41 @@ def _make_handler(target):
         def log_message(self, *a):   # quiet
             pass
 
-        def _respond(self, status: int, payload: dict[str, Any]) -> None:
+        def _respond(self, status: int, payload: dict[str, Any],
+                     extra_headers: dict[str, str] | None = None) -> None:
             blob = json.dumps(payload).encode()
             self.send_response(status)
             self.send_header("Content-Type", "application/json")
             self.send_header("Content-Length", str(len(blob)))
+            for k, v in (extra_headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(blob)
 
-        def _body(self) -> dict[str, Any]:
+        def _read_body(self) -> tuple[Any, str | None]:
+            """(parsed JSON, parse-error message).  Always drains the
+            socket so keep-alive framing survives a bad body."""
             n = int(self.headers.get("Content-Length", 0) or 0)
-            raw = self.rfile.read(n) if n else b"{}"
+            raw = self.rfile.read(n) if n else b""
+            if not raw:
+                return None, None
             try:
-                return json.loads(raw or b"{}")
-            except json.JSONDecodeError:
-                return {}
+                return json.loads(raw), None
+            except json.JSONDecodeError as e:
+                return None, f"request body is not valid JSON: {e.msg}"
+
+        def _dispatch(self, method: str, body: Any,
+                      body_error: str | None) -> None:
+            self._respond(*target(self.path, method, body,
+                                  dict(self.headers), body_error))
 
         def do_GET(self):
-            self._body()     # drain any body so keep-alive framing survives
-            self._respond(*target(self.path, "GET", {}))
+            self._read_body()    # drain any body; GET bodies are ignored
+            self._dispatch("GET", None, None)
 
         def do_POST(self):
-            self._respond(*target(self.path, "POST", self._body()))
+            body, err = self._read_body()
+            self._dispatch("POST", body, err)
 
     return Handler
 
@@ -101,7 +130,9 @@ class HttpServiceRunner:
         self._cycle = itertools.cycle(range(len(self.workers)))
         self._lock = threading.Lock()
         self.httpd = ThreadingHTTPServer((host, port), _make_handler(
-            lambda path, method, body: self._pick().handle(method, path, body)))
+            lambda path, method, body, headers, body_error:
+                self._pick().handle_request(method, path, body, headers,
+                                            body_error)))
         self.host, self.port = self.httpd.server_address[:2]
         self._thread = threading.Thread(target=self.httpd.serve_forever, daemon=True)
 
@@ -146,16 +177,19 @@ class HttpTransport(Transport):
         host, _, port = url.partition(":")
         return cls(host, int(port or 80), timeout, persistent=persistent)
 
-    def _exchange(self, method: str, path: str, payload: str | None
-                  ) -> tuple[int, dict[str, Any]]:
+    def _exchange(self, method: str, path: str, payload: str | None,
+                  headers: dict[str, str] | None) -> FullResult:
         if self._conn is None:
             self._conn = http.client.HTTPConnection(
                 self.host, self.port, timeout=self.timeout)
-        self._conn.request(method, path, body=payload,
-                           headers={"Content-Type": "application/json"})
+        send_headers = {"Content-Type": "application/json"}
+        if headers:
+            send_headers.update(headers)
+        self._conn.request(method, path, body=payload, headers=send_headers)
         resp = self._conn.getresponse()
         data = resp.read()
-        return resp.status, json.loads(data or b"{}")
+        return (resp.status, json.loads(data or b"{}"),
+                {k: v for k, v in resp.getheaders()})
 
     # failure modes of an idle keep-alive socket the server closed between
     # requests — the only case where resending is known-safe (the request
@@ -166,7 +200,7 @@ class HttpTransport(Transport):
                      http.client.BadStatusLine,
                      ConnectionResetError, BrokenPipeError)
 
-    def request(self, method, path, body=None):
+    def request_full(self, method, path, body=None, headers=None):
         # GET carries no body: unread body bytes would corrupt keep-alive
         # framing on servers that don't drain them.
         payload = None if method == "GET" else json.dumps(body or {})
@@ -174,13 +208,13 @@ class HttpTransport(Transport):
             reused = self._conn is not None
             try:
                 try:
-                    return self._exchange(method, path, payload)
+                    return self._exchange(method, path, payload, headers)
                 except self._STALE_ERRORS:
                     self._close_conn()
                     if not reused:
                         raise
                     try:
-                        return self._exchange(method, path, payload)
+                        return self._exchange(method, path, payload, headers)
                     except (http.client.HTTPException, OSError):
                         self._close_conn()
                         raise

@@ -1,0 +1,255 @@
+"""The v1 compat shim: every pre-router endpoint exercised through the
+declarative router against the v2 core, with byte-compatible success
+payloads — plus stdlib-HTTP round-trip coverage for query strings and
+the Authorization header."""
+import json
+
+import pytest
+
+from repro.core import (Client, ClientStudy, DirectTransport, HopaasServer,
+                        HOPAAS_VERSION, HttpServiceRunner, HttpTransport,
+                        InMemoryStorage, TokenManager, suggestions)
+
+
+@pytest.fixture()
+def server():
+    return HopaasServer(seed=0)
+
+
+@pytest.fixture()
+def token(server):
+    return server.tokens.issue("v1-tester")
+
+
+SPEC = {"name": "compat",
+        "properties": {"x": suggestions.uniform(0.0, 1.0)},
+        "sampler": {"name": "random"}, "pruner": {"name": "none"}}
+
+
+# --------------------------------------------------------------------- #
+# byte-compatible success payloads through the shim
+# --------------------------------------------------------------------- #
+def test_v1_version_payload(server):
+    status, payload = server.handle("GET", "/api/version")
+    assert status == 200
+    assert payload == {"version": HOPAAS_VERSION}
+
+
+def test_v1_ask_payload_shape(server, token):
+    status, payload = server.handle("POST", f"/api/ask/{token}", dict(SPEC))
+    assert status == 200
+    assert list(payload) == ["trial_uid", "trial_id", "study_key",
+                             "properties", "study_created"]
+    assert payload["trial_id"] == 0 and payload["study_created"] is True
+    assert 0.0 <= payload["properties"]["x"] <= 1.0
+
+
+def test_v1_ask_batch_payload_shape(server, token):
+    status, payload = server.handle("POST", f"/api/ask_batch/{token}",
+                                    {**SPEC, "n": 3})
+    assert status == 200
+    assert list(payload) == ["trials", "study_key", "study_created"]
+    assert [t["trial_id"] for t in payload["trials"]] == [0, 1, 2]
+    for t in payload["trials"]:
+        assert list(t) == ["trial_uid", "trial_id", "study_key", "properties"]
+
+
+def test_v1_tell_and_conflict(server, token):
+    _, ask = server.handle("POST", f"/api/ask/{token}", dict(SPEC))
+    uid = ask["trial_uid"]
+    status, payload = server.handle("POST", f"/api/tell/{token}",
+                                    {"trial_uid": uid, "value": 1.5})
+    assert status == 200
+    assert payload == {"trial_uid": uid, "state": "completed"}
+    status, payload = server.handle("POST", f"/api/tell/{token}",
+                                    {"trial_uid": uid, "value": 2.0})
+    assert status == 409
+    assert payload["detail"] == f"trial {uid} already completed"
+
+
+def test_v1_tell_batch_partial_conflict(server, token):
+    _, batch = server.handle("POST", f"/api/ask_batch/{token}",
+                             {**SPEC, "n": 2})
+    u1, u2 = [t["trial_uid"] for t in batch["trials"]]
+    server.handle("POST", f"/api/tell/{token}", {"trial_uid": u1, "value": 1.0})
+    status, payload = server.handle(
+        "POST", f"/api/tell_batch/{token}",
+        {"tells": [{"trial_uid": u1, "value": 9.0},
+                   {"trial_uid": u2, "value": 2.0}]})
+    assert status == 200
+    r1, r2 = payload["results"]
+    assert r1["status"] == 409
+    assert r2["status"] == 200 and r2["trial_uid"] == u2
+    assert r2["state"] == "completed"
+
+
+def test_v1_should_prune_payload(server, token):
+    _, ask = server.handle("POST", f"/api/ask/{token}", dict(SPEC))
+    uid = ask["trial_uid"]
+    status, payload = server.handle(
+        "POST", f"/api/should_prune/{token}",
+        {"trial_uid": uid, "step": 0, "value": 3.0})
+    assert status == 200
+    assert payload == {"trial_uid": uid, "should_prune": False}
+    assert server.storage.get_trial(uid).intermediates == {0: 3.0}
+
+
+def test_v1_studies_payload_shape(server, token):
+    _, ask = server.handle("POST", f"/api/ask/{token}", dict(SPEC))
+    server.handle("POST", f"/api/tell/{token}",
+                  {"trial_uid": ask["trial_uid"], "value": 0.5})
+    status, payload = server.handle("GET", f"/api/studies/{token}")
+    assert status == 200
+    (rec,) = payload["studies"]
+    assert list(rec) == ["key", "name", "n_trials", "n_completed",
+                         "n_pruned", "n_failed", "best_value", "best_params"]
+    assert rec["n_completed"] == 1 and rec["best_value"] == 0.5
+
+
+def test_v1_auth_failures_are_401(server):
+    assert server.handle("POST", "/api/ask/garbage", dict(SPEC))[0] == 401
+    tok = server.tokens.issue("u", ttl_seconds=-1.0)
+    assert server.handle("POST", f"/api/ask/{tok}", dict(SPEC))[0] == 401
+
+
+# --------------------------------------------------------------------- #
+# the old 500s are now structured 4xx (satellite: malformed bodies)
+# --------------------------------------------------------------------- #
+def test_v1_non_dict_body_is_422(server, token):
+    status, payload = server.handle("POST", f"/api/ask/{token}", [1, 2])
+    assert status == 422
+    assert payload["error"]["field"] == "$"
+
+
+def test_v1_wrong_typed_field_is_422(server, token):
+    status, payload = server.handle("POST", f"/api/tell/{token}",
+                                    {"trial_uid": 7, "value": 1.0})
+    assert status == 422
+    assert payload["error"]["field"] == "trial_uid"
+
+
+def test_v1_unknown_sampler_is_422_with_field(server, token):
+    status, payload = server.handle(
+        "POST", f"/api/ask/{token}",
+        {**SPEC, "sampler": {"name": "simulated-annealing-9000"}})
+    assert status == 422
+    assert payload["error"]["code"] == "unknown_sampler"
+    assert payload["error"]["field"] == "sampler.name"
+
+
+def test_v1_unknown_pruner_is_422_with_field(server, token):
+    status, payload = server.handle(
+        "POST", f"/api/ask/{token}", {**SPEC, "pruner": {"name": "axe"}})
+    assert status == 422
+    assert payload["error"]["field"] == "pruner.name"
+
+
+def test_v1_tell_batch_missing_list_is_422(server, token):
+    status, payload = server.handle("POST", f"/api/tell_batch/{token}",
+                                    {"tells": "all of them"})
+    assert status == 422
+    assert payload["error"]["field"] == "tells"
+
+
+# --------------------------------------------------------------------- #
+# full client flows through the shim (legacy _post path)
+# --------------------------------------------------------------------- #
+def test_legacy_client_flow_through_shim(server, token):
+    client = Client(DirectTransport(server), token)
+    payload = client._post("ask", dict(SPEC))
+    uid = payload["trial_uid"]
+    assert payload["study_created"] is True
+    assert client._post("should_prune",
+                        {"trial_uid": uid, "step": 1, "value": 0.4}
+                        )["should_prune"] is False
+    told = client._post("tell", {"trial_uid": uid, "value": 0.4})
+    assert told == {"trial_uid": uid, "state": "completed"}
+    batch = client._post("ask_batch", {**SPEC, "n": 2})
+    results = client._post("tell_batch", {"tells": [
+        {"trial_uid": t["trial_uid"], "value": 1.0}
+        for t in batch["trials"]]})["results"]
+    assert [r["status"] for r in results] == [200, 200]
+
+
+# --------------------------------------------------------------------- #
+# stdlib HTTP round trip: query strings + Authorization header survive
+# --------------------------------------------------------------------- #
+@pytest.fixture()
+def http_service():
+    storage, tokens = InMemoryStorage(), TokenManager()
+    runner = HttpServiceRunner(
+        [HopaasServer(storage=storage, tokens=tokens, seed=0)]).start()
+    yield runner, tokens
+    runner.stop()
+
+
+def test_http_header_auth_and_query_string_round_trip(http_service):
+    runner, tokens = http_service
+    tok = tokens.issue("wire-user")
+    client = Client(HttpTransport(runner.host, runner.port), tok)
+    study = ClientStudy(name="wire", client=client,
+                        properties={"x": suggestions.uniform(0, 1)},
+                        sampler={"name": "random"})
+    trials = study.ask_batch(6)
+    study.tell_batch([(t, float(i)) for i, t in enumerate(trials[:4])])
+
+    # state filter + limit arrive server-side intact (query string), and
+    # the bearer header authenticates (nothing in the URL path)
+    page = client.trials_page(study.study_key, state="completed", limit=3)
+    assert len(page["trials"]) == 3
+    assert all(t["state"] == "completed" for t in page["trials"])
+    assert page["next_cursor"] is not None
+    rest = client.trials_page(study.study_key, state="completed",
+                              limit=3, cursor=page["next_cursor"])
+    assert len(rest["trials"]) == 1
+
+    # missing header over the real wire -> 401
+    bare = HttpTransport(runner.host, runner.port)
+    status, payload = bare.request(
+        "GET", f"/api/v2/studies/{study.study_key}/trials?limit=3")
+    assert status == 401
+    assert payload["error"]["code"] == "unauthorized"
+
+
+def test_http_405_allow_header_on_the_wire(http_service):
+    runner, tokens = http_service
+    tr = HttpTransport(runner.host, runner.port)
+    status, payload, headers = tr.request_full("GET", "/api/v2/trials:tell_batch")
+    assert status == 405
+    allow = next(v for k, v in headers.items() if k.lower() == "allow")
+    assert allow == "POST"
+    # v1 path too
+    status, _, headers = tr.request_full(
+        "GET", f"/api/ask/{tokens.issue('u')}")
+    assert status == 405
+    assert next(v for k, v in headers.items() if k.lower() == "allow") == "POST"
+
+
+def test_http_malformed_json_is_400_not_500(http_service):
+    """Raw socket write of a non-JSON body: structured 400, and the
+    keep-alive connection survives for the next request."""
+    import http.client as hc
+    runner, tokens = http_service
+    tok = tokens.issue("u")
+    conn = hc.HTTPConnection(runner.host, runner.port, timeout=10)
+    conn.request("POST", f"/api/tell/{tok}", body=b"{not json!",
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    payload = json.loads(resp.read())
+    assert resp.status == 400
+    assert payload["error"]["code"] == "invalid_json"
+    # same connection still usable (framing survived)
+    conn.request("GET", "/api/version")
+    resp = conn.getresponse()
+    assert resp.status == 200
+    assert json.loads(resp.read())["version"] == HOPAAS_VERSION
+    conn.close()
+
+
+def test_http_non_dict_json_body_is_422(http_service):
+    runner, tokens = http_service
+    tr = HttpTransport(runner.host, runner.port)
+    status, payload = tr.request("POST", f"/api/tell/{tokens.issue('u')}",
+                                 body=[1, 2, 3])
+    assert status == 422
+    assert payload["error"]["field"] == "$"

@@ -1,0 +1,160 @@
+"""Client-side retry: exponential backoff + jitter on connection resets
+and 503s for idempotent calls; tell retries guarded by the conflict
+status (a 409 after a resend means the first attempt landed)."""
+import pytest
+
+from repro.core import (Client, ClientStudy, DirectTransport, HopaasError,
+                        HopaasServer, RetryPolicy, Transport, suggestions)
+
+FAST = RetryPolicy(max_attempts=4, base_delay=0.0, max_delay=0.0)
+
+
+class FlakyTransport(Transport):
+    """Raises/injects failures for the first ``fail`` requests, then
+    delegates to a real DirectTransport."""
+
+    def __init__(self, server, fail: int, mode: str = "reset"):
+        self.inner = DirectTransport(server)
+        self.remaining = fail
+        self.mode = mode
+        self.attempts = 0
+
+    def request_full(self, method, path, body=None, headers=None):
+        self.attempts += 1
+        if self.remaining > 0:
+            self.remaining -= 1
+            if self.mode == "reset":
+                raise ConnectionResetError("connection reset by peer")
+            return 503, {"detail": "service unavailable"}, {}
+        return self.inner.request_full(method, path, body, headers)
+
+
+class LostResponseTransport(Transport):
+    """Processes the request server-side but 'loses' the response —
+    the client cannot tell whether the call landed."""
+
+    def __init__(self, server, lose: int):
+        self.inner = DirectTransport(server)
+        self.lose = lose
+
+    def request_full(self, method, path, body=None, headers=None):
+        out = self.inner.request_full(method, path, body, headers)
+        if self.lose > 0:
+            self.lose -= 1
+            raise ConnectionResetError("reset after send")
+        return out
+
+
+def _server():
+    return HopaasServer(seed=0)
+
+
+def _study(client, name="r"):
+    return ClientStudy(name=name,
+                       properties={"x": suggestions.uniform(0, 1)},
+                       sampler={"name": "random"}, client=client)
+
+
+@pytest.mark.parametrize("mode", ["reset", "503"])
+def test_ask_retries_through_transient_failures(mode):
+    srv = _server()
+    tr = FlakyTransport(srv, fail=2, mode=mode)
+    client = Client(tr, srv.tokens.issue("u"), retry=FAST)
+    t = _study(client).ask()
+    assert 0.0 <= t.x <= 1.0
+    # create_study burned the first two failures, so > 2 total requests
+    assert tr.attempts > 2
+
+
+def test_retries_exhausted_raises(_mode="reset"):
+    srv = _server()
+    tr = FlakyTransport(srv, fail=99, mode="reset")
+    client = Client(tr, srv.tokens.issue("u"), retry=FAST)
+    with pytest.raises(HopaasError, match="transport failure"):
+        _study(client).ask()
+    assert tr.attempts == FAST.max_attempts
+
+
+def test_503_exhaustion_surfaces_the_503():
+    srv = _server()
+    tr = FlakyTransport(srv, fail=99, mode="503")
+    client = Client(tr, srv.tokens.issue("u"), retry=FAST)
+    with pytest.raises(HopaasError, match="503"):
+        _study(client).ask()
+
+
+def test_tell_conflict_after_retry_is_success():
+    """The response to the first tell is lost; the retry hits the server's
+    duplicate-finalize 409 — which proves the first attempt landed and
+    must NOT surface as an error."""
+    srv = _server()
+    setup = Client(DirectTransport(srv), srv.tokens.issue("u"), retry=FAST)
+    study = _study(setup)
+    trial = study.ask()
+
+    lossy = Client(LostResponseTransport(srv, lose=1),
+                   srv.tokens.issue("u"), retry=FAST)
+    lossy.tell(trial.uid, value=0.7)        # no raise
+    stored = srv.storage.get_trial(trial.uid)
+    assert stored.state.value == "completed" and stored.value == 0.7
+
+
+def test_tell_conflict_after_503_retry_still_raises():
+    """A 503 means the server definitively did NOT process the tell, so a
+    409 on the retry is a genuine conflict (e.g. the lease sweeper beat
+    us), not proof our value landed — it must surface."""
+    srv = _server()
+    setup = Client(DirectTransport(srv), srv.tokens.issue("u"), retry=FAST)
+    study = _study(setup)
+    t = study.ask()
+    study.tell(t, value=1.0)            # someone else finalizes the trial
+
+    tr = FlakyTransport(srv, fail=1, mode="503")
+    flaky = Client(tr, srv.tokens.issue("u"), retry=FAST)
+    with pytest.raises(HopaasError, match="409"):
+        flaky.tell(t.uid, value=2.0)
+    assert srv.storage.get_trial(t.uid).value == 1.0
+
+
+def test_tell_conflict_after_retry_returns_real_state():
+    """The recovered 'success' is the trial's actual resource, not the
+    conflict envelope."""
+    srv = _server()
+    setup = Client(DirectTransport(srv), srv.tokens.issue("u"), retry=FAST)
+    study = _study(setup)
+    trial = study.ask()
+    lossy = Client(LostResponseTransport(srv, lose=1),
+                   srv.tokens.issue("u"), retry=FAST)
+    out = lossy.tell(trial.uid, value=0.3)
+    assert out["uid"] == trial.uid and out["state"] == "completed"
+
+
+def test_plain_tell_conflict_still_raises():
+    srv = _server()
+    client = Client(DirectTransport(srv), srv.tokens.issue("u"), retry=FAST)
+    study = _study(client)
+    t = study.ask()
+    study.tell(t, value=1.0)
+    with pytest.raises(HopaasError, match="409"):
+        study.tell(t, value=2.0)
+
+
+def test_backoff_delays_grow_and_jitter():
+    policy = RetryPolicy(max_attempts=5, base_delay=0.1, max_delay=10.0)
+    d1 = [policy.delay(1) for _ in range(50)]
+    d3 = [policy.delay(3) for _ in range(50)]
+    # full jitter inside [cap/2, cap]
+    assert all(0.05 <= d <= 0.1 for d in d1)
+    assert all(0.2 <= d <= 0.4 for d in d3)
+    assert len({round(d, 6) for d in d1}) > 1      # actually jittered
+    # cap respected
+    assert all(policy.delay(30) <= 10.0 for _ in range(10))
+
+
+def test_non_idempotent_legacy_post_does_not_retry():
+    srv = _server()
+    tr = FlakyTransport(srv, fail=1, mode="reset")
+    client = Client(tr, srv.tokens.issue("u"), retry=FAST)
+    with pytest.raises(HopaasError, match="transport failure"):
+        client._post("ask", {"name": "x", "properties": {}})
+    assert tr.attempts == 1
