@@ -1,0 +1,150 @@
+"""PR 4 claim — durability is cheap and recovery is O(new work).
+
+Two tables, emitted together as ``BENCH_storage.json``:
+
+* ``tell_throughput`` — storage mutations/sec per backend and fsync
+  mode.  ``group`` batches many acknowledgements into one fsync per
+  commit window, so it should sit near ``off`` while ``always`` pays a
+  (group-committed) fsync on the ack path.
+
+* ``recovery`` — restart time vs WAL history length under a *bounded*
+  live state (a fixed window of running trials receiving intermediate
+  re-reports: the WAL grows, the state does not — the shape of a
+  long-running campaign with heartbeats).  The legacy single-file
+  journal and the engine without compaction replay the whole lifetime,
+  so their recovery grows linearly with history.  The engine with
+  compaction loads the latest snapshot (bounded by *state* size) and
+  replays only the unfolded tail (bounded by *segment* size): restart
+  time stays flat as history grows.
+
+Acceptance: at the longest history, compacted-engine recovery beats the
+legacy journal by a wide margin and stays within ~2x of its own
+shortest-history recovery (flat), while legacy grows with history.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core.durable import DurableStorage
+from repro.core.storage import InMemoryStorage, JournalStorage
+from repro.core.types import StudyConfig, TrialState
+
+PROPS = {"x": {"type": "uniform", "low": 0.0, "high": 1.0},
+         "y": {"type": "uniform", "low": 0.0, "high": 1.0}}
+
+SEGMENT_BYTES = 32 * 1024          # small segments: visible rotation
+
+
+def _make(kind: str, root: str):
+    if kind == "memory":
+        return InMemoryStorage()
+    if kind == "journal":
+        return JournalStorage(os.path.join(root, "journal.jsonl"))
+    # "durable-<fsync mode>"
+    return DurableStorage(os.path.join(root, "engine"),
+                          fsync=kind.split("-", 1)[1],
+                          segment_bytes=SEGMENT_BYTES, auto_compact=False)
+
+
+def _bench_throughput(n_trials: int) -> list[dict]:
+    rows = []
+    for kind in ("memory", "journal", "durable-off", "durable-group",
+                 "durable-always"):
+        root = tempfile.mkdtemp(prefix="bench-storage-")
+        try:
+            storage = _make(kind, root)
+            study, _ = storage.get_or_create_study(
+                StudyConfig(name="thr", properties=PROPS))
+            t0 = time.perf_counter()
+            for i in range(n_trials):
+                t = storage.add_trial(study.key,
+                                      {"x": i * 1e-4, "y": 0.5}, None, None)
+                storage.update_trial(t.uid, value=float(i % 17),
+                                     state=TrialState.COMPLETED,
+                                     lease_deadline=None)
+            wall = time.perf_counter() - t0
+            stats = storage.storage_stats()
+            storage.close()
+            mutations = 2 * n_trials
+            rows.append({
+                "scenario": "tell_throughput", "backend": kind,
+                "records": mutations, "wall_ms": round(wall * 1e3, 2),
+                "mutations_per_s": round(mutations / wall),
+                "fsyncs": stats.get("fsyncs", 0),
+                "replayed_records": "",
+            })
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def _churn(storage, history: int, window: int = 32, steps: int = 8) -> None:
+    """Bounded state, unbounded WAL: ``window`` running trials receive
+    ``history`` intermediate re-reports cycling over ``steps`` steps."""
+    study, _ = storage.get_or_create_study(
+        StudyConfig(name="churn", properties=PROPS))
+    far = time.time() + 10_000.0
+    uids = [storage.add_trial(study.key, {"x": 0.1 * i, "y": 0.5},
+                              f"w{i}", far).uid
+            for i in range(window)]
+    for i in range(history):
+        storage.update_trial(uids[i % window],
+                             intermediate=(i // window % steps,
+                                           float(i % 101)))
+
+
+def _bench_recovery(histories: tuple[int, ...]) -> list[dict]:
+    rows = []
+    for history in histories:
+        for kind in ("journal", "durable-nocompact", "durable-compact"):
+            root = tempfile.mkdtemp(prefix="bench-storage-")
+            try:
+                if kind == "journal":
+                    storage = _make("journal", root)
+                else:
+                    storage = _make("durable-off", root)
+                _churn(storage, history)
+                if kind == "durable-compact":
+                    storage.compact(min_segments=1)
+                digest = storage.state_digest()
+                storage.close()
+
+                t0 = time.perf_counter()
+                if kind == "journal":
+                    recovered = JournalStorage(
+                        os.path.join(root, "journal.jsonl"))
+                    replayed = history + 1 + 32     # every record, ever
+                else:
+                    recovered = DurableStorage(
+                        os.path.join(root, "engine"), fsync="off",
+                        segment_bytes=SEGMENT_BYTES, auto_compact=False)
+                    replayed = recovered.last_recovery["records_replayed"]
+                wall = time.perf_counter() - t0
+                assert recovered.state_digest() == digest, \
+                    f"recovery diverged for {kind}@{history}"
+                recovered.close()
+                rows.append({
+                    "scenario": "recovery", "backend": kind,
+                    "records": history,
+                    "wall_ms": round(wall * 1e3, 2),
+                    "mutations_per_s": "", "fsyncs": "",
+                    "replayed_records": replayed,
+                })
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def run(smoke: bool = False) -> list[dict]:
+    n_thr = 400 if smoke else 2000
+    histories = (1500, 6000) if smoke else (5000, 20000, 60000)
+    rows = _bench_throughput(n_thr) + _bench_recovery(histories)
+    out_dir = "experiments/benchmarks"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_storage.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows

@@ -20,13 +20,15 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 # tables fast enough (and dependency-light enough) for the CI smoke run
-SMOKE_TABLES = ("api", "campaign", "ask_latency")
+SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage")
 
 TABLES = {
     "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
     "samplers": ("bench_samplers", "paper sec.1/2: BO beats random"),
     "ask_latency": ("bench_sampler",
                     "PR 2: ask latency vs history (obs cache + fused kernels)"),
+    "storage": ("bench_storage",
+                "PR 4: fsync-mode throughput + snapshot/segment recovery"),
     "pruners": ("bench_pruners", "paper sec.2: pruning saves compute"),
     "campaign": ("bench_campaign", "paper sec.4: elastic multi-worker campaign"),
     "hpo_train": ("bench_hpo_train", "end-to-end: HOPAAS steering JAX training"),

@@ -2,22 +2,24 @@
 
 Reproduces the MARCONI-100 campaign shape on one machine: a HOPAAS
 service (4 stateless API workers behind one HTTP frontend, shared
-WAL-journaled storage) and 20 concurrent *unreliable* worker "nodes" that
-join with staggered start times (elasticity), occasionally crash without
-reporting (opportunistic resources), and whose orphaned trials the
-service requeues via lease expiry.
+durable storage — snapshots + segmented WAL with group-commit fsync)
+and 20 concurrent *unreliable* worker "nodes" that join with staggered
+start times (elasticity), occasionally crash without reporting
+(opportunistic resources), and whose orphaned trials the service
+requeues via lease expiry.  Ends with a crash-restart: recovery loads
+the newest snapshot, replays only the WAL tail, and is digest-verified
+identical to the pre-crash state.
 
   PYTHONPATH=src python examples/multi_node_campaign.py
 """
-import os
 import tempfile
 import time
 
 from repro.core.auth import TokenManager
 from repro.core.campaign import run_campaign
-from repro.core.client import Client, suggestions
+from repro.core.client import suggestions
+from repro.core.durable import DurableStorage
 from repro.core.server import HopaasServer
-from repro.core.storage import JournalStorage
 from repro.core.transport import HttpServiceRunner, HttpTransport
 
 
@@ -35,15 +37,15 @@ def objective(params, report):
 
 
 def main():
-    wal = os.path.join(tempfile.mkdtemp(), "hopaas.wal")
-    storage = JournalStorage(wal)
+    root = tempfile.mkdtemp(prefix="hopaas-engine-")
+    storage = DurableStorage(root, fsync="group", segment_bytes=64 * 1024)
     tokens = TokenManager()
     backends = [HopaasServer(storage=storage, tokens=tokens,
                              lease_seconds=1.0, worker_name=f"api-{i}")
                 for i in range(4)]
     runner = HttpServiceRunner(backends).start()
     token = tokens.issue("campaign-user")
-    print(f"service: {runner.url}  (4 API workers, WAL at {wal})")
+    print(f"service: {runner.url}  (4 API workers, storage engine at {root})")
 
     res = run_campaign(
         objective,
@@ -72,15 +74,25 @@ def main():
           f"failed={res.n_failed} (+{requeued} swept after the fact)")
     print(f"  best: {res.best_value:.4f} at {res.best_params}")
     print(f"  trials per node: {sorted(res.trials_per_worker.values())}")
+    stats = storage.storage_stats()
+    print(f"  WAL: {stats['wal_records']} records over "
+          f"{stats['rotations'] + 1} segment(s), fsync={stats['fsync']} "
+          f"({stats['fsyncs']} fsyncs), {stats['compactions']} compaction(s)")
 
-    # --- service crash-restart: replay the WAL into a fresh service ----
-    restarted = HopaasServer(storage=JournalStorage(wal), tokens=tokens)
-    studies = Client(HttpTransport(runner.host, runner.port), token).studies()
-    restored = restarted.storage.studies()
-    print(f"\nWAL replay: restarted service sees {len(restored)} stud(ies), "
-          f"{sum(len(s.trials) for s in restored)} trials "
-          f"(live service reports {studies[0]['n_trials']})")
-    runner.stop()
+    # --- crash-restart: load newest snapshot + replay only the tail ----
+    digest = storage.state_digest()
+    runner.stop()                       # flushes the shared storage
+    storage.close()
+    restarted = DurableStorage(root, fsync="group")
+    rec = restarted.last_recovery
+    assert restarted.state_digest() == digest, "recovered state diverged"
+    restored = restarted.studies()
+    print(f"\ncrash-restart: snapshot covers segment "
+          f"{rec['snapshot_covers']}, replayed {rec['records_replayed']} "
+          f"tail records in {rec['seconds'] * 1e3:.1f}ms; state digest "
+          f"verified identical ({len(restored)} stud(ies), "
+          f"{sum(len(s.trials) for s in restored)} trials)")
+    restarted.close()
 
 
 if __name__ == "__main__":

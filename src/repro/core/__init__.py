@@ -22,7 +22,8 @@ from .report import convergence_trace, format_report, study_summary
 from .samplers import known_samplers, make_sampler
 from .server import HOPAAS_VERSION, HopaasServer, StudyContext
 from .space import Param, SearchSpace
-from .storage import InMemoryStorage, JournalStorage
+from .durable import DurableStorage, FsyncMode
+from .storage import CorruptJournalError, InMemoryStorage, JournalStorage
 from .transport import (DirectTransport, HttpServiceRunner, HttpTransport,
                         RoundRobinTransport, Transport)
 from .types import Direction, Study, StudyConfig, Trial, TrialState
@@ -35,6 +36,7 @@ __all__ = [
     "format_report", "study_summary", "make_sampler", "known_samplers",
     "HOPAAS_VERSION", "HopaasServer", "StudyContext",
     "ObservationCache", "Param", "SearchSpace",
+    "CorruptJournalError", "DurableStorage", "FsyncMode",
     "InMemoryStorage", "JournalStorage", "DirectTransport",
     "HttpServiceRunner", "HttpTransport", "RoundRobinTransport", "Transport",
     "Direction", "Study", "StudyConfig", "Trial", "TrialState",

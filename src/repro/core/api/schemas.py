@@ -14,6 +14,7 @@ is a 422, not a best-effort coercion).
 from __future__ import annotations
 
 import copy
+import math
 from typing import Any
 
 from .errors import ApiError
@@ -37,6 +38,30 @@ _KINDS = {
 
 def _is_number(v: Any) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _require_finite(v: Any, field: str) -> None:
+    """Reject NaN/±inf objective values at the boundary: bare ``NaN`` /
+    ``Infinity`` literals are not valid strict JSON (the WAL refuses to
+    serialize them) and NaN silently corrupts incumbent comparisons."""
+    if _is_number(v) and not math.isfinite(v):
+        raise ApiError(422, "invalid_value",
+                       f"field {field!r} must be finite, got {v!r}",
+                       field=field)
+
+
+def _require_finite_tree(obj: Any, field: str) -> None:
+    """Recursively reject non-finite numbers anywhere in a spec subtree —
+    stdlib ``json.loads`` accepts bare ``NaN`` on the wire, but the WAL's
+    strict serializer (rightly) refuses to write it back out."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _require_finite_tree(v, f"{field}.{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _require_finite_tree(v, f"{field}[{i}]")
+    else:
+        _require_finite(obj, field)
 
 
 class Field:
@@ -213,6 +238,8 @@ class StudySpec(Schema):
                              known_samplers(), "unknown_sampler")
         _check_registry_name(out["pruner"], "pruner", "none",
                              known_pruners(), "unknown_pruner")
+        for key in ("properties", "sampler", "pruner"):
+            _require_finite_tree(out[key], key)
 
 
 class AskRequest(Schema):
@@ -247,10 +274,16 @@ class TellBody(Schema):
 
     @classmethod
     def post_validate(cls, out: dict[str, Any]) -> None:
-        if isinstance(out.get("value"), list) and not out["value"]:
-            raise ApiError(422, "invalid_value",
-                           "field 'value' must not be an empty list",
-                           field="value")
+        value = out.get("value")
+        if isinstance(value, list):
+            if not value:
+                raise ApiError(422, "invalid_value",
+                               "field 'value' must not be an empty list",
+                               field="value")
+            for i, item in enumerate(value):
+                _require_finite(item, f"value[{i}]")
+        else:
+            _require_finite(value, "value")
 
 
 class ReportBody(Schema):
@@ -262,6 +295,10 @@ class ReportBody(Schema):
         Field("step", "int", default=0, min_value=0),
         Field("value", "number", default=0.0),
     )
+
+    @classmethod
+    def post_validate(cls, out: dict[str, Any]) -> None:
+        _require_finite(out.get("value"), "value")
 
 
 class TellItem(TellBody):
@@ -307,7 +344,8 @@ class V1TellRequest(TellItem):
     NAME = "V1TellRequest"
 
 
-class V1ReportRequest(Schema):
+class V1ReportRequest(ReportBody):
+    """v1 ``should_prune`` body — inherits the finite-value check."""
     NAME = "V1ReportRequest"
     FIELDS = (Field("trial_uid", "str", required=True),) + ReportBody.FIELDS
 
@@ -348,6 +386,9 @@ class StudyResource(Schema):
         Field("directions", "list", nullable=True, item_kind="str"),
         Field("sampler", "str"),
         Field("pruner", "str"),
+        Field("data_version", "int",
+              doc="storage shard mutation counter — equal versions mean "
+                  "nothing changed; replayed identically across recovery"),
         Field("pareto_front", "list", nullable=True, item_kind="dict",
               doc="multi-objective studies only"),
     )
@@ -420,7 +461,13 @@ class ReportResponse(Schema):
 
 class VersionResponse(Schema):
     NAME = "VersionResponse"
-    FIELDS = (Field("version", "str", required=True),)
+    FIELDS = (
+        Field("version", "str", required=True),
+        Field("storage", "dict", nullable=True,
+              doc="storage backend + durability stats (v2 only): backend, "
+                  "fsync mode, snapshot/segment layout, WAL counters, "
+                  "last recovery summary"),
+    )
 
 
 class ErrorEnvelope(Schema):

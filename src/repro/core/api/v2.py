@@ -48,7 +48,7 @@ def register_v2(router: Router, server: Any) -> None:
     """Mount the v2 surface for ``server`` (a ``HopaasServer``)."""
 
     def version(req: Request):
-        return server.op_version()
+        return server.op_version_v2()
 
     def openapi(req: Request):
         return server.openapi_document()
@@ -98,7 +98,7 @@ def register_v2(router: Router, server: Any) -> None:
     v2 = ("v2",)
     for route in (
         Route("GET", "/api/v2/version", version, auth=None, tags=v2,
-              summary="service version",
+              summary="service version + storage/durability stats",
               response_schema=schemas.VersionResponse),
         Route("GET", "/api/v2/openapi", openapi, auth=None, tags=v2,
               summary="this document, generated from the route table"),

@@ -10,6 +10,7 @@ revocation is tracked in shared state.
 from __future__ import annotations
 
 import base64
+import binascii
 import hashlib
 import hmac
 import json
@@ -39,16 +40,38 @@ class TokenManager:
     def _sign(self, body: str) -> str:
         return hmac.new(self._secret, body.encode(), hashlib.sha256).hexdigest()[:24]
 
-    # -- verify -------------------------------------------------------------
-    def verify(self, token: str) -> dict:
+    @staticmethod
+    def _split(token: str) -> tuple[str, str]:
         try:
             body, sig = token.rsplit(".", 1)
-        except ValueError:
+        except (ValueError, AttributeError):
             raise AuthError("malformed token")
+        return body, sig
+
+    @staticmethod
+    def _decode_payload(body: str) -> dict:
+        """Decode a token body -> payload dict.  Every decode failure —
+        bad base64, bad JSON, non-object payload, missing/ill-typed
+        claims — surfaces as ``AuthError``, never a raw ``ValueError`` /
+        ``binascii.Error`` (which the wire layer would turn into a 500
+        instead of a 401)."""
+        pad = "=" * (-len(body) % 4)
+        try:
+            payload = json.loads(base64.urlsafe_b64decode(body + pad))
+        except (ValueError, binascii.Error):
+            raise AuthError("malformed token body")
+        if not isinstance(payload, dict) \
+                or not isinstance(payload.get("exp"), (int, float)) \
+                or not isinstance(payload.get("jti"), str):
+            raise AuthError("malformed token body")
+        return payload
+
+    # -- verify -------------------------------------------------------------
+    def verify(self, token: str) -> dict:
+        body, sig = self._split(token)
         if not hmac.compare_digest(sig, self._sign(body)):
             raise AuthError("bad signature")
-        pad = "=" * (-len(body) % 4)
-        payload = json.loads(base64.urlsafe_b64decode(body + pad))
+        payload = self._decode_payload(body)
         if payload["exp"] < time.time():
             raise AuthError("token expired")
         with self._lock:
@@ -57,8 +80,7 @@ class TokenManager:
         return payload
 
     def revoke(self, token: str) -> None:
-        body, _ = token.rsplit(".", 1)
-        pad = "=" * (-len(body) % 4)
-        payload = json.loads(base64.urlsafe_b64decode(body + pad))
+        body, _sig = self._split(token)
+        payload = self._decode_payload(body)
         with self._lock:
             self._revoked.add(payload["jti"])

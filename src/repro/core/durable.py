@@ -1,0 +1,470 @@
+"""Durable storage engine: snapshots + segmented WAL + group-commit fsync.
+
+The paper's deployment leans on PostgreSQL for *shared persistency to the
+multiple instances of the web application backend* (sec. 3).  The
+single-file ``JournalStorage`` reproduces the durability role but not its
+operational properties: the log grows without bound, recovery replays the
+whole lifetime, and nothing is ever fsynced.  ``DurableStorage`` is the
+real engine:
+
+* **Segmented WAL** — mutations append to ``wal-<n>.jsonl``; when the
+  active segment passes ``segment_bytes`` it is sealed (fsynced, closed)
+  and a new one opened.  Sealed segments are immutable.
+* **Snapshots** — ``snapshot-<n>.json`` holds the full store state
+  (``InMemoryStorage.state_record``) as of the end of segment ``n``.
+  Snapshots are written atomically (tmp + rename + dir fsync).
+* **Background compaction** — a daemon thread folds sealed segments into
+  a fresh snapshot by replaying them into a *shadow* store built from the
+  previous snapshot, then deletes the folded files.  Compaction reads
+  only immutable files, so it never takes a live shard lock and never
+  stalls traffic.
+* **Group-commit durability** — three modes:
+    - ``always``: the mutation is acknowledged only after an fsync covers
+      its record.  Concurrent writers share fsyncs (classic group
+      commit): whoever grabs the in-flight slot syncs everything written
+      so far and wakes the rest.
+    - ``group``: the mutation is acknowledged once written to the OS; a
+      flusher thread issues one fsync per ``group_interval`` window, so
+      the loss window after a power failure is bounded by the interval
+      (and sealing always fsyncs).
+    - ``off``: no fsync (crash-consistent against process death, not
+      power loss) — the mode for tests and throwaway runs.
+* **Recovery** = load the newest snapshot + replay only the segment tail
+  past it — O(new work since the last compaction), not O(lifetime).  A
+  torn final record (crash mid-append) in the *last* segment is truncated
+  with a warning; corruption anywhere else raises
+  ``CorruptJournalError``.  Recovered state is index-for-index identical
+  to the pre-crash store — ``InMemoryStorage.state_digest`` is the
+  equality witness used by the tests.
+
+Layout of ``root``::
+
+    snapshot-00000007.json   state as of the end of segment 7
+    wal-00000008.jsonl       sealed, awaiting compaction
+    wal-00000009.jsonl       active
+
+Every restart seals the previous active segment (repaired if torn) and
+starts a fresh one, so segment files are append-only for their lifetime.
+"""
+from __future__ import annotations
+
+import enum
+import json
+import logging
+import os
+import re
+import threading
+import time
+from typing import Any
+
+from .storage import (CorruptJournalError, InMemoryStorage,
+                      load_journal_file)
+
+logger = logging.getLogger("repro.storage")
+
+_SNAP_RE = re.compile(r"snapshot-(\d{8})\.json$")
+_SEG_RE = re.compile(r"wal-(\d{8})\.jsonl$")
+
+
+class FsyncMode(str, enum.Enum):
+    ALWAYS = "always"       # ack after fsync (batched across writers)
+    GROUP = "group"         # ack after write; fsync per commit window
+    OFF = "off"             # never fsync (tests / throwaway runs)
+
+
+class DurableStorage(InMemoryStorage):
+    """Snapshot + segmented-WAL storage engine (see module docstring)."""
+
+    def __init__(self, root: str, *, fsync: str | FsyncMode = FsyncMode.GROUP,
+                 segment_bytes: int = 4 * 1024 * 1024,
+                 group_interval: float = 0.005,
+                 auto_compact: bool = True, compact_min_segments: int = 1):
+        self._journal_lock = threading.Lock()
+        super().__init__()
+        self.root = root
+        self.fsync_mode = FsyncMode(fsync)
+        self.segment_bytes = max(1, int(segment_bytes))
+        self.group_interval = float(group_interval)
+        self.auto_compact = bool(auto_compact)
+        self.compact_min_segments = max(1, int(compact_min_segments))
+        # append bookkeeping (under _journal_lock)
+        self._seq = 0                    # records appended this process
+        self._written_seq = 0            # highest seq flushed to the OS
+        self._records = 0
+        self._bytes = 0
+        self._rotations = 0
+        self._closed = False
+        # fsync protocol (under _durable_cv)
+        self._durable_cv = threading.Condition()
+        self._durable_seq = 0            # highest seq covered by an fsync
+        self._fsync_inflight = False
+        self._fsync_count = 0
+        self._commits = 0                # fsync batches (group commits)
+        # compaction
+        self._compact_lock = threading.Lock()
+        self._compact_event = threading.Event()
+        self._compactions = 0
+        self._last_compaction: dict[str, Any] | None = None
+        self._covers = 0                 # last segment folded into a snapshot
+        # threads (started lazily)
+        self._stop = threading.Event()
+        self._flusher: threading.Thread | None = None
+        self._compactor: threading.Thread | None = None
+
+        os.makedirs(root, exist_ok=True)
+        self._recover()
+        # always start a fresh segment: repaired/previous files stay sealed
+        existing = self._segment_indexes()
+        self._active_index = max(existing + [self._covers]) + 1
+        self._active_file = open(self._segment_path(self._active_index), "ab")
+        self._active_size = 0
+        if self.auto_compact and any(i < self._active_index for i in existing):
+            self._start_compactor()
+            self._compact_event.set()
+
+    # ------------------------------------------------------------------ #
+    # paths
+    # ------------------------------------------------------------------ #
+    def _segment_path(self, index: int) -> str:
+        return os.path.join(self.root, f"wal-{index:08d}.jsonl")
+
+    def _snapshot_path(self, covers: int) -> str:
+        return os.path.join(self.root, f"snapshot-{covers:08d}.json")
+
+    def _segment_indexes(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _SEG_RE.fullmatch(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _snapshot_indexes(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _SNAP_RE.fullmatch(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _fsync_dir(self) -> None:
+        try:
+            fd = os.open(self.root, os.O_RDONLY)
+        except OSError:              # platform without directory fds
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
+    # ------------------------------------------------------------------ #
+    # recovery: latest snapshot + segment-tail replay
+    # ------------------------------------------------------------------ #
+    def _recover(self) -> None:
+        t0 = time.perf_counter()
+        for name in os.listdir(self.root):     # crash mid-snapshot-write
+            if name.endswith(".tmp"):
+                os.remove(os.path.join(self.root, name))
+        snaps = self._snapshot_indexes()
+        covers = snaps[-1] if snaps else 0
+        snapshot_trials = 0
+        if covers:
+            with open(self._snapshot_path(covers), "rb") as f:
+                try:
+                    snap = json.load(f)
+                except json.JSONDecodeError as e:
+                    raise CorruptJournalError(
+                        f"unreadable snapshot {self._snapshot_path(covers)}: "
+                        f"{e.msg}") from e
+            self.load_state(snap["state"])
+            snapshot_trials = sum(len(s["study"]["trials"])
+                                  for s in snap["state"]["studies"])
+        for stale in snaps[:-1]:               # superseded snapshots
+            os.remove(self._snapshot_path(stale))
+        segments = self._segment_indexes()
+        for folded in [i for i in segments if i <= covers]:
+            # folded into the snapshot; the pre-crash compactor died
+            # between the rename and the delete
+            os.remove(self._segment_path(folded))
+        tail = [i for i in segments if i > covers]
+        replayed, torn = 0, False
+        self._replaying = True
+        try:
+            for j, index in enumerate(tail):
+                n, t = load_journal_file(
+                    self._segment_path(index), self._apply,
+                    # only the newest segment can have a torn tail: older
+                    # ones were sealed with an fsync before rotation
+                    tolerate_torn_tail=(j == len(tail) - 1), repair=True)
+                torn = torn or t
+                replayed += n
+        finally:
+            self._replaying = False
+        self._covers = covers
+        self.last_recovery = {
+            "snapshot_covers": covers,
+            "snapshot_trials": snapshot_trials,
+            "segments_replayed": len(tail),
+            "records_replayed": replayed,
+            "torn_tail": torn,
+            "seconds": round(time.perf_counter() - t0, 6),
+        }
+
+    # ------------------------------------------------------------------ #
+    # WAL append + group-commit fsync
+    # ------------------------------------------------------------------ #
+    def _log(self, record: dict[str, Any]) -> None:
+        if self._replaying:
+            return
+        # strict JSON: NaN/Infinity would make the segment unreadable
+        line = (json.dumps(record, allow_nan=False) + "\n").encode()
+        with self._journal_lock:
+            if self._closed:
+                return
+            f = self._active_file
+            f.write(line)
+            f.flush()                   # in the OS before we advance seq
+            self._seq += 1
+            seq = self._seq
+            self._written_seq = seq
+            self._active_size += len(line)
+            self._records += 1
+            self._bytes += len(line)
+            if self._active_size >= self.segment_bytes:
+                self._rotate_locked()
+            if self.fsync_mode is FsyncMode.GROUP:
+                self._start_flusher()
+        if self.fsync_mode is FsyncMode.ALWAYS:
+            self._ensure_durable(seq)
+
+    def _ensure_durable(self, seq: int) -> None:
+        """Block until an fsync covers ``seq`` — the group-commit core.
+        One thread grabs the in-flight slot and syncs everything written
+        so far; the rest ride on its notify."""
+        while True:
+            with self._durable_cv:
+                if self._durable_seq >= seq:
+                    return
+                if self._fsync_inflight:
+                    self._durable_cv.wait(timeout=1.0)
+                    continue
+                self._fsync_inflight = True
+                target = self._written_seq
+                f = self._active_file
+            synced = False
+            try:
+                os.fsync(f.fileno())
+                synced = True
+            finally:
+                with self._durable_cv:
+                    self._fsync_inflight = False
+                    if synced:
+                        self._durable_seq = max(self._durable_seq, target)
+                        self._fsync_count += 1
+                        self._commits += 1
+                    self._durable_cv.notify_all()
+
+    def _rotate_locked(self) -> None:
+        """Seal the active segment and open the next (caller holds the
+        journal lock).  Takes the fsync slot so no concurrent fsync can
+        race the file handle being closed."""
+        with self._durable_cv:
+            while self._fsync_inflight:
+                self._durable_cv.wait()
+            self._fsync_inflight = True
+        sealed_seq = self._written_seq
+        try:
+            f = self._active_file
+            f.flush()
+            if self.fsync_mode is not FsyncMode.OFF:
+                os.fsync(f.fileno())
+            f.close()
+            self._active_index += 1
+            self._active_file = open(
+                self._segment_path(self._active_index), "ab")
+            self._active_size = 0
+            self._rotations += 1
+        finally:
+            with self._durable_cv:
+                self._fsync_inflight = False
+                if self.fsync_mode is not FsyncMode.OFF:
+                    self._durable_seq = max(self._durable_seq, sealed_seq)
+                    self._fsync_count += 1
+                self._durable_cv.notify_all()
+        if self.auto_compact:
+            self._start_compactor()
+            self._compact_event.set()
+
+    # ------------------------------------------------------------------ #
+    # background threads
+    # ------------------------------------------------------------------ #
+    def _start_flusher(self) -> None:
+        if self._flusher is None:
+            self._flusher = threading.Thread(
+                target=self._flusher_loop, daemon=True,
+                name="durable-flusher")
+            self._flusher.start()
+
+    def _flusher_loop(self) -> None:
+        while not self._stop.wait(self.group_interval):
+            with self._journal_lock:
+                if self._closed:
+                    return
+                seq = self._written_seq
+            if seq > self._durable_seq:
+                self._ensure_durable(seq)
+
+    def _start_compactor(self) -> None:
+        if self._compactor is None:
+            self._compactor = threading.Thread(
+                target=self._compactor_loop, daemon=True,
+                name="durable-compactor")
+            self._compactor.start()
+
+    def _compactor_loop(self) -> None:
+        while True:
+            self._compact_event.wait()
+            self._compact_event.clear()
+            if self._stop.is_set():
+                return
+            try:
+                self.compact()
+            except Exception:
+                logger.exception("background compaction failed")
+
+    # ------------------------------------------------------------------ #
+    # compaction
+    # ------------------------------------------------------------------ #
+    def compact(self, min_segments: int | None = None) -> int:
+        """Fold sealed segments into a fresh snapshot; delete the folded
+        files.  Returns the number of segments folded (0 = nothing to do).
+
+        The snapshot is built by replaying the sealed segments into a
+        *shadow* store seeded from the previous snapshot — only immutable
+        files are read, so compaction never touches a live shard lock and
+        the result is exactly the state a recovery of those files would
+        produce.  The new snapshot lands atomically (tmp + rename); only
+        then are the old snapshot and folded segments deleted, so a crash
+        at any point leaves a recoverable directory.
+        """
+        with self._compact_lock:
+            if self._stop.is_set():
+                # a straggler compaction after close() would delete files
+                # under a DurableStorage re-opened on the same directory
+                return 0
+            with self._journal_lock:
+                active = self._active_index
+            covers = self._covers
+            sealed = [i for i in self._segment_indexes()
+                      if covers < i < active]
+            need = (self.compact_min_segments if min_segments is None
+                    else max(1, int(min_segments)))
+            if len(sealed) < need:
+                return 0
+            shadow = InMemoryStorage()
+            if covers:
+                with open(self._snapshot_path(covers), "rb") as f:
+                    shadow.load_state(json.load(f)["state"])
+            replayed = 0
+            for index in sealed:
+                n, _ = load_journal_file(
+                    self._segment_path(index), shadow._apply,
+                    tolerate_torn_tail=False, repair=False)
+                replayed += n
+            new_covers = sealed[-1]
+            blob = json.dumps({"covers": new_covers,
+                               "state": shadow.state_record()},
+                              allow_nan=False).encode()
+            tmp = self._snapshot_path(new_covers) + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._snapshot_path(new_covers))
+            self._fsync_dir()
+            if covers and os.path.exists(self._snapshot_path(covers)):
+                os.remove(self._snapshot_path(covers))
+            for index in sealed:
+                os.remove(self._segment_path(index))
+            self._covers = new_covers
+            self._compactions += 1
+            self._last_compaction = {"folded_segments": len(sealed),
+                                     "records": replayed,
+                                     "covers": new_covers}
+            return len(sealed)
+
+    # ------------------------------------------------------------------ #
+    # durability hooks + stats
+    # ------------------------------------------------------------------ #
+    def flush(self) -> None:
+        """Force everything acknowledged so far to disk (any mode)."""
+        with self._journal_lock:
+            if self._closed:
+                return
+            self._active_file.flush()
+            seq = self._written_seq
+        if seq:
+            self._ensure_durable(seq)
+
+    def close(self) -> None:
+        """Flush, fsync, stop the background threads.  Idempotent."""
+        with self._journal_lock:
+            if self._closed:
+                return
+            self._closed = True
+            with self._durable_cv:
+                while self._fsync_inflight:
+                    self._durable_cv.wait()
+                self._fsync_inflight = True
+            try:
+                f = self._active_file
+                f.flush()
+                os.fsync(f.fileno())
+                f.close()
+            finally:
+                with self._durable_cv:
+                    self._fsync_inflight = False
+                    self._durable_seq = self._written_seq
+                    self._fsync_count += 1
+                    self._durable_cv.notify_all()
+        self._stop.set()
+        self._compact_event.set()          # wake the compactor to exit
+        # fence: wait out any in-flight compaction so the directory is
+        # safe to re-open the moment close() returns
+        with self._compact_lock:
+            pass
+        for t in (self._flusher, self._compactor):
+            if t is not None:
+                t.join(timeout=5.0)
+
+    def storage_stats(self) -> dict[str, Any]:
+        stats = super().storage_stats()
+        with self._journal_lock:
+            active = self._active_index
+            active_bytes = self._active_size
+            records, wal_bytes = self._records, self._bytes
+            rotations = self._rotations
+        with self._durable_cv:
+            fsyncs, commits = self._fsync_count, self._commits
+        stats.update({
+            "backend": "durable",
+            "root": self.root,
+            "fsync": self.fsync_mode.value,
+            "segment_bytes": self.segment_bytes,
+            "snapshot_covers": self._covers,
+            "active_segment": active,
+            "active_segment_bytes": active_bytes,
+            "sealed_segments": sum(
+                1 for i in self._segment_indexes() if i < active),
+            "wal_records": records,
+            "wal_bytes": wal_bytes,
+            "fsyncs": fsyncs,
+            "group_commits": commits,
+            "rotations": rotations,
+            "compactions": self._compactions,
+            "last_compaction": self._last_compaction,
+            "last_recovery": self.last_recovery,
+        })
+        return stats

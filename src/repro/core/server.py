@@ -43,7 +43,12 @@ Fault tolerance beyond the paper's text (needed for 1000+-node campaigns):
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
+import math
+import os
+import shutil
+import tempfile
 import threading
 import time
 from typing import Any
@@ -66,6 +71,38 @@ HOPAAS_VERSION = "1.1.0-jax"
 # the v1 shim projects the richer v2 resource down to this
 _V1_STUDY_KEYS = ("key", "name", "n_trials", "n_completed", "n_pruned",
                   "n_failed", "best_value", "best_params")
+
+
+def _default_storage() -> InMemoryStorage:
+    """Storage for servers constructed without one.
+
+    ``REPRO_STORAGE=durable`` switches the default to a ``DurableStorage``
+    in a throwaway directory (fsync off — the point is exercising the
+    engine's WAL/snapshot/recovery code paths, not disk latency).  CI
+    runs the tier-1 suite a second time under this flag so every test
+    that builds a bare ``HopaasServer()`` also drives the journaled
+    engine.
+    """
+    mode = os.environ.get("REPRO_STORAGE", "memory")
+    if mode.startswith("durable"):
+        from .durable import DurableStorage
+        root = tempfile.mkdtemp(prefix="hopaas-durable-")
+        storage = DurableStorage(root, fsync="off",
+                                 segment_bytes=256 * 1024)
+        atexit.register(shutil.rmtree, root, ignore_errors=True)
+        return storage
+    return InMemoryStorage()
+
+
+def _require_finite_value(value: float | None, field: str = "value") -> None:
+    """Non-finite objectives never reach storage: NaN corrupts incumbent
+    comparisons and bare NaN/Infinity is invalid strict JSON for the WAL.
+    The wire schemas already reject these with a 422; this guards the
+    direct in-process op_* callers the same way."""
+    if value is not None and not math.isfinite(value):
+        raise ApiError(422, "invalid_value",
+                       f"field {field!r} must be finite, got {value!r}",
+                       field=field)
 
 
 @dataclasses.dataclass
@@ -91,7 +128,7 @@ class HopaasServer:
                  tokens: TokenManager | None = None,
                  lease_seconds: float = 60.0, max_retries: int = 3,
                  seed: int = 0, worker_name: str = "worker-0"):
-        self.storage = storage or InMemoryStorage()
+        self.storage = storage or _default_storage()
         self.tokens = tokens or TokenManager()
         self.lease_seconds = float(lease_seconds)
         self.max_retries = int(max_retries)
@@ -237,14 +274,15 @@ class HopaasServer:
                 res["pareto_front"] = [
                     {"params": t.params, "values": t.values}
                     for t in study.pareto_front()]
-            # no created_at here: it is not journaled, and the resource
-            # must be identical across a crash-restart replay
             res.update({
                 "n_running": counts[TrialState.RUNNING],
                 "direction": study.config.direction.value,
                 "directions": study.config.directions,
                 "sampler": study.config.sampler.get("name", "tpe"),
                 "pruner": study.config.pruner.get("name", "none"),
+                # shard mutation counter: mutations replay identically, so
+                # the resource stays equal across a crash-restart recovery
+                "data_version": self.storage.data_version(key),
             })
         return res
 
@@ -253,6 +291,12 @@ class HopaasServer:
     # ------------------------------------------------------------------ #
     def op_version(self) -> dict[str, Any]:
         return {"version": HOPAAS_VERSION}
+
+    def op_version_v2(self) -> dict[str, Any]:
+        """v2 version resource: adds the storage/durability stats (the v1
+        payload is byte-frozen to ``{"version": ...}``)."""
+        return {"version": HOPAAS_VERSION,
+                "storage": self.storage.storage_stats()}
 
     def op_create_study(self, spec: dict[str, Any]
                         ) -> tuple[bool, dict[str, Any]]:
@@ -308,7 +352,11 @@ class HopaasServer:
         values = None
         if isinstance(value, (list, tuple)):
             values = [float(v) for v in value]
+            for i, v in enumerate(values):
+                _require_finite_value(v, f"value[{i}]")
             value = values[0]
+        elif value is not None:
+            _require_finite_value(float(value))
         final_state = TrialState(state or "completed")
         trial = self.storage.get_trial(uid)
         if trial is None:
@@ -350,6 +398,7 @@ class HopaasServer:
                   ) -> dict[str, Any]:
         """Record an intermediate value (lease heartbeat) and return the
         pruning verdict — v1 ``should_prune``."""
+        _require_finite_value(float(value))
         trial = self.storage.get_trial(uid)
         if trial is None:
             raise ApiError(404, "trial_not_found", f"unknown trial {uid!r}")

@@ -1,40 +1,74 @@
 """HOPAAS service launcher — the INFN-Cloud deployment in one process.
 
 Starts N stateless server workers behind the threaded HTTP frontend
-(Uvicorn x N + NGINX role), backed by a WAL-journaled storage
-(PostgreSQL role) that survives restarts, and prints a fresh API token.
-Workers share per-study storage shards, so requests for different
-studies run in parallel; clients may use the batched `ask_batch` /
-`tell_batch` endpoints (see README.md, "Wire protocol").
+(Uvicorn x N + NGINX role), backed by a durable storage engine
+(PostgreSQL role) that survives crashes and restarts, and prints a fresh
+API token.  Workers share per-study storage shards, so requests for
+different studies run in parallel; clients may use the batched
+`ask_batch` / `tell_batch` endpoints (see README.md, "Wire protocol").
 
   PYTHONPATH=src python -m repro.core.service --port 8731 \
-      --workers 4 --journal hopaas.wal
+      --workers 4 --journal-dir hopaas-data --fsync group
+
+``--journal-dir`` selects the snapshot + segmented-WAL engine
+(``DurableStorage``); ``--journal FILE`` keeps the legacy single-file
+JSONL journal.  ``--fsync`` picks the durability/latency trade-off:
+``always`` (ack after fsync, group-committed), ``group`` (one fsync per
+commit window), ``off`` (no fsync).  The journal is closed cleanly on
+Ctrl-C *and* via ``atexit``, so the buffered WAL tail is never dropped
+by a normal shutdown path.
 """
 from __future__ import annotations
 
 import argparse
+import atexit
 import time
 
 from .auth import TokenManager
+from .durable import DurableStorage
 from .server import HopaasServer
 from .storage import InMemoryStorage, JournalStorage
 from .transport import HttpServiceRunner
 
 
-def main() -> int:
+def build_storage(args: argparse.Namespace) -> InMemoryStorage:
+    if args.journal_dir:
+        return DurableStorage(args.journal_dir, fsync=args.fsync,
+                              segment_bytes=args.segment_bytes,
+                              auto_compact=not args.no_compaction)
+    if args.journal:
+        return JournalStorage(args.journal)
+    return InMemoryStorage()
+
+
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--port", type=int, default=8731)
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--workers", type=int, default=2,
                     help="stateless API workers sharing one storage")
+    ap.add_argument("--journal-dir", default=None,
+                    help="storage-engine directory (snapshots + segmented "
+                         "WAL + compaction); survives crash-restart")
     ap.add_argument("--journal", default=None,
-                    help="WAL path for crash-restartable storage")
+                    help="legacy single-file JSONL WAL path")
+    ap.add_argument("--fsync", choices=("always", "group", "off"),
+                    default="group",
+                    help="WAL durability: ack-after-fsync / one fsync per "
+                         "commit window / never (default: group)")
+    ap.add_argument("--segment-bytes", type=int, default=4 * 1024 * 1024,
+                    help="rotate the WAL segment past this size")
+    ap.add_argument("--no-compaction", action="store_true",
+                    help="disable background folding of sealed segments "
+                         "into snapshots")
     ap.add_argument("--lease-seconds", type=float, default=60.0)
     ap.add_argument("--token-ttl-hours", type=float, default=24.0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    storage = (JournalStorage(args.journal) if args.journal
-               else InMemoryStorage())
+    storage = build_storage(args)
+    # a missed shutdown path (exception, sys.exit) must still flush the
+    # WAL tail; close() is idempotent so the Ctrl-C path below is safe
+    atexit.register(storage.close)
     tokens = TokenManager()
     workers = [HopaasServer(storage=storage, tokens=tokens,
                             lease_seconds=args.lease_seconds,
@@ -43,15 +77,19 @@ def main() -> int:
     runner = HttpServiceRunner(workers, host=args.host,
                                port=args.port).start()
     token = tokens.issue("cli-user", ttl_seconds=args.token_ttl_hours * 3600)
+    backend = storage.storage_stats()["backend"]
     print(f"HOPAAS service at {runner.url}  ({args.workers} workers, "
-          f"storage={'journal:' + args.journal if args.journal else 'memory'})")
+          f"storage={backend})")
     print(f"API token: {token}")
     print("Ctrl-C to stop.")
     try:
         while True:
             time.sleep(3600)
     except KeyboardInterrupt:
-        runner.stop()
+        pass
+    finally:
+        runner.stop()            # also flushes the workers' storage
+        storage.close()
     return 0
 
 

@@ -30,17 +30,103 @@ provides crash-restart recovery: every mutation is journaled under the
 owning shard's lock (so per-study order is preserved) before being
 acknowledged, and ``replay`` reconstructs the full state — including the
 indices, lease heap, completion log, and incumbent — from the log.
+Replay tolerates exactly one torn (incomplete) final record — the
+signature of a crash mid-append — by truncating it with a warning;
+corruption anywhere else raises ``CorruptJournalError``.
+
+``repro.core.durable.DurableStorage`` builds the full storage engine on
+these primitives: point-in-time snapshots (``state_record`` /
+``load_state``), a segmented WAL with group-commit fsync, and background
+compaction.  ``state_digest`` is the shared equality witness: two stores
+with the same digest hold index-for-index identical state (trials,
+lease deadlines, completion log, incumbent, waiting queue, version
+counters).
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
 import json
+import logging
+import math
 import os
 import threading
 from collections import deque
 from typing import Any, Callable
 
 from .types import Direction, Study, StudyConfig, Trial, TrialState
+
+logger = logging.getLogger("repro.storage")
+
+
+class CorruptJournalError(RuntimeError):
+    """A journal/segment holds an unreadable record somewhere other than
+    the torn tail of the final append — replay cannot proceed safely."""
+
+
+def load_journal_file(path: str, apply: Callable[[dict[str, Any]], None], *,
+                      tolerate_torn_tail: bool = True,
+                      repair: bool = True) -> tuple[int, bool]:
+    """Stream one JSONL journal file through ``apply``, one record at a
+    time (memory stays O(longest line), never O(file) — legacy journals
+    grow without bound).  Returns ``(n_records_applied, torn_tail_found)``.
+
+    A *torn tail* is an unparseable final line with no trailing newline —
+    exactly what a crash mid-``write`` leaves behind (records are written
+    as single ``line + "\\n"`` appends, so a partial write can never
+    contain the newline).  With ``repair`` the torn bytes are truncated
+    from the file so the next append starts on a clean boundary; a
+    parseable-but-unterminated final record is kept and newline-
+    terminated.  An unparseable line anywhere else (or a newline-
+    terminated garbage tail) is corruption, not a torn append, and
+    raises ``CorruptJournalError``.
+    """
+    n = 0
+    clean = 0            # byte offset of the last good record boundary
+    pos = 0
+    last_raw = b""
+    bad: tuple[int, bytes, str] | None = None    # (offset, line, json msg)
+    with open(path, "rb") as f:
+        for raw in f:
+            if bad is not None:
+                # anything after the failed line (even a blank) proves it
+                # was newline-terminated — corruption, not a torn append
+                raise CorruptJournalError(
+                    f"corrupt journal record in {path} at byte "
+                    f"{bad[0]}: {bad[2]}")
+            line = raw.strip()
+            if line:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError as e:
+                    bad = (pos, raw, e.msg)
+                    pos += len(raw)
+                    continue
+                apply(rec)
+                n += 1
+            pos += len(raw)
+            last_raw = raw
+            clean = pos
+    torn = False
+    if bad is not None:
+        offset, raw, msg = bad
+        if not (tolerate_torn_tail and not raw.endswith(b"\n")):
+            raise CorruptJournalError(
+                f"corrupt journal record in {path} at byte {offset}: {msg}")
+        torn = True
+        logger.warning(
+            "torn tail in journal %s: truncating %d bytes of incomplete "
+            "final record %r", path, len(raw),
+            raw.strip()[:60].decode(errors="replace"))
+        if repair:
+            with open(path, "rb+") as f:
+                f.truncate(clean)
+    elif repair and last_raw and not last_raw.endswith(b"\n"):
+        # complete final record that lost only its newline: terminate it
+        # so the next append does not merge into it
+        with open(path, "ab") as f:
+            f.write(b"\n")
+    return n, torn
 
 
 class _StudyShard:
@@ -93,9 +179,12 @@ class InMemoryStorage:
                 return shard.study, False
             study = Study(config=config)
             study._managed = True       # mutations route through this store
-            self._shards[key] = shard = _StudyShard(study)
-            with shard.lock:
-                self._log({"op": "create_study", "config": config.to_record()})
+            # write-ahead: the record is serialized (and, depending on the
+            # fsync mode, made durable) *before* the shard is published —
+            # a journaling failure never leaves a half-created study
+            self._log({"op": "create_study", "config": config.to_record(),
+                       "created_at": study.created_at})
+            self._shards[key] = _StudyShard(study)
             return study, True
 
     def get_study(self, key: str) -> Study | None:
@@ -135,6 +224,13 @@ class InMemoryStorage:
         """A trial just became an observation: log it and race the incumbent.
         Tie-break on equal values by lowest trial_id, matching the
         ``Study.best_trial()`` scan exactly."""
+        if not math.isfinite(trial.value):
+            # a NaN/inf objective is not a usable observation: it would
+            # poison both the incumbent comparison (NaN compares false
+            # against everything) and the sampler's observation matrices.
+            # The API boundary rejects these with a 422; this guard keeps
+            # direct storage writes from corrupting the indices.
+            return
         shard.completed_log.append(trial.uid)
         sign = (1.0 if shard.study.config.direction == Direction.MINIMIZE
                 else -1.0)
@@ -158,8 +254,11 @@ class InMemoryStorage:
                           study_key=study_key, params=params,
                           worker_id=worker_id, lease_deadline=lease_deadline,
                           retries=retries)
-            self._index_trial(shard, trial)
+            # write-ahead: log before indexing, so a serialization failure
+            # (e.g. a non-finite param slipping past the boundary) cannot
+            # leave live state diverged from what a recovery will rebuild
             self._log({"op": "add_trial", "trial": trial.to_record()})
+            self._index_trial(shard, trial)
             return trial
 
     def get_trial(self, uid: str) -> Trial | None:
@@ -180,6 +279,13 @@ class InMemoryStorage:
                 raise KeyError(uid)
             was_observation = (trial.state == TrialState.COMPLETED
                                and trial.value is not None)
+            # write-ahead: a record that cannot be journaled (strict JSON
+            # rejects NaN/inf) must fail *before* the in-memory apply, or
+            # live state would silently diverge from the recovered one
+            self._log({"op": "update_trial", "uid": uid,
+                       "fields": {k: (list(v) if k == "intermediate" else
+                                      (v.value if isinstance(v, TrialState) else v))
+                                  for k, v in fields.items()}})
             for k, v in fields.items():
                 if k == "intermediate":            # (step, value) append
                     step, value = v
@@ -200,10 +306,6 @@ class InMemoryStorage:
             if (not was_observation and trial.state == TrialState.COMPLETED
                     and trial.value is not None):
                 self._note_observation(shard, trial)
-            self._log({"op": "update_trial", "uid": uid,
-                       "fields": {k: (list(v) if k == "intermediate" else
-                                      (v.value if isinstance(v, TrialState) else v))
-                                  for k, v in fields.items()}})
             return trial
 
     # -- indexed views ---------------------------------------------------
@@ -340,10 +442,10 @@ class InMemoryStorage:
         if shard is None:
             raise KeyError(study_key)
         with shard.lock:
-            shard.waiting.append({"params": params, "retries": retries})
-            shard.version += 1
             self._log({"op": "enqueue", "study_key": study_key,
                        "params": params, "retries": retries})
+            shard.waiting.append({"params": params, "retries": retries})
+            shard.version += 1
 
     def pop_waiting(self, study_key: str) -> dict[str, Any] | None:
         shard = self._shard(study_key)
@@ -351,11 +453,139 @@ class InMemoryStorage:
             return None
         with shard.lock:
             if shard.waiting:
+                self._log({"op": "pop_waiting", "study_key": study_key})
                 item = shard.waiting.popleft()
                 shard.version += 1
-                self._log({"op": "pop_waiting", "study_key": study_key})
                 return item
             return None
+
+    # -- WAL record replay ------------------------------------------------
+    # Shared by JournalStorage, the DurableStorage recovery path, and the
+    # compactor's shadow replayer (a plain InMemoryStorage that records
+    # are folded into).  ``_replaying`` suppresses re-journaling while a
+    # journaled subclass applies its own log.
+    _replaying = False
+
+    def _insert_trial(self, trial: Trial) -> None:
+        """Replay path: insert preserving ``trial_id``, padding journal gaps
+        with explicit failed tombstones so uid->trial lookups stay aligned."""
+        shard = self._shard(trial.study_key)
+        if shard is None:
+            raise KeyError(trial.study_key)
+        with shard.lock:
+            while len(shard.study.trials) < trial.trial_id:
+                self._index_trial(shard, Trial.tombstone(
+                    trial.study_key, len(shard.study.trials)))
+            self._index_trial(shard, trial)
+
+    def _apply(self, rec: dict[str, Any]) -> None:
+        """Apply one WAL record to this store (replay/compaction path)."""
+        op = rec["op"]
+        if op == "create_study":
+            study, created = self.get_or_create_study(
+                StudyConfig.from_record(rec["config"]))
+            if created and "created_at" in rec:
+                study.created_at = rec["created_at"]
+        elif op == "add_trial":
+            self._insert_trial(Trial.from_record(rec["trial"]))
+        elif op == "update_trial":
+            fields = dict(rec["fields"])
+            if "state" in fields:
+                fields["state"] = TrialState(fields["state"])
+            if "intermediate" in fields:
+                fields["intermediate"] = tuple(fields["intermediate"])
+            self.update_trial(rec["uid"], **fields)
+        elif op == "enqueue":
+            self.enqueue_params(rec["study_key"], rec["params"], rec["retries"])
+        elif op == "pop_waiting":
+            self.pop_waiting(rec["study_key"])
+
+    # -- snapshots + state digest -----------------------------------------
+    def state_record(self) -> dict[str, Any]:
+        """Point-in-time serialization of the full store: per shard, the
+        study (config, trials — see ``types.Study.to_record``), waiting
+        queue, completion log, incumbent, and version counter.  The
+        derived indices (uid map, state buckets, lease heap) are rebuilt
+        on ``load_state``.  Each shard is serialized under its own lock;
+        callers needing a cross-shard-atomic cut must quiesce writers
+        (the compactor reads only sealed, immutable files instead)."""
+        with self._registry_lock:
+            shards = list(self._shards.values())
+        studies = []
+        for shard in shards:
+            with shard.lock:
+                studies.append({
+                    "key": shard.study.key,
+                    "study": shard.study.to_record(),
+                    "waiting": [dict(w) for w in shard.waiting],
+                    "completed_log": list(shard.completed_log),
+                    "best_uid": shard.best_uid,
+                    "version": shard.version,
+                })
+        return {"studies": studies}
+
+    def _restore_shard(self, rec: dict[str, Any]) -> None:
+        """Rebuild one shard (and every derived index) from its snapshot
+        record.  The completion log and incumbent are restored verbatim —
+        they carry *completion order*, which trial order cannot recover."""
+        study = Study.from_record(rec["study"])
+        study._managed = True
+        key = study.key
+        with self._registry_lock:
+            if key in self._shards:
+                raise ValueError(f"shard {key!r} already loaded")
+            self._shards[key] = shard = _StudyShard(study)
+        with shard.lock:
+            for t in study.trials:
+                shard.by_uid[t.uid] = t
+                shard.state_uids[t.state].add(t.uid)
+                if (t.state == TrialState.RUNNING
+                        and t.lease_deadline is not None):
+                    heapq.heappush(shard.lease_heap,
+                                   (t.lease_deadline, t.uid))
+            shard.waiting = deque(rec["waiting"])
+            shard.completed_log = list(rec["completed_log"])
+            shard.best_uid = rec["best_uid"]
+            shard.version = rec["version"]
+
+    def load_state(self, record: dict[str, Any]) -> None:
+        """Restore a ``state_record`` snapshot into this (empty) store."""
+        for shard_rec in record["studies"]:
+            self._restore_shard(shard_rec)
+
+    def state_digest(self) -> str:
+        """Order-independent content hash of the full logical state.
+
+        Covers everything ``state_record`` covers plus an explicit view
+        of the live leases (uid -> deadline of RUNNING trials — the
+        information the lease heap is built from), so digest equality
+        proves a recovered store is index-for-index identical to the
+        original: same trials, same incumbent, same completion order,
+        same waiting queue, same future expiries."""
+        record = self.state_record()
+        for srec in record["studies"]:
+            srec["leases"] = {
+                t["uid"]: t["lease_deadline"]
+                for t in srec["study"]["trials"]
+                if t["state"] == TrialState.RUNNING.value
+                and t["lease_deadline"] is not None}
+        record["studies"].sort(key=lambda s: s["key"])
+        blob = json.dumps(record, sort_keys=True, allow_nan=False)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    # -- durability hooks --------------------------------------------------
+    def flush(self) -> None:
+        """Make every acknowledged mutation durable (no-op in memory)."""
+
+    def close(self) -> None:
+        """Flush and release any backing files (no-op in memory)."""
+
+    def storage_stats(self) -> dict[str, Any]:
+        """Backend + durability statistics (exposed on /api/v2/version)."""
+        with self._registry_lock:
+            n_studies = len(self._shards)
+        return {"backend": "memory", "n_studies": n_studies,
+                "trial_scans": self.trial_scans}
 
     # -- journal hook -----------------------------------------------------
     def _log(self, record: dict[str, Any]) -> None:  # overridden by JournalStorage
@@ -375,7 +605,10 @@ class JournalStorage(InMemoryStorage):
     constructed ``JournalStorage`` pointed at an existing journal replays it
     to reconstruct the full service state (crash-restart of the service,
     paper sec. 3 'shared persistency').  Journal appends are serialized on
-    a dedicated lock because shards write concurrently.
+    a dedicated lock because shards write concurrently.  Replay tolerates
+    a torn final record (crash mid-append) by truncating it with a
+    warning; see ``DurableStorage`` for the segmented engine with
+    snapshots, group-commit fsync, and compaction.
     """
 
     def __init__(self, path: str):
@@ -383,64 +616,45 @@ class JournalStorage(InMemoryStorage):
         super().__init__()
         self._path = path
         self._file = None
-        self._replaying = False
         if os.path.exists(path):
             self.replay(path)
         self._file = open(path, "a", buffering=1)
 
     def _log(self, record: dict[str, Any]) -> None:
         if self._file is not None and not self._replaying:
+            # strict JSON: NaN/Infinity are not valid JSON and would make
+            # the journal unreadable by a strict parser on replay
+            line = json.dumps(record, allow_nan=False) + "\n"
             with self._journal_lock:
-                self._file.write(json.dumps(record) + "\n")
+                self._file.write(line)
 
     def replay(self, path: str) -> int:
-        """Reconstruct state from the journal.  Returns #records applied."""
-        n = 0
+        """Reconstruct state from the journal.  Returns #records applied.
+        A torn final record (crash mid-append) is truncated with a
+        warning; corruption elsewhere raises ``CorruptJournalError``."""
         self._replaying = True
         try:
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    rec = json.loads(line)
-                    self._apply(rec)
-                    n += 1
+            n, _ = load_journal_file(path, self._apply,
+                                     tolerate_torn_tail=True, repair=True)
         finally:
             self._replaying = False
         return n
 
-    def _insert_trial(self, trial: Trial) -> None:
-        """Replay path: insert preserving ``trial_id``, padding journal gaps
-        with explicit failed tombstones so uid->trial lookups stay aligned."""
-        shard = self._shard(trial.study_key)
-        if shard is None:
-            raise KeyError(trial.study_key)
-        with shard.lock:
-            while len(shard.study.trials) < trial.trial_id:
-                self._index_trial(shard, Trial.tombstone(
-                    trial.study_key, len(shard.study.trials)))
-            self._index_trial(shard, trial)
+    def flush(self) -> None:
+        with self._journal_lock:
+            if self._file is not None:
+                self._file.flush()
+                os.fsync(self._file.fileno())
 
-    def _apply(self, rec: dict[str, Any]) -> None:
-        op = rec["op"]
-        if op == "create_study":
-            self.get_or_create_study(StudyConfig.from_record(rec["config"]))
-        elif op == "add_trial":
-            self._insert_trial(Trial.from_record(rec["trial"]))
-        elif op == "update_trial":
-            fields = dict(rec["fields"])
-            if "state" in fields:
-                fields["state"] = TrialState(fields["state"])
-            if "intermediate" in fields:
-                fields["intermediate"] = tuple(fields["intermediate"])
-            self.update_trial(rec["uid"], **fields)
-        elif op == "enqueue":
-            self.enqueue_params(rec["study_key"], rec["params"], rec["retries"])
-        elif op == "pop_waiting":
-            self.pop_waiting(rec["study_key"])
+    def storage_stats(self) -> dict[str, Any]:
+        stats = super().storage_stats()
+        stats.update({"backend": "journal", "path": self._path})
+        return stats
 
     def close(self) -> None:
-        if self._file is not None:
-            self._file.close()
-            self._file = None
+        with self._journal_lock:
+            if self._file is not None:
+                self._file.flush()
+                os.fsync(self._file.fileno())
+                self._file.close()
+                self._file = None

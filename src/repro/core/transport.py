@@ -147,6 +147,11 @@ class HttpServiceRunner:
     def stop(self) -> None:
         self.httpd.shutdown()
         self.httpd.server_close()
+        # durability: no acknowledged mutation may ride only in an OS
+        # buffer once the frontend is gone (workers usually share one
+        # storage object — flush each distinct one once)
+        for storage in {id(w.storage): w.storage for w in self.workers}.values():
+            storage.flush()
 
     @property
     def url(self) -> str:

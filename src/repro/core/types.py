@@ -158,6 +158,21 @@ class Study:
     def key(self) -> str:
         return self.config.key()
 
+    # -- snapshot serialization ----------------------------------------
+    # The storage engine's point-in-time snapshots serialize whole
+    # studies; the runtime read-path indices are derived state and are
+    # rebuilt on load, never serialized.
+    def to_record(self) -> dict[str, Any]:
+        return {"config": self.config.to_record(),
+                "created_at": self.created_at,
+                "trials": [t.to_record() for t in self.trials]}
+
+    @classmethod
+    def from_record(cls, d: dict[str, Any]) -> "Study":
+        return cls(config=StudyConfig.from_record(d["config"]),
+                   trials=[Trial.from_record(t) for t in d["trials"]],
+                   created_at=d["created_at"])
+
     # -- incremental report index --------------------------------------
     # Maintained by the storage layer under the shard lock: every
     # ``update_trial(intermediate=...)`` calls ``record_report`` and every

@@ -1,0 +1,96 @@
+"""Token verification hardening: malformed tokens must surface as
+``AuthError`` (wire: 401), never a raw ``ValueError``/``binascii.Error``
+(wire: 500)."""
+import base64
+import json
+
+import pytest
+
+from repro.core import AuthError, HopaasServer, TokenManager
+
+
+def _forge(tm: TokenManager, body_bytes: bytes) -> str:
+    """A token whose signature is valid but whose body is garbage — the
+    path that used to leak decode errors past the AuthError contract."""
+    body = base64.urlsafe_b64encode(body_bytes).decode().rstrip("=")
+    return f"{body}.{tm._sign(body)}"
+
+
+def test_verify_roundtrip_still_works():
+    tm = TokenManager()
+    tok = tm.issue("alice", ttl_seconds=60)
+    assert tm.verify(tok)["user"] == "alice"
+
+
+@pytest.mark.parametrize("token", [
+    "",                                   # no dot at all
+    "no-dot-here",
+    "!!!not-base64!!!.aabbcc",            # body is not base64
+    None,                                 # not even a string
+])
+def test_verify_malformed_tokens_raise_autherror(token):
+    tm = TokenManager()
+    with pytest.raises(AuthError):
+        tm.verify(token)
+
+
+@pytest.mark.parametrize("body", [
+    b"\xff\xfe not json",                 # undecodable
+    b"[1, 2, 3]",                         # JSON but not an object
+    b'{"user": "x"}',                     # missing exp/jti claims
+    b'{"exp": "soon", "jti": "a"}',       # ill-typed exp
+    b'{"exp": 1e12, "jti": 42}',          # ill-typed jti
+])
+def test_verify_corrupt_signed_body_raises_autherror(body):
+    tm = TokenManager()
+    with pytest.raises(AuthError):
+        tm.verify(_forge(tm, body))
+
+
+def test_revoke_malformed_token_raises_autherror():
+    tm = TokenManager()
+    with pytest.raises(AuthError):
+        tm.revoke("garbage-without-a-dot")
+    with pytest.raises(AuthError):
+        tm.revoke(_forge(tm, b"not json at all"))
+
+
+def test_revoke_then_verify_still_works():
+    tm = TokenManager()
+    tok = tm.issue("bob")
+    tm.revoke(tok)
+    with pytest.raises(AuthError):
+        tm.verify(tok)
+
+
+def test_corrupt_token_is_401_not_500_on_the_wire():
+    srv = HopaasServer(seed=0)
+    bad = _forge(srv.tokens, b"\x00\x01 garbage")
+    status, payload, _ = srv.handle_request(
+        "POST", "/api/v2/studies", {"name": "x", "properties": {}},
+        {"Authorization": f"Bearer {bad}"})
+    assert status == 401
+    assert payload["error"]["code"] == "unauthorized"
+
+    # v1 path-token flavor of the same bug
+    status, payload, _ = srv.handle_request(
+        "POST", f"/api/ask/{bad}", {"name": "x", "properties": {}})
+    assert status == 401
+
+
+def test_expired_token_message_preserved():
+    tm = TokenManager()
+    tok = tm.issue("carol", ttl_seconds=-1)
+    with pytest.raises(AuthError, match="expired"):
+        tm.verify(tok)
+
+
+def test_payload_round_trips_through_base64_padding():
+    # bodies of every length mod 4 must decode (padding reconstruction)
+    tm = TokenManager()
+    for user in ("a", "ab", "abc", "abcd", "abcde"):
+        tok = tm.issue(user)
+        assert tm.verify(tok)["user"] == user
+        payload = json.loads(base64.urlsafe_b64decode(
+            tok.split(".")[0] + "=" * (-len(tok.split(".")[0]) % 4)))
+        assert payload["user"] == user

@@ -1,0 +1,366 @@
+"""Durable storage engine: snapshots, segmented WAL, group-commit fsync,
+compaction, and crash-recovery hardening (paper sec. 3 PostgreSQL role)."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (Client, ClientStudy, CorruptJournalError,
+                        DirectTransport, DurableStorage, HopaasServer,
+                        suggestions)
+
+
+def _drive(server, n=10, name="d", prune=True):
+    cl = Client(DirectTransport(server), server.tokens.issue("t"))
+    study = ClientStudy(name=name, client=cl,
+                        properties={"x": suggestions.uniform(-1, 1)},
+                        sampler={"name": "random"},
+                        pruner=({"name": "median", "n_startup_trials": 3}
+                                if prune else {"name": "none"}))
+    for _ in range(n):
+        with study.trial() as t:
+            for s in range(3):
+                if t.should_prune(s, abs(t.x) + (3 - s) * 0.1):
+                    break
+            t.loss = abs(t.x)
+    return cl, study
+
+
+def _segments(root):
+    return sorted(f for f in os.listdir(root) if f.startswith("wal-"))
+
+
+def _snapshots(root):
+    return sorted(f for f in os.listdir(root) if f.startswith("snapshot-"))
+
+
+# --------------------------------------------------------------------------- #
+# recovery = snapshot + tail, digest-identical
+# --------------------------------------------------------------------------- #
+def test_restart_digest_identical(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="always", auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    cl, _ = _drive(srv, n=12)
+    before = cl.studies()
+    digest = st.state_digest()
+    st.close()
+
+    st2 = DurableStorage(root, fsync="off")
+    assert st2.state_digest() == digest
+    srv2 = HopaasServer(storage=st2, seed=0)
+    cl2 = Client(DirectTransport(srv2), srv2.tokens.issue("t"))
+    assert cl2.studies() == before
+    st2.close()
+
+
+def test_rotation_compaction_and_tail_replay(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="off", segment_bytes=1500,
+                        auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=20)
+    assert len(_segments(root)) > 2          # rotation happened
+    digest = st.state_digest()
+    total_records = st.storage_stats()["wal_records"]
+
+    folded = st.compact()
+    assert folded >= 2
+    assert len(_segments(root)) == 1         # only the active segment left
+    assert len(_snapshots(root)) == 1
+    assert st.state_digest() == digest       # compaction is read-only
+    st.close()
+
+    st2 = DurableStorage(root, fsync="off")
+    assert st2.state_digest() == digest
+    # recovery is snapshot + tail: only the unfolded tail is replayed
+    rec = st2.last_recovery
+    assert rec["snapshot_covers"] > 0
+    assert rec["records_replayed"] < total_records
+    st2.close()
+
+
+def test_background_compactor_folds_sealed_segments(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="off", segment_bytes=1200,
+                        auto_compact=True)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=25)
+    digest = st.state_digest()
+    # wait for the background compactor to catch up with the seals
+    deadline = 100
+    while st.storage_stats()["sealed_segments"] > 0 and deadline:
+        time.sleep(0.05)
+        deadline -= 1
+    stats = st.storage_stats()
+    assert stats["compactions"] >= 1
+    assert stats["sealed_segments"] == 0
+    assert st.state_digest() == digest
+    st.close()
+
+
+def test_crash_without_close_recovers(tmp_path):
+    """Abandoning the store (no close(), like a SIGKILL) loses nothing in
+    fsync=always mode; the restart digest matches exactly."""
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="always", segment_bytes=2000,
+                        auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    cl, _ = _drive(srv, n=15)
+    digest = st.state_digest()
+    best = [s for s in cl.studies() if s["name"] == "d"][0]["best_value"]
+    del st, srv                                  # crash: no close()
+
+    st2 = DurableStorage(root, fsync="off")
+    assert st2.state_digest() == digest
+    srv2 = HopaasServer(storage=st2, seed=0)
+    cl2 = Client(DirectTransport(srv2), srv2.tokens.issue("t"))
+    assert [s for s in cl2.studies()
+            if s["name"] == "d"][0]["best_value"] == best
+    st2.close()
+
+
+def test_crash_restart_mid_campaign_resumes(tmp_path):
+    """The satellite scenario: crash with running leases, queued requeues
+    and intermediate reports in flight; restart must be digest-identical
+    and the campaign must resume to the same best trial."""
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="always", auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0, lease_seconds=30.0)
+    cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+    study = ClientStudy(name="camp", client=cl,
+                        properties={"x": suggestions.uniform(-1, 1)},
+                        sampler={"name": "random"})
+    # completed trials with intermediate reports
+    for _ in range(6):
+        with study.trial() as t:
+            t.should_prune(0, abs(t.x) + 1.0)
+            t.loss = abs(t.x)
+    # live leases + an intermediate report at crash time
+    live = study.ask_batch(2)
+    live[0].should_prune(1, 0.7)
+    # a worker dies mid-trial: lease lapses, the sweeper requeues its
+    # params — the waiting queue is non-empty when the crash hits
+    dead = study.ask()
+    st.update_trial(dead.uid, lease_deadline=time.time() - 1.0)
+    srv.sweep_expired()
+    digest = st.state_digest()
+    del st, srv                                  # crash mid-campaign
+
+    st2 = DurableStorage(root, fsync="always", auto_compact=False)
+    assert st2.state_digest() == digest          # leases, queue, reports...
+    srv2 = HopaasServer(storage=st2, seed=0, lease_seconds=60.0)
+    cl2 = Client(DirectTransport(srv2), srv2.tokens.issue("t"))
+    study2 = ClientStudy(name="camp", client=cl2,
+                         properties={"x": suggestions.uniform(-1, 1)},
+                         sampler={"name": "random"})
+    # the requeued params of the dead worker are served first
+    revived = study2.ask()
+    assert revived.params == dead.params
+    study2.tell(revived, value=abs(revived.params["x"]))
+    resource = [s for s in cl2.studies() if s["name"] == "camp"][0]
+    expected_best = min(float(t["value"]) for t in cl2.iter_trials(
+        study2.study_key, state="completed"))
+    assert resource["best_value"] == pytest.approx(expected_best)
+    st2.close()
+
+
+# --------------------------------------------------------------------------- #
+# torn tails + corruption
+# --------------------------------------------------------------------------- #
+def test_torn_tail_in_active_segment_truncated(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="always", auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=6)
+    digest = st.state_digest()
+    st.close()
+
+    active = os.path.join(root, _segments(root)[-1])
+    with open(active, "ab") as f:               # crash mid-append
+        f.write(b'{"op": "add_trial", "trial": {"trial_id"')
+    st2 = DurableStorage(root, fsync="off", auto_compact=False)
+    assert st2.last_recovery["torn_tail"] is True
+    assert st2.state_digest() == digest          # the torn record is gone
+    st2.close()
+    # the repaired file no longer carries the torn bytes
+    with open(active, "rb") as f:
+        assert not f.read().rstrip().endswith(b'"trial_id')
+
+
+def test_corruption_mid_segment_raises(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="always", auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=6)
+    st.close()
+
+    active = os.path.join(root, _segments(root)[-1])
+    lines = open(active, "rb").read().splitlines(keepends=True)
+    lines[1] = b'{"op": "add_trial", "tri\n'    # corrupt a middle record
+    with open(active, "wb") as f:
+        f.writelines(lines)
+    with pytest.raises(CorruptJournalError):
+        DurableStorage(root, fsync="off")
+
+
+# --------------------------------------------------------------------------- #
+# fsync modes + group commit
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["always", "group", "off"])
+def test_fsync_modes_roundtrip(tmp_path, mode):
+    root = str(tmp_path / mode)
+    st = DurableStorage(root, fsync=mode, auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=5, prune=False)
+    digest = st.state_digest()
+    stats = st.storage_stats()
+    assert stats["fsync"] == mode
+    if mode == "always":
+        assert stats["fsyncs"] >= 1
+    if mode == "off":
+        assert stats["fsyncs"] == 0
+    st.close()
+    st2 = DurableStorage(root, fsync="off")
+    assert st2.state_digest() == digest
+    st2.close()
+
+
+def test_group_commit_batches_fsyncs(tmp_path):
+    """In group mode many mutations share one fsync per commit window —
+    far fewer fsyncs than records."""
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="group", group_interval=0.05,
+                        auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=20, prune=False)
+    stats = st.storage_stats()
+    assert stats["wal_records"] >= 40
+    assert stats["fsyncs"] < stats["wal_records"] / 4
+    st.close()
+    # close() makes the tail durable regardless of the window
+    assert st.storage_stats()["fsyncs"] >= 1
+
+
+def test_concurrent_writers_group_commit(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="always", auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    tok = srv.tokens.issue("t")
+
+    def go():
+        cl = Client(DirectTransport(srv), tok)
+        study = ClientStudy(name="cc", client=cl,
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"})
+        for _ in range(5):
+            with study.trial() as t:
+                t.loss = t.x
+
+    threads = [threading.Thread(target=go) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    digest = st.state_digest()
+    stats = st.storage_stats()
+    assert stats["wal_records"] == 1 + 80      # create + 40x(add+update)
+    st.close()
+    st2 = DurableStorage(root, fsync="off")
+    assert st2.state_digest() == digest
+    study = next(iter(st2.studies()))
+    assert len(study.trials) == 40
+    st2.close()
+
+
+# --------------------------------------------------------------------------- #
+# stats surfaces
+# --------------------------------------------------------------------------- #
+def test_storage_stats_on_v2_version_and_study(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="group", auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    cl, study = _drive(srv, n=4, prune=False)
+
+    status, payload, _ = srv.handle_request("GET", "/api/v2/version")
+    assert status == 200
+    storage = payload["storage"]
+    assert storage["backend"] == "durable"
+    assert storage["fsync"] == "group"
+    assert storage["wal_records"] > 0
+    assert "last_recovery" in storage and "snapshot_covers" in storage
+
+    resource = cl.study(study.study_key)
+    assert resource["data_version"] == st.data_version(study.study_key)
+
+    # the v1 version payload stays byte-frozen
+    status, payload = srv.handle("GET", "/api/version")
+    assert status == 200 and set(payload) == {"version"}
+    st.close()
+
+
+def test_memory_backend_stats():
+    srv = HopaasServer(seed=0)
+    status, payload, _ = srv.handle_request("GET", "/api/v2/version")
+    assert status == 200
+    assert payload["storage"]["backend"] in ("memory", "durable")
+
+
+def test_snapshot_preserves_waiting_queue_and_completion_order(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="off", segment_bytes=400,
+                        auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0, lease_seconds=0.01)
+    cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+    study = ClientStudy(name="q", client=cl,
+                        properties={"x": suggestions.uniform(0, 1)},
+                        sampler={"name": "random"})
+    # out-of-order completion: trial 1 completes before trial 0
+    a, b = study.ask(), study.ask()
+    study.tell(b, value=0.5)
+    study.tell(a, value=0.4)
+    # a lapsed lease leaves params in the waiting queue
+    study.ask()
+    time.sleep(0.02)
+    srv.sweep_expired()
+    key = study.study_key
+    assert st.compact(min_segments=1) >= 1       # fold into a snapshot
+    st.close()
+
+    st2 = DurableStorage(root, fsync="off")
+    shard = st2._shard(key)
+    assert [u.rsplit(":", 1)[1] for u in shard.completed_log] == ["1", "0"]
+    assert len(shard.waiting) == 1               # the requeued params
+    assert st2.best_trial(key).value == 0.4
+    st2.close()
+
+
+def test_compact_refuses_after_close(tmp_path):
+    """A straggler compaction must never mutate a directory after close()
+    returned — another DurableStorage may have re-opened it."""
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="off", segment_bytes=400,
+                        auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=4, prune=False)
+    st.close()
+    files = sorted(os.listdir(root))
+    assert st.compact(min_segments=1) == 0       # refused, not raced
+    assert sorted(os.listdir(root)) == files     # directory untouched
+
+
+def test_snapshot_is_strict_json(tmp_path):
+    root = str(tmp_path / "store")
+    st = DurableStorage(root, fsync="off", segment_bytes=400,
+                        auto_compact=False)
+    srv = HopaasServer(storage=st, seed=0)
+    _drive(srv, n=3, prune=False)
+    assert st.compact(min_segments=1) >= 1
+    snap = os.path.join(root, _snapshots(root)[0])
+    # parse with a strict JSON reader: NaN/Infinity would blow up here
+    json.loads(open(snap).read(),
+               parse_constant=lambda c: (_ for _ in ()).throw(
+                   ValueError(f"non-strict constant {c}")))
+    st.close()

@@ -149,7 +149,6 @@ def test_journal_replay_roundtrip_through_faulty_campaign(tmp_path):
     time.sleep(0.25)
     srv.sweep_expired()                   # requeues the orphaned params
     cl = Client(DirectTransport(srv), tok)
-    before = cl.studies()
     key = srv.storage.studies()[0].key
     waiting_before = []
     while True:
@@ -157,6 +156,10 @@ def test_journal_replay_roundtrip_through_faulty_campaign(tmp_path):
         if item is None:
             break
         waiting_before.append(item)
+    # capture *after* the drain: the study resource carries the shard's
+    # data_version, so the comparison below is an exact-state equality —
+    # any mutation (including the journaled pops above) must replay
+    before = cl.studies()
     srv.storage.close()
 
     srv2 = HopaasServer(storage=JournalStorage(path), seed=0)

@@ -1,9 +1,14 @@
 """Shared persistency + crash-restart (paper sec. 3 PostgreSQL role)."""
+import json
+import math
 import threading
 
-from repro.core import (Client, ClientStudy, DirectTransport, HopaasServer,
-                        JournalStorage, RoundRobinTransport, suggestions)
-from repro.core.types import StudyConfig
+import pytest
+
+from repro.core import (Client, ClientStudy, CorruptJournalError,
+                        DirectTransport, HopaasServer, JournalStorage,
+                        RoundRobinTransport, suggestions)
+from repro.core.types import StudyConfig, TrialState
 
 
 def _drive(server, n=10, name="j"):
@@ -108,6 +113,158 @@ def test_concurrent_writers_consistent():
     study = next(iter(srv.storage.studies()))
     assert len(study.trials) == 40
     assert all(t.state.value == "completed" for t in study.trials)
+
+
+def test_torn_tail_line_truncated_and_recovered(tmp_path):
+    """A crash mid-append leaves a torn final record: replay must truncate
+    exactly that record (with a warning) instead of refusing to start."""
+    path = str(tmp_path / "journal.jsonl")
+    srv = HopaasServer(storage=JournalStorage(path), seed=0)
+    cl = _drive(srv, n=8)
+    before = cl.studies()
+    digest = srv.storage.state_digest()
+    srv.storage.close()
+
+    # hand-truncate the journal mid-way through its final record
+    with open(path, "rb") as f:
+        blob = f.read()
+    last_line_start = blob.rstrip(b"\n").rfind(b"\n") + 1
+    torn_at = last_line_start + (len(blob) - last_line_start) // 2
+    with open(path, "wb") as f:
+        f.write(blob[:torn_at])
+
+    storage = JournalStorage(path)              # must not raise
+    # one record (one mutation) was lost; everything before it survived
+    assert storage.state_digest() != digest
+    srv2 = HopaasServer(storage=storage, seed=0)
+    cl2 = Client(DirectTransport(srv2), srv2.tokens.issue("t"))
+    assert cl2.studies()                        # the study is servable
+    # the file was repaired: reopening is clean and digest-stable
+    storage.close()
+    storage2 = JournalStorage(path)
+    assert storage2.state_digest() == storage.state_digest()
+    storage2.close()
+    assert before                               # silence unused warning
+
+
+def test_corrupt_middle_record_raises(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    srv = HopaasServer(storage=JournalStorage(path), seed=0)
+    _drive(srv, n=4)
+    srv.storage.close()
+    lines = open(path, "rb").read().splitlines(keepends=True)
+    assert len(lines) > 3
+    lines[1] = b'{"op": "upd\n'                 # corruption, not a torn tail
+    with open(path, "wb") as f:
+        f.writelines(lines)
+    with pytest.raises(CorruptJournalError):
+        JournalStorage(path)
+
+
+def test_wal_serialization_is_strict_json(tmp_path):
+    """NaN must never reach the journal as a bare (non-JSON) literal, and
+    the write-ahead ordering means a failed journal write leaves the
+    in-memory state untouched (live and recovered state never diverge)."""
+    path = str(tmp_path / "journal.jsonl")
+    storage = JournalStorage(path)
+    study, _ = storage.get_or_create_study(
+        StudyConfig(name="nan", properties={}))
+    t = storage.add_trial(study.key, {"x": 1.0}, None, None)
+    digest = storage.state_digest()
+    with pytest.raises(ValueError):
+        storage.update_trial(t.uid, value=float("nan"),
+                             state=TrialState.COMPLETED)
+    # WAL-before-apply: the rejected mutation did not touch live state
+    assert storage.get_trial(t.uid).state == TrialState.RUNNING
+    assert storage.state_digest() == digest
+    storage.close()
+    # every line the journal *did* write parses as strict JSON, and the
+    # journal replays to exactly the live (unmutated) state
+    for line in open(path):
+        json.loads(line, parse_constant=lambda c: (_ for _ in ()).throw(
+            ValueError(f"non-strict constant {c}")))
+    recovered = JournalStorage(path)
+    assert recovered.state_digest() == digest
+    recovered.close()
+
+
+def test_non_finite_study_spec_rejected_not_half_created(tmp_path):
+    """NaN anywhere in a study spec -> 422 naming the path, and a spec the
+    WAL cannot serialize never leaves a half-created (memory-only) study."""
+    path = str(tmp_path / "journal.jsonl")
+    srv = HopaasServer(storage=JournalStorage(path), seed=0)
+    tok = srv.tokens.issue("t")
+    bad_spec = {"name": "nanspec",
+                "properties": {"x": {"type": "uniform",
+                                     "low": float("nan"), "high": 1.0}}}
+    status, payload, _ = srv.handle_request(
+        "POST", "/api/v2/studies", bad_spec,
+        {"Authorization": f"Bearer {tok}"})
+    assert status == 422
+    assert payload["error"]["field"] == "properties.x.low"
+    assert srv.storage.studies() == []           # nothing half-created
+    # direct op callers bypass the schema but the write-ahead journal
+    # still refuses: the study must not exist afterwards, live or replayed
+    with pytest.raises(Exception):
+        srv.op_resolve_study(bad_spec)
+    assert srv.storage.studies() == []
+    srv.storage.close()
+    recovered = JournalStorage(path)
+    assert recovered.studies() == []
+    recovered.close()
+
+
+def test_non_finite_value_never_corrupts_incumbent():
+    """Storage-level defense: a NaN/inf objective is not an observation —
+    the incumbent and the completion log must ignore it."""
+    from repro.core import InMemoryStorage
+    storage = InMemoryStorage()
+    study, _ = storage.get_or_create_study(
+        StudyConfig(name="nf", properties={}))
+    good = storage.add_trial(study.key, {"x": 1.0}, None, None)
+    storage.update_trial(good.uid, value=2.0, state=TrialState.COMPLETED)
+    bad = storage.add_trial(study.key, {"x": 2.0}, None, None)
+    storage.update_trial(bad.uid, value=float("nan"),
+                         state=TrialState.COMPLETED)
+    worse = storage.add_trial(study.key, {"x": 3.0}, None, None)
+    storage.update_trial(worse.uid, value=3.0, state=TrialState.COMPLETED)
+    assert storage.best_trial(study.key).uid == good.uid
+    assert [t.uid for t in storage.completed_since(study.key, 0)] == [
+        good.uid, worse.uid]
+    assert math.isnan(storage.get_trial(bad.uid).value)
+
+
+def test_tell_rejects_non_finite_values():
+    """API boundary: NaN/±inf objective -> 422 naming the field, both on
+    the v2 wire and for direct op_* callers."""
+    srv = HopaasServer(seed=0)
+    cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+    study = ClientStudy(name="nf", client=cl,
+                        properties={"x": suggestions.uniform(0, 1)},
+                        sampler={"name": "random"})
+    t = study.ask()
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        status, payload, _ = srv.handle_request(
+            "POST", f"/api/v2/trials/{t.uid}:tell",
+            {"value": bad, "state": "completed"},
+            {"Authorization": f"Bearer {srv.tokens.issue('t')}"})
+        assert status == 422
+        assert payload["error"]["field"] == "value"
+        status, payload, _ = srv.handle_request(
+            "POST", f"/api/v2/trials/{t.uid}:report",
+            {"step": 0, "value": bad},
+            {"Authorization": f"Bearer {srv.tokens.issue('t')}"})
+        assert status == 422
+        assert payload["error"]["field"] == "value"
+    # multi-objective: the offending list slot is named
+    status, payload, _ = srv.handle_request(
+        "POST", f"/api/v2/trials/{t.uid}:tell",
+        {"value": [0.1, float("nan")], "state": "completed"},
+        {"Authorization": f"Bearer {srv.tokens.issue('t')}"})
+    assert status == 422 and payload["error"]["field"] == "value[1]"
+    # the trial is still RUNNING and a finite tell still lands
+    study.tell(t, value=0.5)
+    assert srv.storage.get_trial(t.uid).state == TrialState.COMPLETED
 
 
 def test_study_key_stability():
