@@ -1,0 +1,218 @@
+"""Out-of-process load generator for ``bench_transport``.
+
+Drives N concurrent keep-alive connections doing ask/tell pairs against
+a HOPAAS service and prints one JSON result line.  Two properties matter
+for honest frontend measurement:
+
+* **Out of process** — an in-process load generator convoys with the
+  server on the GIL badly enough to hide a 3x frontend difference
+  behind scheduler noise; real campaign workers are remote anyway.
+* **Event-loop, not thread-per-connection** — the generator itself must
+  scale to 128+ connections on a small host, otherwise *its* thread
+  storms become the bottleneck and compress whatever ratio the server
+  side actually has.  Each connection is a tiny state machine
+  (write ask -> read ask -> write tell -> read tell), all driven by one
+  ``selectors`` loop; stdlib only, starts in milliseconds.
+
+Protocol with the parent (``bench_transport._contended``):
+
+  1. parent starts this script with the target/load on argv;
+  2. the script connects every socket and runs ``--warmup`` untimed
+     pairs per client (connection + study-context warmup), then prints
+     ``READY`` and pauses;
+  3. the parent writes one ``GO`` line to stdin (the start barrier);
+  4. the script runs the measured load and prints ``{"wall_s": ...,
+     "lat_ms": [...]}`` — per-pair latencies in milliseconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import selectors
+import socket
+import sys
+import time
+
+_ASK_BODY = b'{"worker_id":"bench"}'
+_TELL_BODY = b'{"value":0.125,"state":"completed"}'
+
+
+class _Client:
+    """One keep-alive connection cycling through ask/tell pairs."""
+
+    __slots__ = ("sock", "ask_req", "tell_tail", "pairs_left",
+                 "warmup_left", "reading", "outbuf", "inbuf", "t0",
+                 "lat_ms", "awaiting_tell")
+
+    def __init__(self, host: str, port: int, ask_req: bytes,
+                 tell_tail: bytes, pairs: int, warmup: int):
+        self.sock = socket.create_connection((host, port), timeout=300)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.sock.setblocking(False)
+        self.ask_req = ask_req
+        self.tell_tail = tell_tail
+        self.pairs_left = pairs
+        self.warmup_left = warmup
+        self.reading = False
+        self.awaiting_tell = False
+        self.outbuf = b""
+        self.inbuf = b""
+        self.t0 = 0.0
+        self.lat_ms: list[float] = []
+
+    def start_pair(self) -> None:
+        self.t0 = time.perf_counter()
+        self.outbuf = self.ask_req
+        self.awaiting_tell = False
+        self.reading = False
+
+    def _response(self) -> tuple[int, bytes] | None:
+        buf = self.inbuf
+        end = buf.find(b"\r\n\r\n")
+        if end < 0:
+            return None
+        i = buf.find(b"Content-Length:", 0, end)
+        length = int(buf[i + 15:buf.index(b"\r\n", i)])
+        total = end + 4 + length
+        if len(buf) < total:
+            return None
+        self.inbuf = buf[total:]
+        return int(buf[9:12]), buf[end + 4:total]
+
+    def on_readable(self) -> str | None:
+        """Advance the state machine -> None | "paused" | "done"."""
+        chunk = self.sock.recv(65536)
+        if not chunk:
+            raise ConnectionError("server closed mid-response")
+        self.inbuf += chunk
+        out = self._response()
+        if out is None:
+            return None
+        status, body = out
+        if status != 200:
+            raise RuntimeError(f"-> {status}: {body!r}")
+        if not self.awaiting_tell:              # ask response: send tell
+            uid = json.loads(body)["uid"]
+            self.outbuf = (b"POST /api/v2/trials/" + uid.encode()
+                           + b":tell" + self.tell_tail)
+            self.awaiting_tell = True
+            self.reading = False
+            return None
+        # tell response: pair complete
+        self.lat_ms.append((time.perf_counter() - self.t0) * 1e3)
+        self.pairs_left -= 1
+        if self.pairs_left == 0:
+            return "done"
+        if self.warmup_left:
+            self.warmup_left -= 1
+            if self.warmup_left == 0:
+                return "paused"                 # hold for the GO barrier
+        self.start_pair()
+        return None
+
+    def on_writable(self) -> None:
+        try:
+            sent = self.sock.send(self.outbuf)
+        except (BlockingIOError, InterruptedError):
+            return
+        self.outbuf = self.outbuf[sent:]
+        if not self.outbuf:
+            self.reading = True
+
+
+def _drive(sel: selectors.DefaultSelector, interest: dict) -> list[_Client]:
+    """One selector round; returns clients that paused or finished
+    (already unregistered)."""
+    retired = []
+    for key, _events in sel.select(30):
+        c: _Client = key.data
+        state = None
+        if interest[c] == selectors.EVENT_WRITE:
+            c.on_writable()
+        else:
+            state = c.on_readable()
+            if state is None and c.outbuf:
+                c.on_writable()                 # opportunistic send
+        if state is not None:
+            sel.unregister(c.sock)
+            del interest[c]
+            retired.append(c)
+            if state == "done":
+                c.sock.close()
+            continue
+        want = selectors.EVENT_READ if c.reading else selectors.EVENT_WRITE
+        if want != interest[c]:
+            sel.modify(c.sock, want, c)
+            interest[c] = want
+    return retired
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", required=True)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--token", required=True)
+    ap.add_argument("--keys", required=True,
+                    help="comma-separated study keys to spread load over")
+    ap.add_argument("--clients", type=int, required=True)
+    ap.add_argument("--pairs", type=int, required=True,
+                    help="measured ask/tell pairs per client")
+    ap.add_argument("--offset", type=int, default=0,
+                    help="global client index of this process's first "
+                         "client (study assignment stays balanced)")
+    ap.add_argument("--warmup", type=int, default=2,
+                    help="untimed pairs per client before READY")
+    args = ap.parse_args()
+    keys = args.keys.split(",")
+
+    common = (f"Host: bench\r\nAuthorization: Bearer {args.token}\r\n"
+              "Content-Type: application/json\r\n").encode()
+    tell_tail = b" HTTP/1.1\r\n" + common + \
+        (f"Content-Length: {len(_TELL_BODY)}\r\n\r\n").encode() + _TELL_BODY
+
+    clients = []
+    for i in range(args.clients):
+        key = keys[(args.offset + i) % len(keys)]
+        ask_req = (f"POST /api/v2/studies/{key}/trials:ask "
+                   "HTTP/1.1\r\n").encode() + common + \
+            (f"Content-Length: {len(_ASK_BODY)}\r\n\r\n").encode() + _ASK_BODY
+        clients.append(_Client(args.host, args.port, ask_req, tell_tail,
+                               args.pairs + args.warmup, args.warmup))
+
+    sel = selectors.DefaultSelector()
+    interest: dict[_Client, int] = {}
+    try:
+        if args.warmup:
+            for c in clients:
+                c.start_pair()
+                sel.register(c.sock, selectors.EVENT_WRITE, c)
+                interest[c] = selectors.EVENT_WRITE
+            paused = 0
+            while paused < len(clients):
+                paused += len(_drive(sel, interest))
+            for c in clients:
+                c.lat_ms.clear()
+
+        print("READY", flush=True)
+        if sys.stdin.readline().strip() != "GO":
+            return 2
+        t0 = time.perf_counter()
+        for c in clients:
+            c.start_pair()
+            sel.register(c.sock, selectors.EVENT_WRITE, c)
+            interest[c] = selectors.EVENT_WRITE
+        live = len(clients)
+        while live:
+            live -= sum(1 for _ in _drive(sel, interest))
+        wall = time.perf_counter() - t0
+    except (RuntimeError, OSError, ConnectionError) as e:
+        print(json.dumps({"errors": [repr(e)]}), flush=True)
+        return 1
+    print(json.dumps({"wall_s": wall,
+                      "lat_ms": [x for c in clients for x in c.lat_ms]}),
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

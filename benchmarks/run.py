@@ -20,10 +20,13 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 # tables fast enough (and dependency-light enough) for the CI smoke run
-SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage")
+SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage", "transport")
 
 TABLES = {
     "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
+    "transport": ("bench_transport",
+                  "PR 5: event-loop vs threaded frontend under "
+                  "contended keep-alive load"),
     "samplers": ("bench_samplers", "paper sec.1/2: BO beats random"),
     "ask_latency": ("bench_sampler",
                     "PR 2: ask latency vs history (obs cache + fused kernels)"),

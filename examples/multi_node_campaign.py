@@ -1,14 +1,16 @@
 """Multi-node optimization campaign over real HTTP (paper sec. 4).
 
 Reproduces the MARCONI-100 campaign shape on one machine: a HOPAAS
-service (4 stateless API workers behind one HTTP frontend, shared
-durable storage — snapshots + segmented WAL with group-commit fsync)
-and 20 concurrent *unreliable* worker "nodes" that join with staggered
-start times (elasticity), occasionally crash without reporting
-(opportunistic resources), and whose orphaned trials the service
-requeues via lease expiry.  Ends with a crash-restart: recovery loads
-the newest snapshot, replays only the WAL tail, and is digest-verified
-identical to the pre-crash state.
+service (4 stateless API workers behind the event-loop HTTP frontend,
+shared durable storage — snapshots + segmented WAL with group-commit
+fsync) and 20 concurrent *unreliable* worker "nodes" that join with
+staggered start times (elasticity), occasionally crash without
+reporting (opportunistic resources), and whose orphaned trials the
+service requeues via lease expiry.  The 20 node threads share one
+``PooledHttpTransport`` — a bounded pool of keep-alive sockets checked
+out per request — instead of opening a connection per node.  Ends with
+a crash-restart: recovery loads the newest snapshot, replays only the
+WAL tail, and is digest-verified identical to the pre-crash state.
 
   PYTHONPATH=src python examples/multi_node_campaign.py
 """
@@ -20,7 +22,7 @@ from repro.core.campaign import run_campaign
 from repro.core.client import suggestions
 from repro.core.durable import DurableStorage
 from repro.core.server import HopaasServer
-from repro.core.transport import HttpServiceRunner, HttpTransport
+from repro.core.transport import HttpServiceRunner, PooledHttpTransport
 
 
 def objective(params, report):
@@ -45,7 +47,11 @@ def main():
                 for i in range(4)]
     runner = HttpServiceRunner(backends).start()
     token = tokens.issue("campaign-user")
-    print(f"service: {runner.url}  (4 API workers, storage engine at {root})")
+    print(f"service: {runner.url}  (4 API workers, "
+          f"frontend={runner.backend}, storage engine at {root})")
+
+    # one transport for all 20 node threads: an 8-socket keep-alive pool
+    pool = PooledHttpTransport(runner.host, runner.port, pool_size=8)
 
     res = run_campaign(
         objective,
@@ -57,7 +63,7 @@ def main():
             "sampler": {"name": "tpe"},
             "pruner": {"name": "median", "n_warmup_steps": 2},
         },
-        transport_factory=lambda: HttpTransport(runner.host, runner.port),
+        transport_factory=lambda: pool,
         token=token,
         n_workers=20, n_trials=120,
         failure_rate=0.10,          # 10% of nodes die mid-trial

@@ -25,7 +25,7 @@ from .space import Param, SearchSpace
 from .durable import DurableStorage, FsyncMode
 from .storage import CorruptJournalError, InMemoryStorage, JournalStorage
 from .transport import (DirectTransport, HttpServiceRunner, HttpTransport,
-                        RoundRobinTransport, Transport)
+                        PooledHttpTransport, RoundRobinTransport, Transport)
 from .types import Direction, Study, StudyConfig, Trial, TrialState
 
 __all__ = [
@@ -38,6 +38,7 @@ __all__ = [
     "ObservationCache", "Param", "SearchSpace",
     "CorruptJournalError", "DurableStorage", "FsyncMode",
     "InMemoryStorage", "JournalStorage", "DirectTransport",
-    "HttpServiceRunner", "HttpTransport", "RoundRobinTransport", "Transport",
+    "HttpServiceRunner", "HttpTransport", "PooledHttpTransport",
+    "RoundRobinTransport", "Transport",
     "Direction", "Study", "StudyConfig", "Trial", "TrialState",
 ]

@@ -31,7 +31,7 @@ import urllib.parse
 from typing import Any, Callable
 
 from .errors import ApiError, error_payload
-from ..auth import AuthError, TokenManager
+from ..auth import AuthError, TokenManager, bearer_token
 
 _SEGMENT_RE = re.compile(r"\{(\w+)\}(.*)")
 
@@ -152,9 +152,14 @@ class Router:
     def __init__(self, tokens: TokenManager):
         self.tokens = tokens
         self.routes: list[Route] = []
+        # hot-path index: only routes with the right segment count can
+        # match, so dispatch scans a handful of candidates instead of
+        # the whole route table
+        self._by_length: dict[int, list[Route]] = {}
 
     def add(self, route: Route) -> Route:
         self.routes.append(route)
+        self._by_length.setdefault(len(route._segments), []).append(route)
         return route
 
     # ------------------------------------------------------------------ #
@@ -165,7 +170,7 @@ class Router:
         segments = [s for s in clean_path.split("/") if s]
         matched: tuple[Route, dict[str, str]] | None = None
         allowed: set[str] = set()
-        for route in self.routes:
+        for route in self._by_length.get(len(segments), ()):
             params = route.match(segments)
             if params is None:
                 continue
@@ -214,16 +219,13 @@ class Router:
             return None
         if route.auth == "path":
             return self.tokens.verify(path_params.pop("token", ""))
-        header = next((v for k, v in headers.items()
-                       if k.lower() == "authorization"), None)
-        if header is None:
-            raise AuthError("missing Authorization header "
-                            "(expected 'Bearer <token>')")
-        scheme, _, token = header.partition(" ")
-        if scheme.lower() != "bearer" or not token.strip():
-            raise AuthError("malformed Authorization header "
-                            "(expected 'Bearer <token>')")
-        return self.tokens.verify(token.strip())
+        token = bearer_token(headers)
+        if token is None:
+            present = any(k.lower() == "authorization" for k in headers)
+            raise AuthError(
+                ("malformed" if present else "missing")
+                + " Authorization header (expected 'Bearer <token>')")
+        return self.tokens.verify(token)
 
     @staticmethod
     def _normalize(out: Any) -> Response:

@@ -23,11 +23,36 @@ class AuthError(Exception):
     pass
 
 
+def bearer_token(headers: dict) -> str | None:
+    """The token of an ``Authorization: Bearer <token>`` header, else
+    None (header missing, non-bearer scheme, or empty token).
+
+    The single bearer-parsing policy: both the router's auth step and
+    the event-loop frontend's response-cache probe go through this, so
+    they can never drift apart.
+    """
+    header = next((v for k, v in headers.items()
+                   if k.lower() == "authorization"), None)
+    if header is None:
+        return None
+    scheme, _, token = header.partition(" ")
+    if scheme.lower() != "bearer" or not token.strip():
+        return None
+    return token.strip()
+
+
 class TokenManager:
+    # verified-signature memo cap: a service sees few distinct tokens
+    _VERIFY_CACHE_MAX = 1024
+
     def __init__(self, secret: str = "hopaas-secret"):
         self._secret = secret.encode()
         self._revoked: set[str] = set()
         self._lock = threading.Lock()
+        # token -> payload for tokens whose signature already checked
+        # out; expiry and revocation are still enforced on every call
+        # (only the HMAC + base64/JSON decode are amortized)
+        self._verified: dict[str, dict] = {}
 
     # -- issue ------------------------------------------------------------
     def issue(self, user: str, ttl_seconds: float = 30 * 24 * 3600.0) -> str:
@@ -68,10 +93,16 @@ class TokenManager:
 
     # -- verify -------------------------------------------------------------
     def verify(self, token: str) -> dict:
-        body, sig = self._split(token)
-        if not hmac.compare_digest(sig, self._sign(body)):
-            raise AuthError("bad signature")
-        payload = self._decode_payload(body)
+        payload = self._verified.get(token)
+        if payload is None:
+            body, sig = self._split(token)
+            if not hmac.compare_digest(sig, self._sign(body)):
+                raise AuthError("bad signature")
+            payload = self._decode_payload(body)
+            with self._lock:
+                if len(self._verified) >= self._VERIFY_CACHE_MAX:
+                    self._verified.pop(next(iter(self._verified)))
+                self._verified[token] = payload
         if payload["exp"] < time.time():
             raise AuthError("token expired")
         with self._lock:

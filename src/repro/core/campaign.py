@@ -4,6 +4,12 @@ Drives N concurrent HOPAAS clients — the stand-in for the >20 heterogeneous
 MARCONI-100 / INFN-Cloud / GCP nodes of the paper — against one service.
 Workers are *elastic*: they can join late, leave early, or die mid-trial
 (``failure_rate``); the server's lease/requeue machinery absorbs all of it.
+
+``transport_factory`` is called once per worker.  It may return a fresh
+transport each time (one socket per node — the distributed shape) or
+one shared ``PooledHttpTransport`` (all workers draw from a bounded
+keep-alive pool; checkout/checkin keeps concurrent workers off each
+other's sockets without opening N connections).
 """
 from __future__ import annotations
 

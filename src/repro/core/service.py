@@ -1,11 +1,13 @@
 """HOPAAS service launcher — the INFN-Cloud deployment in one process.
 
-Starts N stateless server workers behind the threaded HTTP frontend
-(Uvicorn x N + NGINX role), backed by a durable storage engine
-(PostgreSQL role) that survives crashes and restarts, and prints a fresh
-API token.  Workers share per-study storage shards, so requests for
-different studies run in parallel; clients may use the batched
-`ask_batch` / `tell_batch` endpoints (see README.md, "Wire protocol").
+Starts N stateless server workers behind the HTTP frontend (Uvicorn x N
++ NGINX role) — the selector event loop with sharded dispatch lanes by
+default, ``--frontend threaded`` for the legacy thread-per-connection
+server — backed by a durable storage engine (PostgreSQL role) that
+survives crashes and restarts, and prints a fresh API token.  Workers
+share per-study storage shards, so requests for different studies run
+in parallel; clients may use the batched `ask_batch` / `tell_batch`
+endpoints (see README.md, "Wire protocol").
 
   PYTHONPATH=src python -m repro.core.service --port 8731 \
       --workers 4 --journal-dir hopaas-data --fsync group
@@ -61,6 +63,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-compaction", action="store_true",
                     help="disable background folding of sealed segments "
                          "into snapshots")
+    ap.add_argument("--frontend", choices=("evloop", "threaded"),
+                    default=None,
+                    help="HTTP frontend: selector event loop with sharded "
+                         "dispatch lanes (default) or the legacy "
+                         "thread-per-connection server; REPRO_FRONTEND "
+                         "overrides the default")
+    ap.add_argument("--lanes", type=int, default=None,
+                    help="event-loop dispatch lanes (default: 2x cores, "
+                         "capped at 8)")
     ap.add_argument("--lease-seconds", type=float, default=60.0)
     ap.add_argument("--token-ttl-hours", type=float, default=24.0)
     args = ap.parse_args(argv)
@@ -74,12 +85,13 @@ def main(argv: list[str] | None = None) -> int:
                             lease_seconds=args.lease_seconds,
                             worker_name=f"api-{i}")
                for i in range(args.workers)]
-    runner = HttpServiceRunner(workers, host=args.host,
-                               port=args.port).start()
+    runner = HttpServiceRunner(workers, host=args.host, port=args.port,
+                               backend=args.frontend,
+                               lanes=args.lanes).start()
     token = tokens.issue("cli-user", ttl_seconds=args.token_ttl_hours * 3600)
     backend = storage.storage_stats()["backend"]
     print(f"HOPAAS service at {runner.url}  ({args.workers} workers, "
-          f"storage={backend})")
+          f"frontend={runner.backend}, storage={backend})")
     print(f"API token: {token}")
     print("Ctrl-C to stop.")
     try:

@@ -1,0 +1,452 @@
+"""The event-loop HTTP frontend (PR 5 tentpole): wire parity with the
+router across every method, concurrent keep-alive clients with no
+response cross-talk, HTTP pipelining, Content-Length framing after
+errors, the hot-GET response cache, and clean shutdown with in-flight
+requests — plus the ``backend=`` switch itself."""
+import http.client
+import json
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import (Client, ClientStudy, HopaasServer, HOPAAS_VERSION,
+                        HttpServiceRunner, HttpTransport, InMemoryStorage,
+                        TokenManager, suggestions)
+
+BACKENDS = ("evloop", "threaded")
+
+
+def _service(backend="evloop", n_workers=2, seed=0):
+    storage, tokens = InMemoryStorage(), TokenManager()
+    workers = [HopaasServer(storage=storage, tokens=tokens, seed=seed + i)
+               for i in range(n_workers)]
+    return HttpServiceRunner(workers, backend=backend), tokens
+
+
+def _raw(runner, blob: bytes, n_responses: int, timeout=10.0) -> bytes:
+    """Send raw bytes, read until ``n_responses`` complete responses."""
+    sk = socket.create_connection((runner.host, runner.port), timeout=timeout)
+    try:
+        sk.sendall(blob)
+        data = b""
+        deadline = time.time() + timeout
+        while _count_responses(data) < n_responses:
+            if time.time() > deadline:
+                raise AssertionError(f"timed out; got {data!r}")
+            chunk = sk.recv(65536)
+            if not chunk:
+                break
+            data += chunk
+        return data
+    finally:
+        sk.close()
+
+
+def _count_responses(data: bytes) -> int:
+    """Complete HTTP responses in ``data`` (Content-Length framed)."""
+    n = 0
+    while True:
+        end = data.find(b"\r\n\r\n")
+        if end < 0:
+            return n
+        head = data[:end].decode("latin-1").lower()
+        length = 0
+        for line in head.split("\r\n")[1:]:
+            if line.startswith("content-length:"):
+                length = int(line.split(":", 1)[1])
+        if len(data) < end + 4 + length:
+            return n
+        data = data[end + 4 + length:]
+        n += 1
+
+
+# --------------------------------------------------------------------- #
+# satellite: DELETE/PUT/PATCH/OPTIONS reach the router in both frontends
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("method,path", [
+    ("DELETE", "/api/v2/studies/deadbeef"),        # GET-only resource
+    ("PUT", "/api/v2/trials:tell_batch"),          # POST-only action
+    ("PATCH", "/api/v2/version"),
+    ("OPTIONS", "/api/v2/studies"),
+    ("DELETE", "/no/such/path"),                   # 404, not stdlib 501
+])
+def test_wire_parity_for_non_get_post_methods(backend, method, path):
+    """Every method gets the *router's* answer on the wire — the stdlib
+    501 for unimplemented do_* methods must never surface."""
+    runner, tokens = _service(backend)
+    runner.start()
+    try:
+        want = runner.workers[0].router.dispatch(method, path, None, {})
+        conn = http.client.HTTPConnection(runner.host, runner.port,
+                                          timeout=10)
+        conn.request(method, path)
+        resp = conn.getresponse()
+        got_payload = json.loads(resp.read())
+        got_headers = {k.lower(): v for k, v in resp.getheaders()}
+        conn.close()
+        status, payload, headers = want
+        assert resp.status == status
+        assert got_payload == payload
+        for k, v in headers.items():            # e.g. the Allow list
+            assert got_headers[k.lower()] == v
+    finally:
+        runner.stop()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_head_responses_carry_no_body(backend):
+    """HEAD gets the router's status/headers but never a body (RFC 7231)
+    — and keep-alive framing survives for the next request."""
+    runner, tokens = _service(backend)
+    runner.start()
+    try:
+        conn = http.client.HTTPConnection(runner.host, runner.port,
+                                          timeout=10)
+        conn.request("HEAD", "/api/version")
+        resp = conn.getresponse()
+        assert resp.status == 405                  # GET-only route
+        assert resp.getheader("Allow") == "GET"
+        assert int(resp.getheader("Content-Length")) > 0
+        assert resp.read() == b""                  # headers only
+        conn.request("GET", "/api/version")        # framing intact
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert json.loads(resp.read())["version"] == HOPAAS_VERSION
+        conn.close()
+    finally:
+        runner.stop()
+
+
+def test_backpressure_bounds_unread_pipelined_responses():
+    """A client that pipelines far more requests than it reads must not
+    grow server buffers without bound: reading pauses at the high-water
+    mark and resumes as the client drains, with every response intact."""
+    from repro.core import aio
+    n_requests = 8 * aio._MAX_PENDING
+    # ~1KB per request so the burst spans many recv()s and the throttle
+    # engages mid-stream instead of after one drained read
+    request = (b"GET /api/version HTTP/1.1\r\nHost: x\r\nX-Pad: "
+               + b"a" * 900 + b"\r\n\r\n")
+    runner, tokens = _service("evloop")
+    runner.start()
+    try:
+        sk = socket.create_connection((runner.host, runner.port),
+                                      timeout=30)
+        # a throttled server stops reading, so the blast must come from
+        # a helper thread — sendall blocks once every buffer is full,
+        # exactly like a real firehose client
+        sender = threading.Thread(
+            target=lambda: sk.sendall(request * n_requests), daemon=True)
+        sender.start()
+        time.sleep(0.5)                    # server hits the throttle
+        conns = list(runner._frontend._conns.values())
+        if conns:                          # still mid-stream
+            # bounded: high-water mark plus at most one recv burst
+            assert len(conns[0].pending) <= aio._MAX_PENDING + 100
+            assert len(conns[0].outbuf) <= aio._MAX_OUTBUF + 4096
+        data = b""
+        deadline = time.time() + 30
+        while _count_responses(data) < n_requests:
+            assert time.time() < deadline, \
+                f"only {_count_responses(data)}/{n_requests} responses"
+            chunk = sk.recv(65536)
+            assert chunk, "server closed mid-drain"
+            data += chunk
+        assert data.count(b'{"version"') == n_requests
+        sender.join(timeout=10)
+        assert not sender.is_alive()
+        sk.close()
+    finally:
+        runner.stop()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_405_lists_allowed_methods(backend):
+    runner, tokens = _service(backend)
+    runner.start()
+    try:
+        conn = http.client.HTTPConnection(runner.host, runner.port,
+                                          timeout=10)
+        conn.request("DELETE", "/api/v2/studies/somekey")
+        resp = conn.getresponse()
+        body = json.loads(resp.read())
+        assert resp.status == 405
+        assert resp.getheader("Allow") == "GET"
+        assert body["error"]["code"] == "method_not_allowed"
+        # connection still framed: next request on the same socket works
+        conn.request("GET", "/api/version")
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert json.loads(resp.read())["version"] == HOPAAS_VERSION
+        conn.close()
+    finally:
+        runner.stop()
+
+
+# --------------------------------------------------------------------- #
+# concurrent keep-alive clients: no cross-talk between responses
+# --------------------------------------------------------------------- #
+def test_concurrent_keepalive_no_cross_talk():
+    """8 threads × 25 requests over persistent connections; every
+    response body must match its own request (trial uid echo)."""
+    runner, tokens = _service("evloop", n_workers=3)
+    runner.start()
+    try:
+        tok = tokens.issue("u")
+        seed_client = Client(HttpTransport(runner.host, runner.port), tok)
+        uids = []
+        for i in range(8):
+            study = ClientStudy(name=f"xtalk-{i}", client=seed_client,
+                                properties={"x": suggestions.uniform(0, 1)},
+                                sampler={"name": "random"})
+            uids.append(study.ask().uid)
+        errors = []
+
+        def worker(widx: int) -> None:
+            client = Client(HttpTransport(runner.host, runner.port), tok)
+            for _ in range(25):
+                trial = client.trial(uids[widx])
+                if trial["uid"] != uids[widx]:
+                    errors.append((widx, trial["uid"]))
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+    finally:
+        runner.stop()
+
+
+def test_pipelined_requests_answered_in_order():
+    """True HTTP pipelining: several requests written back-to-back on
+    one socket; responses come back complete and in request order."""
+    runner, tokens = _service("evloop")
+    runner.start()
+    try:
+        tok = tokens.issue("u")
+        client = Client(HttpTransport(runner.host, runner.port), tok)
+        study = ClientStudy(name="pipe", client=client,
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"})
+        uids = [t.uid for t in study.ask_batch(3)]
+        # 3 trial GETs for distinct uids + 1 version GET, one write
+        reqs = b"".join(
+            (f"GET /api/v2/trials/{uid} HTTP/1.1\r\nHost: x\r\n"
+             f"Authorization: Bearer {tok}\r\n\r\n").encode()
+            for uid in uids) + b"GET /api/version HTTP/1.1\r\nHost: x\r\n\r\n"
+        data = _raw(runner, reqs, n_responses=4)
+        bodies = _parse_bodies(data)
+        assert len(bodies) == 4
+        assert [b["trial"]["uid"] for b in bodies[:3]] == uids
+        assert bodies[3] == {"version": HOPAAS_VERSION}
+    finally:
+        runner.stop()
+
+
+def _parse_bodies(data: bytes) -> list[dict]:
+    bodies = []
+    while data:
+        end = data.find(b"\r\n\r\n")
+        if end < 0:
+            break
+        head = data[:end].decode("latin-1").lower()
+        length = 0
+        for line in head.split("\r\n")[1:]:
+            if line.startswith("content-length:"):
+                length = int(line.split(":", 1)[1])
+        bodies.append(json.loads(data[end + 4:end + 4 + length]))
+        data = data[end + 4 + length:]
+    return bodies
+
+
+def test_framing_survives_422_and_interleaved_errors():
+    """A schema 422 and a malformed-JSON 400 must leave the connection
+    correctly framed for the next pipelined/keep-alive request."""
+    runner, tokens = _service("evloop")
+    runner.start()
+    try:
+        tok = tokens.issue("u")
+        conn = http.client.HTTPConnection(runner.host, runner.port,
+                                          timeout=10)
+        # non-dict JSON body -> 422 naming "$"
+        conn.request("POST", f"/api/tell/{tok}", body=b"[1,2,3]",
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 422
+        assert json.loads(resp.read())["error"]["field"] == "$"
+        # malformed JSON -> 400, same connection
+        conn.request("POST", f"/api/tell/{tok}", body=b"{nope",
+                     headers={"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        assert resp.status == 400
+        assert json.loads(resp.read())["error"]["code"] == "invalid_json"
+        # and the connection is still perfectly usable
+        conn.request("GET", "/api/version")
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert json.loads(resp.read())["version"] == HOPAAS_VERSION
+        conn.close()
+    finally:
+        runner.stop()
+
+
+def test_malformed_request_line_gets_400_then_close():
+    runner, tokens = _service("evloop")
+    runner.start()
+    try:
+        data = _raw(runner, b"BLARGH\r\n\r\n", n_responses=1)
+        assert data.startswith(b"HTTP/1.1 400 ")
+        assert b"Connection: close" in data
+    finally:
+        runner.stop()
+
+
+# --------------------------------------------------------------------- #
+# hot-GET response cache: keyed on data_version, never stale
+# --------------------------------------------------------------------- #
+def test_study_resource_cache_tracks_mutations():
+    runner, tokens = _service("evloop")
+    runner.start()
+    try:
+        tok = tokens.issue("u")
+        client = Client(HttpTransport(runner.host, runner.port), tok)
+        study = ClientStudy(name="cache", client=client,
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"})
+        trial = study.ask()
+        first = client.study(study.study_key)          # fills the cache
+        again = client.study(study.study_key)          # served from cache
+        assert again == first
+        hits0 = runner.frontend_stats()["cache_hits"]
+        assert hits0 >= 1
+        client.tell(trial.uid, value=0.25)             # bumps data_version
+        after = client.study(study.study_key)          # cache must miss
+        assert after["n_completed"] == first["n_completed"] + 1
+        assert after["best_value"] == 0.25
+        assert after["data_version"] > first["data_version"]
+    finally:
+        runner.stop()
+
+
+def test_cached_study_get_still_requires_auth():
+    runner, tokens = _service("evloop")
+    runner.start()
+    try:
+        tok = tokens.issue("u")
+        client = Client(HttpTransport(runner.host, runner.port), tok)
+        study = ClientStudy(name="authed", client=client,
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"})
+        study.ask()
+        client.study(study.study_key)                  # cache filled
+        bare = HttpTransport(runner.host, runner.port)
+        status, payload = bare.request(
+            "GET", f"/api/v2/studies/{study.study_key}")
+        assert status == 401
+        assert payload["error"]["code"] == "unauthorized"
+        status, payload = bare.request(
+            "GET", f"/api/v2/studies/{study.study_key}",
+            headers={"Authorization": "Bearer garbage"})
+        assert status == 401
+    finally:
+        runner.stop()
+
+
+# --------------------------------------------------------------------- #
+# shutdown: in-flight requests complete, stop() never hangs
+# --------------------------------------------------------------------- #
+class _SlowServer(HopaasServer):
+    def handle_request(self, *args, **kwargs):
+        time.sleep(0.4)
+        return super().handle_request(*args, **kwargs)
+
+
+def test_clean_shutdown_with_in_flight_requests():
+    storage, tokens = InMemoryStorage(), TokenManager()
+    runner = HttpServiceRunner(
+        [_SlowServer(storage=storage, tokens=tokens)],
+        backend="evloop").start()
+    results = []
+
+    def hit():
+        conn = http.client.HTTPConnection(runner.host, runner.port,
+                                          timeout=10)
+        conn.request("GET", "/api/v2/version")
+        resp = conn.getresponse()
+        results.append((resp.status, json.loads(resp.read())))
+        conn.close()
+
+    threads = [threading.Thread(target=hit) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.15)                # requests are now in flight
+    t0 = time.time()
+    runner.stop()                   # must drain, not drop
+    assert time.time() - t0 < 5.0
+    for t in threads:
+        t.join(timeout=5)
+    assert len(results) == 3
+    assert all(status == 200 for status, _ in results)
+    assert all(body["version"] == HOPAAS_VERSION for _, body in results)
+
+
+def test_stop_with_idle_keepalive_connections_is_fast():
+    runner, tokens = _service("evloop")
+    runner.start()
+    tr = HttpTransport(runner.host, runner.port)
+    assert tr.request("GET", "/api/version")[0] == 200   # socket now idle
+    t0 = time.time()
+    runner.stop()
+    assert time.time() - t0 < 2.0
+
+
+# --------------------------------------------------------------------- #
+# the backend switch
+# --------------------------------------------------------------------- #
+def test_backend_env_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_FRONTEND", "threaded")
+    runner, _ = _service(backend=None)
+    assert runner.backend == "threaded"
+    runner._frontend.httpd.server_close()
+    monkeypatch.delenv("REPRO_FRONTEND")
+    runner, _ = _service(backend=None)
+    assert runner.backend == "evloop"
+    runner.stop()
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown frontend backend"):
+        _service(backend="uvicorn")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_payloads_identical_across_frontends(backend):
+    """The wire payload equals the router's in-process payload exactly
+    (the fast path may change encoding whitespace, never content)."""
+    runner, tokens = _service(backend)
+    runner.start()
+    try:
+        tok = tokens.issue("u")
+        client = Client(HttpTransport(runner.host, runner.port), tok)
+        study = ClientStudy(name="ident", client=client,
+                            properties={"x": suggestions.uniform(0, 1)},
+                            sampler={"name": "random"})
+        trial = study.ask()
+        client.tell(trial.uid, value=0.5)
+        for method, path in (("GET", "/api/version"),
+                             ("GET", f"/api/v2/studies/{study.study_key}"),
+                             ("GET", f"/api/v2/trials/{trial.uid}")):
+            headers = {"Authorization": f"Bearer {tok}"}
+            wire = HttpTransport(runner.host, runner.port).request(
+                method, path, headers=headers)
+            direct = runner.workers[0].handle_request(
+                method, path, None, headers)[:2]
+            assert wire == direct
+    finally:
+        runner.stop()
