@@ -149,8 +149,14 @@ def _drive(sel: selectors.DefaultSelector, interest: dict) -> list[_Client]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--host", required=True)
-    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--host", default=None)
+    ap.add_argument("--port", type=int, default=None)
+    ap.add_argument("--targets", default=None,
+                    help="comma-separated host:port endpoints; client i "
+                         "connects to target (offset+i) %% len(targets).  "
+                         "With the shard fabric's per-worker ports this "
+                         "sends each client straight to one worker "
+                         "(alternative to --host/--port)")
     ap.add_argument("--token", required=True)
     ap.add_argument("--keys", required=True,
                     help="comma-separated study keys to spread load over")
@@ -164,6 +170,15 @@ def main() -> int:
                     help="untimed pairs per client before READY")
     args = ap.parse_args()
     keys = args.keys.split(",")
+    if args.targets:
+        targets = []
+        for spec in args.targets.split(","):
+            host, _, port = spec.rpartition(":")
+            targets.append((host, int(port)))
+    elif args.host and args.port:
+        targets = [(args.host, args.port)]
+    else:
+        ap.error("provide --targets or --host/--port")
 
     common = (f"Host: bench\r\nAuthorization: Bearer {args.token}\r\n"
               "Content-Type: application/json\r\n").encode()
@@ -173,10 +188,14 @@ def main() -> int:
     clients = []
     for i in range(args.clients):
         key = keys[(args.offset + i) % len(keys)]
+        # key and target use the same client index modulus, so a parent
+        # that aligns keys[j] with targets[j % len(targets)] pins every
+        # client to the worker that owns its study
+        host, port = targets[(args.offset + i) % len(targets)]
         ask_req = (f"POST /api/v2/studies/{key}/trials:ask "
                    "HTTP/1.1\r\n").encode() + common + \
             (f"Content-Length: {len(_ASK_BODY)}\r\n\r\n").encode() + _ASK_BODY
-        clients.append(_Client(args.host, args.port, ask_req, tell_tail,
+        clients.append(_Client(host, port, ask_req, tell_tail,
                                args.pairs + args.warmup, args.warmup))
 
     sel = selectors.DefaultSelector()

@@ -1,0 +1,192 @@
+"""PR 6 — multi-process shard fabric: worker-count scaling.
+
+PR 5 made one process fast; the GIL caps it there.  The fabric spreads
+study shards over N worker processes behind the consistent-hash router
+(``repro.core.fabric``), so ask/tell throughput should scale with
+cores.  Two scenarios, emitted together as ``BENCH_fabric.json``:
+
+* ``fabric-router`` — N concurrent keep-alive clients hammering
+  ask/tell pairs through the router's byte-level proxy, for 1/2/4
+  worker processes.  ``workers=1`` runs the fabric's inline mode (no
+  children, no proxy hop) — it must match PR 5's evloop numbers in
+  ``BENCH_transport``.
+* ``fabric-direct`` — the same load sent straight to the per-worker
+  data ports (``_transport_loadgen --targets``), with every client
+  pinned to the worker that owns its study: the router hop removed,
+  the upper bound for proxy overhead.
+
+Acceptance (ISSUE 6): on a >= 4-core box, 4-worker router throughput
+>= 2.5x 1-worker.  Every row records ``cores`` — on smaller hosts the
+workers time-share the same cores and the ratio compresses toward 1x;
+the honest signal there is that the fabric adds little overhead, not
+that it scales.
+
+Columns: scenario, workers, clients, requests, wall_s, pairs_per_s,
+p50_ms, p99_ms, cores.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.core.client import Client, Study, suggestions
+from repro.core.fabric import ShardFabric
+from repro.core.transport import HttpTransport
+
+_SPACE = {"x": suggestions.uniform(0.0, 1.0)}
+_LOADGEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "_transport_loadgen.py")
+
+
+def _row(scenario: str, workers: int, clients: int, requests: int,
+         wall: float, pairs: int, lats_ms: list[float]) -> dict:
+    lats = sorted(lats_ms)
+    return {"scenario": scenario, "workers": workers, "clients": clients,
+            "requests": requests, "wall_s": round(wall, 3),
+            "pairs_per_s": round(pairs / wall, 1),
+            "p50_ms": round(lats[len(lats) // 2], 2),
+            "p99_ms": round(lats[min(len(lats) - 1,
+                                     int(len(lats) * 0.99))], 2),
+            "cores": os.cpu_count()}
+
+
+def _load(token: str, keys: list[str], *, n_clients: int,
+          pairs_per_client: int, host: str | None = None,
+          port: int | None = None,
+          targets: list[tuple[str, int]] | None = None
+          ) -> tuple[float, list[float]]:
+    """Drive the out-of-process load generators (see bench_transport) at
+    either one frontend (host/port) or the per-worker ports (targets)."""
+    n_procs = 2 if n_clients > 1 else 1
+    split = [n_clients // n_procs + (1 if i < n_clients % n_procs else 0)
+             for i in range(n_procs)]
+    offsets = [sum(split[:i]) for i in range(n_procs)]
+    base = [sys.executable, _LOADGEN, "--token", token,
+            "--keys", ",".join(keys)]
+    if targets is not None:
+        base += ["--targets", ",".join(f"{h}:{p}" for h, p in targets)]
+    else:
+        base += ["--host", str(host), "--port", str(port)]
+    procs = []
+    for count, offset in zip(split, offsets):
+        procs.append(subprocess.Popen(
+            base + ["--clients", str(count),
+                    "--pairs", str(pairs_per_client),
+                    "--offset", str(offset)],
+            stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True))
+    try:
+        for p in procs:                      # connection-setup barrier
+            line = p.stdout.readline().strip()
+            if line != "READY":
+                raise RuntimeError(f"load generator failed: {line!r}")
+        t0 = time.time()
+        for p in procs:
+            p.stdin.write("GO\n")
+            p.stdin.flush()
+        results = []
+        for p in procs:
+            out = json.loads(p.stdout.readline())
+            if "errors" in out:
+                raise RuntimeError(f"load generator errors: {out['errors']}")
+            results.append(out)
+        wall = time.time() - t0
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+            p.wait()
+    return wall, [x for r in results for x in r["lat_ms"]]
+
+
+def _aligned_keys(fab: ShardFabric, client: Client,
+                  per_worker: int) -> list[str]:
+    """Create studies until every worker owns ``per_worker`` of them,
+    then interleave so ``keys[j]`` is owned by worker ``j % N`` — the
+    alignment ``--targets`` needs to pin each load client to the worker
+    that owns its study."""
+    n = fab.n_workers
+    wids = sorted(fab.locations()) if not fab.inline else [0]
+    buckets: dict[int, list[str]] = {w: [] for w in wids}
+    i = 0
+    while any(len(b) < per_worker for b in buckets.values()):
+        study = Study(name=f"bench-fabric-{i}", properties=dict(_SPACE),
+                      sampler={"name": "random"}, client=client)
+        key = study._ensure_key()
+        owner = fab.owner_of(key)
+        if len(buckets[owner]) < per_worker:
+            buckets[owner].append(key)
+        i += 1
+        if i > 200 * n:                      # pragma: no cover - paranoia
+            raise RuntimeError("could not balance studies over workers")
+    return [buckets[wids[j % n]][j // n] for j in range(per_worker * n)]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    worker_counts = (1, 2, 4)
+    n_clients = 16
+    total_pairs = 384 if smoke else 768
+    reps = 1 if smoke else 3
+    pairs_per_client = max(2, total_pairs // n_clients)
+    pairs = pairs_per_client * n_clients
+    rows: list[dict] = []
+    by_workers: dict[tuple[str, int], dict] = {}
+
+    for n_workers in worker_counts:
+        attempts_router: list[dict] = []
+        attempts_direct: list[dict] = []
+        for _rep in range(reps):
+            fab = ShardFabric(workers=n_workers, storage="memory",
+                              respawn=False).start()
+            try:
+                tok = fab.issue_token("bench")
+                setup = Client(HttpTransport(fab.host, fab.port), tok)
+                keys = _aligned_keys(fab, setup,
+                                     per_worker=max(1, 8 // n_workers))
+                wall, lats = _load(tok, keys, n_clients=n_clients,
+                                   pairs_per_client=pairs_per_client,
+                                   host=fab.host, port=fab.port)
+                attempts_router.append(_row("fabric-router", n_workers,
+                                            n_clients, 2 * pairs, wall,
+                                            pairs, lats))
+                if not fab.inline:
+                    wall, lats = _load(tok, keys, n_clients=n_clients,
+                                       pairs_per_client=pairs_per_client,
+                                       targets=fab.endpoints)
+                    attempts_direct.append(_row("fabric-direct", n_workers,
+                                                n_clients, 2 * pairs, wall,
+                                                pairs, lats))
+            finally:
+                fab.stop()
+        for attempts in (attempts_router, attempts_direct):
+            if not attempts:
+                continue
+            attempts.sort(key=lambda r: r["pairs_per_s"])
+            row = dict(attempts[len(attempts) // 2], reps=reps)
+            by_workers[(row["scenario"], row["workers"])] = row
+            rows.append(row)
+
+    # -- acceptance summary: N-worker router throughput vs 1 worker ------
+    base = by_workers[("fabric-router", 1)]["pairs_per_s"]
+    for n_workers in worker_counts[1:]:
+        row = by_workers.get(("fabric-router", n_workers))
+        if row is None:
+            continue
+        rows.append({"scenario": f"scaling-{n_workers}w",
+                     "workers": n_workers, "clients": n_clients,
+                     "requests": None, "wall_s": None,
+                     "pairs_per_s": round(row["pairs_per_s"] / base, 2),
+                     "p50_ms": None, "p99_ms": None,
+                     "cores": os.cpu_count()})
+
+    out_dir = "experiments/benchmarks"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_fabric.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(smoke="--smoke" in sys.argv), indent=1))

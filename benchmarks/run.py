@@ -20,13 +20,17 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 # tables fast enough (and dependency-light enough) for the CI smoke run
-SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage", "transport")
+SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage", "transport",
+                "fabric")
 
 TABLES = {
     "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
     "transport": ("bench_transport",
                   "PR 5: event-loop vs threaded frontend under "
                   "contended keep-alive load"),
+    "fabric": ("bench_fabric",
+               "PR 6: multi-process shard fabric — worker-count scaling "
+               "through the consistent-hash router"),
     "samplers": ("bench_samplers", "paper sec.1/2: BO beats random"),
     "ask_latency": ("bench_sampler",
                     "PR 2: ask latency vs history (obs cache + fused kernels)"),

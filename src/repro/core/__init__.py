@@ -22,10 +22,12 @@ from .report import convergence_trace, format_report, study_summary
 from .samplers import known_samplers, make_sampler
 from .server import HOPAAS_VERSION, HopaasServer, StudyContext
 from .space import Param, SearchSpace
-from .durable import DurableStorage, FsyncMode
+from .durable import DurableStorage, FsyncMode, WalDirectoryLockedError
+from .fabric import FabricDispatcher, HashRing, ShardFabric
 from .storage import CorruptJournalError, InMemoryStorage, JournalStorage
 from .transport import (DirectTransport, HttpServiceRunner, HttpTransport,
-                        PooledHttpTransport, RoundRobinTransport, Transport)
+                        PooledHttpTransport, RoundRobinTransport,
+                        ShardedHttpTransport, Transport)
 from .types import Direction, Study, StudyConfig, Trial, TrialState
 
 __all__ = [
@@ -37,8 +39,9 @@ __all__ = [
     "HOPAAS_VERSION", "HopaasServer", "StudyContext",
     "ObservationCache", "Param", "SearchSpace",
     "CorruptJournalError", "DurableStorage", "FsyncMode",
-    "InMemoryStorage", "JournalStorage", "DirectTransport",
+    "WalDirectoryLockedError", "FabricDispatcher", "HashRing",
+    "ShardFabric", "InMemoryStorage", "JournalStorage", "DirectTransport",
     "HttpServiceRunner", "HttpTransport", "PooledHttpTransport",
-    "RoundRobinTransport", "Transport",
+    "RoundRobinTransport", "ShardedHttpTransport", "Transport",
     "Direction", "Study", "StudyConfig", "Trial", "TrialState",
 ]

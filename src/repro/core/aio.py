@@ -312,12 +312,26 @@ class EventLoopFrontend:
 
     def __init__(self, workers: list, host: str = "127.0.0.1",
                  port: int = 0, lanes: int | None = None,
-                 drain_seconds: float = 5.0, inline: bool | None = None):
-        if not workers:
+                 drain_seconds: float = 5.0, inline: bool | None = None,
+                 dispatcher: Any = None, reuseport: bool = False,
+                 extra_port: int | None = None):
+        # ``dispatcher`` extends the crc32 study-key lane dispatch across
+        # the process boundary (the shard fabric): each request is offered
+        # to ``dispatcher.handle(lane, method, target, headers, body,
+        # keep_alive)`` first — bytes returned are the (already encoded)
+        # response, usually proxied from the owning worker process; None
+        # falls through to the local workers.  A dispatcher may block on
+        # upstream sockets, so inline dispatch is disabled with one.
+        if not workers and dispatcher is None:
             raise ValueError("at least one server worker is required")
         self.workers = list(workers)
+        self.dispatcher = dispatcher
         self._drain_seconds = float(drain_seconds)
-        if inline is None:
+        if dispatcher is not None:
+            inline = False
+        if not self.workers:
+            inline = False
+        elif inline is None:
             # Inline dispatch skips two thread handoffs per request, but
             # runs the handler on the IO thread.  Under the GIL that is
             # a straight win for handlers that never *block* — pure
@@ -337,12 +351,18 @@ class EventLoopFrontend:
         elif lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
         self._lanes = [_Lane(self, i) for i in range(int(lanes))]
-        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._listener.bind((host, port))
-        self._listener.listen(256)
-        self._listener.setblocking(False)
+        self._listener = self._make_listener(host, port, reuseport)
         self.host, self.port = self._listener.getsockname()[:2]
+        # optional second accept socket on a shared port (SO_REUSEPORT):
+        # fabric workers accept straight off the public port where the
+        # platform supports it, with the router proxy as the portable
+        # fallback accept point on the same port
+        self._extra_listener = None
+        if extra_port is not None:
+            if not hasattr(socket, "SO_REUSEPORT"):
+                raise OSError("SO_REUSEPORT is not supported here")
+            self._extra_listener = self._make_listener(host, extra_port,
+                                                       True)
         self._sel = selectors.DefaultSelector()
         self._wake_r, self._wake_w = socket.socketpair()
         self._wake_r.setblocking(False)
@@ -355,11 +375,23 @@ class EventLoopFrontend:
         self._started = False
         self._stopped = False
         # response cache (wire fast path) — workers share storage/tokens
-        self._storage = self.workers[0].storage
-        self._tokens = self.workers[0].tokens
+        self._storage = self.workers[0].storage if self.workers else None
+        self._tokens = self.workers[0].tokens if self.workers else None
         self._cache_lock = threading.Lock()
         self._study_cache: dict[str, tuple[int, bytes, bytes]] = {}
         self._v1_version_response: bytes | None = None
+
+    @staticmethod
+    def _make_listener(host: str, port: int,
+                       reuseport: bool) -> socket.socket:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        if reuseport:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEPORT, 1)
+        sock.bind((host, port))
+        sock.listen(256)
+        sock.setblocking(False)
+        return sock
 
     # ------------------------------------------------------------------ #
     # lifecycle
@@ -380,6 +412,8 @@ class EventLoopFrontend:
         self._stopped = True
         if not self._started:
             self._listener.close()
+            if self._extra_listener is not None:
+                self._extra_listener.close()
             return
         self._closing = True
         self._wake()
@@ -420,6 +454,13 @@ class EventLoopFrontend:
     def _handle(self, lane: _Lane, method: str, target: str,
                 headers: dict[str, str], body_bytes: bytes,
                 keep_alive: bool) -> bytes:
+        if self.dispatcher is not None:
+            routed = self.dispatcher.handle(lane, method, target, headers,
+                                            body_bytes, keep_alive)
+            if routed is not None:
+                return routed
+            # None: the dispatcher determined this worker owns the study
+            # (or has no opinion) — fall through to the local workers
         probe_key = None
         probe_version = -1
         body: Any = None
@@ -427,15 +468,18 @@ class EventLoopFrontend:
         if method == "GET":
             # GET bodies were drained by the parser and are ignored —
             # same semantics as the threaded frontend
-            cached = self._cache_probe(lane, target, headers, keep_alive)
-            if cached is not None:
-                return cached
-            probe_key = self._cacheable_study_key(target)
-            if probe_key is not None:
-                # read the version *before* dispatch: a concurrent
-                # mutation can only make the stored entry conservatively
-                # stale-keyed (next probe misses), never stale-served
-                probe_version = self._storage.data_version(probe_key)
+            if self._storage is not None:
+                cached = self._cache_probe(lane, target, headers,
+                                           keep_alive)
+                if cached is not None:
+                    return cached
+                probe_key = self._cacheable_study_key(target)
+                if probe_key is not None:
+                    # read the version *before* dispatch: a concurrent
+                    # mutation can only make the stored entry
+                    # conservatively stale-keyed (next probe misses),
+                    # never stale-served
+                    probe_version = self._storage.data_version(probe_key)
         elif body_bytes:
             try:
                 body = json.loads(body_bytes)
@@ -541,7 +585,11 @@ class EventLoopFrontend:
     # ------------------------------------------------------------------ #
     def _loop(self) -> None:
         sel = self._sel
-        sel.register(self._listener, selectors.EVENT_READ, ("accept", None))
+        listeners = [self._listener]
+        if self._extra_listener is not None:
+            listeners.append(self._extra_listener)
+        for lsock in listeners:
+            sel.register(lsock, selectors.EVENT_READ, ("accept", lsock))
         sel.register(self._wake_r, selectors.EVENT_READ, ("wake", None))
         listener_open = True
         drain_deadline: float | None = None
@@ -551,9 +599,10 @@ class EventLoopFrontend:
                     # clients already in the listen backlog completed
                     # their handshake (and likely sent a request); adopt
                     # them into the drain instead of RSTing them
-                    self._accept()
-                    sel.unregister(self._listener)
-                    self._listener.close()
+                    for lsock in listeners:
+                        self._accept(lsock)
+                        sel.unregister(lsock)
+                        lsock.close()
                     listener_open = False
                     drain_deadline = time.monotonic() + self._drain_seconds
                 timeout = 0.05
@@ -562,7 +611,7 @@ class EventLoopFrontend:
             for key, events in sel.select(timeout):
                 kind, conn = key.data
                 if kind == "accept":
-                    self._accept()
+                    self._accept(conn)
                 elif kind == "wake":
                     try:
                         while self._wake_r.recv(4096):
@@ -589,16 +638,19 @@ class EventLoopFrontend:
         for conn in list(self._conns.values()):
             self._close_conn(conn)
         if listener_open:
-            sel.unregister(self._listener)
-            self._listener.close()
+            for lsock in listeners:
+                sel.unregister(lsock)
+                lsock.close()
         sel.close()
         self._wake_r.close()
         self._wake_w.close()
 
-    def _accept(self) -> None:
+    def _accept(self, listener: socket.socket | None = None) -> None:
+        if listener is None:
+            listener = self._listener
         while True:
             try:
-                sock, _addr = self._listener.accept()
+                sock, _addr = listener.accept()
             except (BlockingIOError, OSError):
                 return
             sock.setblocking(False)

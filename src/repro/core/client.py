@@ -7,7 +7,8 @@ first-class resources (``POST /api/v2/studies`` once, then
 structured error envelope — ``HopaasError`` exposes ``status``, ``code``
 and the offending ``field``.
 
-Idempotent calls retry transparently on connection resets and 503s with
+Idempotent calls retry transparently on connection resets, fabric 502s
+(``bad_upstream``) and 503s (overload, ``shard_migrating``) with
 exponential backoff + full jitter (``RetryPolicy``).  ``ask`` is
 idempotent per lease (a duplicate suggestion is just another leased
 trial the sweeper reclaims); ``tell`` retries are guarded by the
@@ -58,7 +59,9 @@ class RetryPolicy:
     max_attempts: int = 3            # total tries, including the first
     base_delay: float = 0.05         # seconds; doubles per retry
     max_delay: float = 2.0
-    retry_statuses: tuple[int, ...] = (503,)
+    # 503 = refused before processing (overload / shard_migrating);
+    # 502 = the fabric router lost its worker mid-request (bad_upstream)
+    retry_statuses: tuple[int, ...] = (502, 503)
 
     def delay(self, attempt: int) -> float:
         """Backoff before retry #``attempt`` (1-based), with full jitter so
@@ -117,9 +120,11 @@ class Client:
                  ) -> tuple[int, dict[str, Any], bool]:
         """One logical call -> (status, payload, ambiguous_resend).
 
-        ``ambiguous_resend`` is True when a *transport* failure forced a
-        resend after the request may already have reached the server —
-        a 503 retry is not ambiguous (the server refused the request
+        ``ambiguous_resend`` is True when a resend happened after the
+        request may already have reached the server — a transport
+        failure, or a fabric 502 ``bad_upstream`` (the worker may have
+        executed the request before the router's upstream timed out).
+        A 503 retry is never ambiguous (the server refused the request
         without processing it).
         """
         attempt = 0
@@ -140,6 +145,8 @@ class Client:
             if (status in self.retry.retry_statuses and idempotent
                     and attempt + 1 < self.retry.max_attempts):
                 attempt += 1
+                if status == 502:
+                    ambiguous = True  # upstream may have done the work
                 time.sleep(self.retry.delay(attempt))
                 continue
             return status, payload, ambiguous

@@ -60,7 +60,18 @@ from typing import Any
 from .storage import (CorruptJournalError, InMemoryStorage,
                       load_journal_file)
 
+try:                                    # POSIX only; see _acquire_dir_lock
+    import fcntl
+except ImportError:                     # pragma: no cover - non-POSIX
+    fcntl = None
+
 logger = logging.getLogger("repro.storage")
+
+
+class WalDirectoryLockedError(RuntimeError):
+    """Another live process already owns this WAL directory.  Two writers
+    appending to the same segment stream would interleave records and
+    corrupt the log, so the second opener is refused outright."""
 
 _SNAP_RE = re.compile(r"snapshot-(\d{8})\.json$")
 _SEG_RE = re.compile(r"wal-(\d{8})\.jsonl$")
@@ -112,6 +123,7 @@ class DurableStorage(InMemoryStorage):
         self._compactor: threading.Thread | None = None
 
         os.makedirs(root, exist_ok=True)
+        self._lock_file = self._acquire_dir_lock()
         self._recover()
         # always start a fresh segment: repaired/previous files stay sealed
         existing = self._segment_indexes()
@@ -121,6 +133,51 @@ class DurableStorage(InMemoryStorage):
         if self.auto_compact and any(i < self._active_index for i in existing):
             self._start_compactor()
             self._compact_event.set()
+
+    # ------------------------------------------------------------------ #
+    # directory ownership
+    # ------------------------------------------------------------------ #
+    def _acquire_dir_lock(self):
+        """Take an exclusive advisory lock on ``root/.lock`` so two live
+        processes can never append to the same segment stream.  The lock
+        dies with the process (kernel-released on crash), so a killed
+        worker never wedges its directory.  On platforms without fcntl
+        the guard is skipped."""
+        if fcntl is None:               # pragma: no cover - non-POSIX
+            return None
+        lock_path = os.path.join(self.root, ".lock")
+        f = open(lock_path, "a+")
+        try:
+            fcntl.flock(f.fileno(), fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            holder = ""
+            try:
+                f.seek(0)
+                holder = f.read(64).strip()
+            except OSError:
+                pass
+            f.close()
+            raise WalDirectoryLockedError(
+                f"WAL directory {self.root!r} is locked by another live "
+                f"process{f' (pid {holder})' if holder else ''}; two "
+                f"writers on one segment stream would corrupt the log")
+        f.seek(0)
+        f.truncate()
+        f.write(f"{os.getpid()}\n")
+        f.flush()
+        return f
+
+    def _release_dir_lock(self) -> None:
+        f = getattr(self, "_lock_file", None)
+        if f is None:
+            return
+        self._lock_file = None
+        try:
+            if fcntl is not None:
+                fcntl.flock(f.fileno(), fcntl.LOCK_UN)
+        except OSError:                 # pragma: no cover
+            pass
+        f.close()
 
     # ------------------------------------------------------------------ #
     # paths
@@ -298,6 +355,41 @@ class DurableStorage(InMemoryStorage):
             self._compact_event.set()
 
     # ------------------------------------------------------------------ #
+    # segment shipping (the fabric shard-handoff unit)
+    # ------------------------------------------------------------------ #
+    def seal_active(self) -> int:
+        """Seal the active segment (fsync + close) and open the next.
+        After this returns, every record appended so far lives in an
+        immutable file — the precondition for ``read_immutable_files``.
+        Returns the index of the newly opened active segment."""
+        with self._journal_lock:
+            if not self._closed:
+                self._rotate_locked()
+            return self._active_index
+
+    def read_immutable_files(self) -> dict[str, Any]:
+        """The current snapshot + every sealed segment, as shippable
+        payloads.  Reads only immutable files (same rule as compaction),
+        under the compaction lock so a concurrent fold cannot delete a
+        segment mid-read.  Callers that need the payload to cover *all*
+        acknowledged mutations must call ``seal_active`` first."""
+        with self._compact_lock:
+            with self._journal_lock:
+                active = self._active_index
+            covers = self._covers
+            snapshot = None
+            if covers:
+                with open(self._snapshot_path(covers), "r") as f:
+                    snapshot = f.read()
+            segments = []
+            for index in self._segment_indexes():
+                if covers < index < active:
+                    with open(self._segment_path(index), "r") as f:
+                        segments.append(f.read())
+            return {"covers": covers, "snapshot": snapshot,
+                    "segments": segments}
+
+    # ------------------------------------------------------------------ #
     # background threads
     # ------------------------------------------------------------------ #
     def _start_flusher(self) -> None:
@@ -438,6 +530,7 @@ class DurableStorage(InMemoryStorage):
         for t in (self._flusher, self._compactor):
             if t is not None:
                 t.join(timeout=5.0)
+        self._release_dir_lock()
 
     def storage_stats(self) -> dict[str, Any]:
         stats = super().storage_stats()

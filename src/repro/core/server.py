@@ -188,6 +188,14 @@ class HopaasServer:
                 self._contexts[key] = ctx
         return ctx, created
 
+    def evict_context(self, study_key: str) -> None:
+        """Forget the cached per-study context (sampler state, observation
+        cache, resource cache).  Required when a shard is dropped from the
+        backing storage (fabric handoff): a re-adopted study must rebuild
+        its context against the new shard, not serve from the stale one."""
+        with self._ctx_lock:
+            self._contexts.pop(study_key, None)
+
     def _context_for_key(self, study_key: str) -> StudyContext | None:
         """Context for a study possibly created by another worker."""
         with self._ctx_lock:

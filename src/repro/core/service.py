@@ -1,13 +1,17 @@
-"""HOPAAS service launcher — the INFN-Cloud deployment in one process.
+"""HOPAAS service launcher — the INFN-Cloud deployment shape.
 
-Starts N stateless server workers behind the HTTP frontend (Uvicorn x N
-+ NGINX role) — the selector event loop with sharded dispatch lanes by
-default, ``--frontend threaded`` for the legacy thread-per-connection
-server — backed by a durable storage engine (PostgreSQL role) that
-survives crashes and restarts, and prints a fresh API token.  Workers
-share per-study storage shards, so requests for different studies run
-in parallel; clients may use the batched `ask_batch` / `tell_batch`
-endpoints (see README.md, "Wire protocol").
+Single process by default: N stateless API workers behind the HTTP
+frontend (Uvicorn x N + NGINX role) — the selector event loop with
+sharded dispatch lanes, ``--frontend threaded`` for the legacy
+thread-per-connection server — backed by a durable storage engine
+(PostgreSQL role) that survives crashes and restarts, and prints a
+fresh API token.
+
+``--workers N`` (N > 1, or ``REPRO_WORKERS=N``) launches the
+multi-process shard fabric instead (``repro.core.fabric``): N worker
+processes, each owning a consistent-hash slice of the study shards
+with a private WAL directory, fronted by the consistent-hash router;
+dead workers are respawned on their WAL with digest-verified recovery.
 
   PYTHONPATH=src python -m repro.core.service --port 8731 \
       --workers 4 --journal-dir hopaas-data --fsync group
@@ -24,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import atexit
+import os
 import time
 
 from .auth import TokenManager
@@ -43,12 +48,50 @@ def build_storage(args: argparse.Namespace) -> InMemoryStorage:
     return InMemoryStorage()
 
 
+def _default_workers() -> int:
+    try:
+        return max(1, int(os.environ.get("REPRO_WORKERS", "1") or 1))
+    except ValueError:
+        return 1
+
+
+def _run_fabric(args: argparse.Namespace) -> int:
+    from .fabric import ShardFabric
+    fabric = ShardFabric(
+        workers=args.workers, host=args.host, port=args.port,
+        root=args.journal_dir,
+        storage="durable" if args.journal_dir else "memory",
+        fsync=args.fsync, segment_bytes=args.segment_bytes,
+        lease_seconds=args.lease_seconds, lanes=args.lanes).start()
+    atexit.register(fabric.stop)
+    token = fabric.issue_token("cli-user",
+                               ttl_seconds=args.token_ttl_hours * 3600)
+    eps = ", ".join(f"{h}:{p}" for h, p in fabric.endpoints)
+    print(f"HOPAAS fabric at {fabric.url}  ({args.workers} worker "
+          f"processes, storage={fabric.storage_kind})")
+    print(f"worker endpoints: {eps}")
+    print(f"API token: {token}")
+    print("Ctrl-C to stop.")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        fabric.stop()
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--port", type=int, default=8731)
     ap.add_argument("--host", default="127.0.0.1")
-    ap.add_argument("--workers", type=int, default=2,
-                    help="stateless API workers sharing one storage")
+    ap.add_argument("--workers", type=int, default=_default_workers(),
+                    help="worker processes; > 1 launches the multi-process "
+                         "shard fabric (default: $REPRO_WORKERS or 1)")
+    ap.add_argument("--api-workers", type=int, default=2,
+                    help="stateless API workers sharing one storage "
+                         "(single-process mode)")
     ap.add_argument("--journal-dir", default=None,
                     help="storage-engine directory (snapshots + segmented "
                          "WAL + compaction); survives crash-restart")
@@ -76,6 +119,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--token-ttl-hours", type=float, default=24.0)
     args = ap.parse_args(argv)
 
+    if args.workers > 1:
+        if args.journal:
+            ap.error("--journal (legacy single-file WAL) cannot back the "
+                     "shard fabric; use --journal-dir")
+        if args.frontend == "threaded":
+            ap.error("the shard fabric requires the evloop frontend")
+        return _run_fabric(args)
+
     storage = build_storage(args)
     # a missed shutdown path (exception, sys.exit) must still flush the
     # WAL tail; close() is idempotent so the Ctrl-C path below is safe
@@ -84,14 +135,14 @@ def main(argv: list[str] | None = None) -> int:
     workers = [HopaasServer(storage=storage, tokens=tokens,
                             lease_seconds=args.lease_seconds,
                             worker_name=f"api-{i}")
-               for i in range(args.workers)]
+               for i in range(args.api_workers)]
     runner = HttpServiceRunner(workers, host=args.host, port=args.port,
                                backend=args.frontend,
-                               lanes=args.lanes).start()
+                               lanes=args.lanes, workers=1).start()
     token = tokens.issue("cli-user", ttl_seconds=args.token_ttl_hours * 3600)
     backend = storage.storage_stats()["backend"]
-    print(f"HOPAAS service at {runner.url}  ({args.workers} workers, "
-          f"frontend={runner.backend}, storage={backend})")
+    print(f"HOPAAS service at {runner.url}  ({args.api_workers} API "
+          f"workers, frontend={runner.backend}, storage={backend})")
     print(f"API token: {token}")
     print("Ctrl-C to stop.")
     try:

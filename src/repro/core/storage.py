@@ -129,6 +129,26 @@ def load_journal_file(path: str, apply: Callable[[dict[str, Any]], None], *,
     return n, torn
 
 
+def record_study_key(rec: dict[str, Any]) -> str | None:
+    """The study key a WAL record belongs to, or None for records that
+    cannot be attributed (unknown ops).  This is the filter used when a
+    shard migrates between fabric workers: the importer replays only the
+    records of the moving study out of the exporter's shipped snapshot +
+    sealed segments."""
+    op = rec.get("op")
+    if op == "create_study":
+        return StudyConfig.from_record(rec["config"]).key()
+    if op == "add_trial":
+        return rec["trial"]["study_key"]
+    if op == "update_trial":
+        return rec["uid"].partition(":")[0]
+    if op in ("enqueue", "pop_waiting"):
+        return rec["study_key"]
+    if op in ("adopt_shard", "drop_shard"):
+        return rec["key"]
+    return None
+
+
 class _StudyShard:
     """Everything the storage tracks for one study, under one lock."""
 
@@ -499,8 +519,25 @@ class InMemoryStorage:
             self.enqueue_params(rec["study_key"], rec["params"], rec["retries"])
         elif op == "pop_waiting":
             self.pop_waiting(rec["study_key"])
+        elif op == "adopt_shard":
+            self._restore_shard(rec["shard"])
+        elif op == "drop_shard":
+            with self._registry_lock:
+                self._shards.pop(rec["key"], None)
 
     # -- snapshots + state digest -----------------------------------------
+    @staticmethod
+    def _shard_state_locked(shard: _StudyShard) -> dict[str, Any]:
+        """Serialize one shard (caller holds the shard lock)."""
+        return {
+            "key": shard.study.key,
+            "study": shard.study.to_record(),
+            "waiting": [dict(w) for w in shard.waiting],
+            "completed_log": list(shard.completed_log),
+            "best_uid": shard.best_uid,
+            "version": shard.version,
+        }
+
     def state_record(self) -> dict[str, Any]:
         """Point-in-time serialization of the full store: per shard, the
         study (config, trials — see ``types.Study.to_record``), waiting
@@ -514,15 +551,17 @@ class InMemoryStorage:
         studies = []
         for shard in shards:
             with shard.lock:
-                studies.append({
-                    "key": shard.study.key,
-                    "study": shard.study.to_record(),
-                    "waiting": [dict(w) for w in shard.waiting],
-                    "completed_log": list(shard.completed_log),
-                    "best_uid": shard.best_uid,
-                    "version": shard.version,
-                })
+                studies.append(self._shard_state_locked(shard))
         return {"studies": studies}
+
+    def shard_record(self, study_key: str) -> dict[str, Any] | None:
+        """Point-in-time serialization of one shard (the handoff unit for
+        fabric shard migration), or None if the study is unknown."""
+        shard = self._shard(study_key)
+        if shard is None:
+            return None
+        with shard.lock:
+            return self._shard_state_locked(shard)
 
     def _restore_shard(self, rec: dict[str, Any]) -> None:
         """Rebuild one shard (and every derived index) from its snapshot
@@ -553,25 +592,69 @@ class InMemoryStorage:
         for shard_rec in record["studies"]:
             self._restore_shard(shard_rec)
 
+    @staticmethod
+    def _digest_shard_rec(srec: dict[str, Any]) -> dict[str, Any]:
+        """Augment one serialized shard with an explicit lease view (uid ->
+        deadline of RUNNING trials — the information the lease heap is
+        built from) so the digest also witnesses future expiries."""
+        out = dict(srec)
+        out["leases"] = {
+            t["uid"]: t["lease_deadline"]
+            for t in srec["study"]["trials"]
+            if t["state"] == TrialState.RUNNING.value
+            and t["lease_deadline"] is not None}
+        return out
+
     def state_digest(self) -> str:
         """Order-independent content hash of the full logical state.
 
         Covers everything ``state_record`` covers plus an explicit view
-        of the live leases (uid -> deadline of RUNNING trials — the
-        information the lease heap is built from), so digest equality
-        proves a recovered store is index-for-index identical to the
-        original: same trials, same incumbent, same completion order,
-        same waiting queue, same future expiries."""
+        of the live leases, so digest equality proves a recovered store
+        is index-for-index identical to the original: same trials, same
+        incumbent, same completion order, same waiting queue, same
+        future expiries."""
         record = self.state_record()
-        for srec in record["studies"]:
-            srec["leases"] = {
-                t["uid"]: t["lease_deadline"]
-                for t in srec["study"]["trials"]
-                if t["state"] == TrialState.RUNNING.value
-                and t["lease_deadline"] is not None}
+        record["studies"] = [self._digest_shard_rec(s)
+                             for s in record["studies"]]
         record["studies"].sort(key=lambda s: s["key"])
         blob = json.dumps(record, sort_keys=True, allow_nan=False)
         return hashlib.sha256(blob.encode()).hexdigest()
+
+    def shard_digest(self, study_key: str) -> str | None:
+        """Content hash of one shard's logical state (same coverage as
+        ``state_digest`` restricted to the shard).  Equality across two
+        stores proves the migrated shard is index-for-index identical —
+        the pre-cutover witness for fabric shard handoff."""
+        srec = self.shard_record(study_key)
+        if srec is None:
+            return None
+        blob = json.dumps(self._digest_shard_rec(srec), sort_keys=True,
+                          allow_nan=False)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
+    # -- shard ownership (fabric handoff) ---------------------------------
+    def adopt_shard(self, record: dict[str, Any]) -> None:
+        """Take ownership of a migrated shard: journal the adoption (the
+        full shard record is the WAL payload, so recovery replays it) and
+        rebuild the shard + indices.  Raises ValueError if a shard with
+        the same key is already loaded."""
+        key = record["key"]
+        with self._registry_lock:
+            if key in self._shards:
+                raise ValueError(f"shard {key!r} already loaded")
+            self._log({"op": "adopt_shard", "key": key, "shard": record})
+            self._restore_shard(record)
+
+    def drop_shard(self, study_key: str) -> bool:
+        """Release ownership of a shard after it migrated away.  The drop
+        is journaled, so recovery of this store does not resurrect the
+        moved study.  Returns False if the study is unknown."""
+        with self._registry_lock:
+            if study_key not in self._shards:
+                return False
+            self._log({"op": "drop_shard", "key": study_key})
+            del self._shards[study_key]
+            return True
 
     # -- durability hooks --------------------------------------------------
     def flush(self) -> None:

@@ -1,5 +1,6 @@
 """Durable storage engine: snapshots, segmented WAL, group-commit fsync,
 compaction, and crash-recovery hardening (paper sec. 3 PostgreSQL role)."""
+import gc
 import json
 import os
 import threading
@@ -108,10 +109,13 @@ def test_crash_without_close_recovers(tmp_path):
     st = DurableStorage(root, fsync="always", segment_bytes=2000,
                         auto_compact=False)
     srv = HopaasServer(storage=st, seed=0)
-    cl, _ = _drive(srv, n=15)
+    cl, study = _drive(srv, n=15)
     digest = st.state_digest()
     best = [s for s in cl.studies() if s["name"] == "d"][0]["best_value"]
-    del st, srv                                  # crash: no close()
+    # crash: no close().  Drop *every* reference — a dead process holds
+    # none, and the kernel releases its WAL directory flock with it.
+    del st, srv, cl, study
+    gc.collect()          # break server<->context cycles; close the lock fd
 
     st2 = DurableStorage(root, fsync="off")
     assert st2.state_digest() == digest
@@ -147,7 +151,11 @@ def test_crash_restart_mid_campaign_resumes(tmp_path):
     st.update_trial(dead.uid, lease_deadline=time.time() - 1.0)
     srv.sweep_expired()
     digest = st.state_digest()
-    del st, srv                                  # crash mid-campaign
+    dead_params = dead.params
+    # crash mid-campaign: every reference gone, flock released with the
+    # process
+    del st, srv, cl, study, live, dead, t
+    gc.collect()
 
     st2 = DurableStorage(root, fsync="always", auto_compact=False)
     assert st2.state_digest() == digest          # leases, queue, reports...
@@ -158,7 +166,7 @@ def test_crash_restart_mid_campaign_resumes(tmp_path):
                          sampler={"name": "random"})
     # the requeued params of the dead worker are served first
     revived = study2.ask()
-    assert revived.params == dead.params
+    assert revived.params == dead_params
     study2.tell(revived, value=abs(revived.params["x"]))
     resource = [s for s in cl2.studies() if s["name"] == "camp"][0]
     expected_best = min(float(t["value"]) for t in cl2.iter_trials(
