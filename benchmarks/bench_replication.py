@@ -1,0 +1,154 @@
+"""PR 7 — replicated durable shards: the cost of surviving a dead leader.
+
+Replication ships each leader's WAL stream to follower processes
+(``repro.core.replication``); ``semisync`` additionally makes the fsync
+ack wait for one follower ack.  This table prices both against the
+unreplicated fabric and measures the thing replication buys — the
+availability gap across an automatic failover.  Emitted as
+``BENCH_replication.json``:
+
+* ``repl-{off,async,semisync}`` — 2-worker durable fabric (group fsync),
+  16 keep-alive clients driving ask/tell pairs through the router, with
+  replicas=0 / 1 follower per shard (async) / 1 follower (semisync).
+* ``failover-gap`` — under the same async-replicated fabric, SIGKILL
+  one shard leader mid-load and record the observed gap: the span from
+  the kill to the first completed ask/tell pair against that shard
+  after promotion (single client, patient retry).
+
+Acceptance (ISSUE 7): async overhead within ~10% of unreplicated, and
+the measured failover gap under the 5 s budget.  Every row records
+``cores`` — replication doubles the process count, so on hosts with
+fewer cores than processes the follower replay time-shares the
+leaders' cores and the overhead compresses the throughput ratio well
+past 10%; the honest async-overhead signal needs >= 4 cores.
+
+Columns: scenario, workers, replicas, clients, requests, wall_s,
+pairs_per_s, p50_ms, p99_ms, gap_s, cores.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import sys
+import time
+
+from repro.core.client import Client, RetryPolicy, Study, suggestions
+from repro.core.fabric import ShardFabric
+from repro.core.transport import HttpTransport
+
+from benchmarks.bench_fabric import _aligned_keys, _load
+
+_SPACE = {"x": suggestions.uniform(0.0, 1.0)}
+
+
+def _row(scenario: str, replicas: int, clients: int, requests: int | None,
+         wall: float | None, pairs: int | None, lats_ms: list[float] | None,
+         gap_s: float | None = None) -> dict:
+    lats = sorted(lats_ms or [])
+    return {"scenario": scenario, "workers": 2, "replicas": replicas,
+            "clients": clients, "requests": requests,
+            "wall_s": None if wall is None else round(wall, 3),
+            "pairs_per_s": (None if not wall
+                            else round(pairs / wall, 1)),
+            "p50_ms": (None if not lats
+                       else round(lats[len(lats) // 2], 2)),
+            "p99_ms": (None if not lats
+                       else round(lats[min(len(lats) - 1,
+                                           int(len(lats) * 0.99))], 2)),
+            "gap_s": None if gap_s is None else round(gap_s, 3),
+            "cores": os.cpu_count()}
+
+
+def _throughput(root: str, *, replicas: int, mode: str, n_clients: int,
+                pairs_per_client: int) -> dict:
+    fab = ShardFabric(workers=2, storage="durable", fsync="group",
+                      root=root, replicas=replicas, replication=mode,
+                      respawn=False).start()
+    try:
+        tok = fab.issue_token("bench")
+        setup = Client(HttpTransport(fab.host, fab.port), tok)
+        keys = _aligned_keys(fab, setup, per_worker=4)
+        pairs = pairs_per_client * n_clients
+        wall, lats = _load(tok, keys, n_clients=n_clients,
+                           pairs_per_client=pairs_per_client,
+                           host=fab.host, port=fab.port)
+        label = "off" if replicas == 0 else mode
+        return _row(f"repl-{label}", replicas, n_clients, 2 * pairs,
+                    wall, pairs, lats)
+    finally:
+        fab.stop()
+
+
+def _failover_gap(root: str, *, pairs_before: int) -> dict:
+    """SIGKILL a shard leader mid-campaign; the gap is the span between
+    the kill and the first ask/tell pair completed against that shard
+    through the promoted follower."""
+    fab = ShardFabric(workers=2, storage="durable", fsync="group",
+                      root=root, replicas=1, replication="async",
+                      respawn_poll=0.1).start()
+    try:
+        tok = fab.issue_token("bench")
+        patient = RetryPolicy(max_attempts=12, base_delay=0.05,
+                              max_delay=0.5)
+        cl = Client(HttpTransport(fab.host, fab.port), tok, retry=patient)
+        study = Study(name="bench-failover", properties=dict(_SPACE),
+                      sampler={"name": "random"}, client=cl)
+        key = study._ensure_key()
+        for _ in range(pairs_before):
+            t = study.ask()
+            study.tell(t, value=abs(t.x))
+
+        wid = fab.owner_of(key)
+        old_pid = fab._workers[wid].pid
+        killed = time.monotonic()
+        fab.kill_worker(wid, sig=signal.SIGKILL)
+        t = study.ask()
+        study.tell(t, value=abs(t.x))
+        gap = time.monotonic() - killed
+        assert fab.failovers >= 1, "leader death healed without failover"
+        return _row("failover-gap", 1, 1, None, None, None, None,
+                    gap_s=gap)
+    finally:
+        fab.stop()
+
+
+def run(smoke: bool = False) -> list[dict]:
+    n_clients = 16
+    total_pairs = 256 if smoke else 768
+    pairs_per_client = max(2, total_pairs // n_clients)
+    base = os.path.join("experiments", "benchmarks",
+                        f"_repl_scratch_{os.getpid()}")
+    rows: list[dict] = []
+    try:
+        for i, (replicas, mode) in enumerate(
+                [(0, "async"), (1, "async"), (1, "semisync")]):
+            rows.append(_throughput(os.path.join(base, f"t{i}"),
+                                    replicas=replicas, mode=mode,
+                                    n_clients=n_clients,
+                                    pairs_per_client=pairs_per_client))
+        rows.append(_failover_gap(os.path.join(base, "gap"),
+                                  pairs_before=8 if smoke else 32))
+    finally:
+        import shutil
+        shutil.rmtree(base, ignore_errors=True)
+
+    # -- acceptance summary: async replication overhead vs replicas=0 ----
+    by = {r["scenario"]: r for r in rows}
+    base_tp = by["repl-off"]["pairs_per_s"]
+    rows.append({"scenario": "async-overhead", "workers": 2, "replicas": 1,
+                 "clients": n_clients, "requests": None, "wall_s": None,
+                 "pairs_per_s": round(
+                     by["repl-async"]["pairs_per_s"] / base_tp, 3),
+                 "p50_ms": None, "p99_ms": None, "gap_s": None,
+                 "cores": os.cpu_count()})
+
+    out_dir = "experiments/benchmarks"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_replication.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(smoke="--smoke" in sys.argv), indent=1))

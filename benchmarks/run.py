@@ -21,7 +21,7 @@ if _ROOT not in sys.path:
 
 # tables fast enough (and dependency-light enough) for the CI smoke run
 SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage", "transport",
-                "fabric")
+                "fabric", "replication")
 
 TABLES = {
     "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
@@ -31,6 +31,9 @@ TABLES = {
     "fabric": ("bench_fabric",
                "PR 6: multi-process shard fabric — worker-count scaling "
                "through the consistent-hash router"),
+    "replication": ("bench_replication",
+                    "PR 7: WAL-shipping replication — throughput vs "
+                    "replication mode + measured failover gap"),
     "samplers": ("bench_samplers", "paper sec.1/2: BO beats random"),
     "ask_latency": ("bench_sampler",
                     "PR 2: ask latency vs history (obs cache + fused kernels)"),

@@ -24,6 +24,10 @@ from .server import HOPAAS_VERSION, HopaasServer, StudyContext
 from .space import Param, SearchSpace
 from .durable import DurableStorage, FsyncMode, WalDirectoryLockedError
 from .fabric import FabricDispatcher, HashRing, ShardFabric
+from .faults import FaultInjector
+from .replication import (ReplicationClient, ReplicationError,
+                          ReplicationHub, recover_dir_state,
+                          reconcile_with)
 from .storage import CorruptJournalError, InMemoryStorage, JournalStorage
 from .transport import (DirectTransport, HttpServiceRunner, HttpTransport,
                         PooledHttpTransport, RoundRobinTransport,
@@ -40,7 +44,9 @@ __all__ = [
     "ObservationCache", "Param", "SearchSpace",
     "CorruptJournalError", "DurableStorage", "FsyncMode",
     "WalDirectoryLockedError", "FabricDispatcher", "HashRing",
-    "ShardFabric", "InMemoryStorage", "JournalStorage", "DirectTransport",
+    "ShardFabric", "FaultInjector", "ReplicationClient",
+    "ReplicationError", "ReplicationHub", "recover_dir_state",
+    "reconcile_with", "InMemoryStorage", "JournalStorage", "DirectTransport",
     "HttpServiceRunner", "HttpTransport", "PooledHttpTransport",
     "RoundRobinTransport", "ShardedHttpTransport", "Transport",
     "Direction", "Study", "StudyConfig", "Trial", "TrialState",

@@ -78,6 +78,21 @@ _CACHE_MAX_STUDIES = 1024
 _MAX_PENDING = 128
 _MAX_OUTBUF = 1 << 20
 
+
+def open_server_socket(host: str, port: int, *, reuseport: bool = False,
+                       blocking: bool = False) -> socket.socket:
+    """Bound + listening TCP server socket with the service's standard
+    options.  Shared by the event-loop frontend (non-blocking, feeds the
+    selector) and the replication hub (blocking, one accept thread)."""
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    if reuseport:
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEPORT, 1)
+    sock.bind((host, port))
+    sock.listen(256)
+    sock.setblocking(blocking)
+    return sock
+
 _JSON_SEPARATORS = (",", ":")        # compact wire encoding
 
 
@@ -384,14 +399,8 @@ class EventLoopFrontend:
     @staticmethod
     def _make_listener(host: str, port: int,
                        reuseport: bool) -> socket.socket:
-        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        if reuseport:
-            sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEPORT, 1)
-        sock.bind((host, port))
-        sock.listen(256)
-        sock.setblocking(False)
-        return sock
+        return open_server_socket(host, port, reuseport=reuseport,
+                                  blocking=False)
 
     # ------------------------------------------------------------------ #
     # lifecycle

@@ -270,6 +270,10 @@ class TellBody(Schema):
         Field("value", "number_or_list", nullable=True,
               doc="final objective value (list = one per objective)"),
         Field("state", "str", default="completed", choices=_TELL_STATES),
+        Field("idempotency_key", "str", nullable=True,
+              doc="client-generated key, constant across retries of the "
+                  "same logical tell; the server replays the original "
+                  "result instead of double-applying (exactly-once)"),
     )
 
     @classmethod
@@ -467,6 +471,29 @@ class VersionResponse(Schema):
               doc="storage backend + durability stats (v2 only): backend, "
                   "fsync mode, snapshot/segment layout, WAL counters, "
                   "last recovery summary"),
+    )
+
+
+class HealthResponse(Schema):
+    NAME = "HealthResponse"
+    FIELDS = (
+        Field("status", "str", required=True,
+              choices=["ok", "follower", "fenced"],
+              doc="ok = accepting writes; follower/fenced = redirect "
+                  "(the fabric routes around non-leaders automatically)"),
+        Field("version", "str", required=True),
+        Field("worker", "str", required=True),
+        Field("role", "str", required=True, choices=["leader", "follower"]),
+        Field("epoch", "int", required=True,
+              doc="leadership lease epoch (0 = never replicated)"),
+        Field("replication", "dict", nullable=True,
+              doc="mode, stream position, per-follower lag in "
+                  "records/bytes (leaders) or sync status (followers)"),
+        Field("storage", "dict", nullable=True,
+              doc="WAL/fsync stats subset (backend, fsync mode, wal "
+                  "records/bytes, fsyncs, group commits)"),
+        Field("workers", "list", nullable=True, item_kind="dict",
+              doc="fabric router only: per-worker health"),
     )
 
 

@@ -9,6 +9,7 @@ and answer from the storage's per-state indices (never a trial-list
 scan).
 
     GET  /api/v2/version
+    GET  /api/v2/health
     GET  /api/v2/openapi
     POST /api/v2/studies                        create-or-get (201 on create)
     GET  /api/v2/studies?limit&cursor
@@ -84,9 +85,13 @@ def register_v2(router: Router, server: Any) -> None:
     def get_trial(req: Request):
         return {"trial": server.op_get_trial(req.path_params["uid"])}
 
+    def health(req: Request):
+        return server.op_health()
+
     def tell(req: Request):
         return server.op_tell(req.path_params["uid"], req.body["value"],
-                              req.body["state"])
+                              req.body["state"],
+                              req.body.get("idempotency_key"))
 
     def tell_batch(req: Request):
         return {"results": server.op_tell_batch(req.body["tells"])}
@@ -102,6 +107,10 @@ def register_v2(router: Router, server: Any) -> None:
               response_schema=schemas.VersionResponse),
         Route("GET", "/api/v2/openapi", openapi, auth=None, tags=v2,
               summary="this document, generated from the route table"),
+        Route("GET", "/api/v2/health", health, auth=None, tags=v2,
+              summary="machine-readable readiness: role, lease epoch, "
+                      "replication lag, WAL/fsync stats",
+              response_schema=schemas.HealthResponse),
         Route("POST", "/api/v2/studies", create_study, tags=v2,
               summary="create a study (or return the existing one with "
                       "the same content key); 201 on creation",

@@ -8,12 +8,14 @@ structured error envelope — ``HopaasError`` exposes ``status``, ``code``
 and the offending ``field``.
 
 Idempotent calls retry transparently on connection resets, fabric 502s
-(``bad_upstream``) and 503s (overload, ``shard_migrating``) with
-exponential backoff + full jitter (``RetryPolicy``).  ``ask`` is
+(``bad_upstream``), 503s (overload, ``shard_migrating``) and retryable
+error *codes* (``shard_failover`` while the fabric promotes a replica)
+with exponential backoff + full jitter (``RetryPolicy``).  ``ask`` is
 idempotent per lease (a duplicate suggestion is just another leased
-trial the sweeper reclaims); ``tell`` retries are guarded by the
-server's conflict statuses — a 409 *after* a resend means the first
-attempt landed, and is treated as success.
+trial the sweeper reclaims); ``tell``/``tell_batch`` attach a
+client-generated idempotency key, constant across retries, so a resend
+after a lost response makes the server replay the original result —
+exactly-once, with no guessing about whether the first attempt landed.
 
     client = Client(transport, token)
     study = Study(name="opt", properties={"lr": space.loguniform(1e-5, 1e-1)},
@@ -34,6 +36,7 @@ import http.client
 import random
 import time
 import urllib.parse
+import uuid
 from typing import Any, Iterator
 
 from .transport import Transport
@@ -62,6 +65,10 @@ class RetryPolicy:
     # 503 = refused before processing (overload / shard_migrating);
     # 502 = the fabric router lost its worker mid-request (bad_upstream)
     retry_statuses: tuple[int, ...] = (502, 503)
+    # error codes retried regardless of status: a fenced/deposed leader
+    # answers 409 shard_failover while the fabric finishes promoting its
+    # replica — the request is safe to replay against the new leader
+    retry_codes: tuple[str, ...] = ("shard_failover",)
 
     def delay(self, attempt: int) -> float:
         """Backoff before retry #``attempt`` (1-based), with full jitter so
@@ -117,18 +124,14 @@ class Client:
     def _request(self, method: str, path: str,
                  body: dict[str, Any] | None = None, *,
                  idempotent: bool = True, op: str = ""
-                 ) -> tuple[int, dict[str, Any], bool]:
-        """One logical call -> (status, payload, ambiguous_resend).
-
-        ``ambiguous_resend`` is True when a resend happened after the
-        request may already have reached the server — a transport
-        failure, or a fabric 502 ``bad_upstream`` (the worker may have
-        executed the request before the router's upstream timed out).
-        A 503 retry is never ambiguous (the server refused the request
-        without processing it).
-        """
+                 ) -> tuple[int, dict[str, Any]]:
+        """One logical call -> (status, payload), retrying idempotent
+        requests on transport failures, retryable statuses (fabric 502
+        ``bad_upstream`` / 503 overload) and retryable error codes
+        (``shard_failover`` during a fabric promotion).  A resend is
+        always safe: operations that mutate state carry idempotency
+        keys, so the server replays rather than re-applies."""
         attempt = 0
-        ambiguous = False
         while True:
             try:
                 status, payload = self.transport.request(
@@ -139,17 +142,18 @@ class Client:
                         f"{op or path} transport failure after "
                         f"{attempt + 1} attempts: {e!r}") from e
                 attempt += 1
-                ambiguous = True      # the lost request may have landed
                 time.sleep(self.retry.delay(attempt))
                 continue
-            if (status in self.retry.retry_statuses and idempotent
+            code = ((payload.get("error") or {}).get("code")
+                    if isinstance(payload, dict) else None)
+            if ((status in self.retry.retry_statuses
+                 or code in self.retry.retry_codes)
+                    and idempotent
                     and attempt + 1 < self.retry.max_attempts):
                 attempt += 1
-                if status == 502:
-                    ambiguous = True  # upstream may have done the work
                 time.sleep(self.retry.delay(attempt))
                 continue
-            return status, payload, ambiguous
+            return status, payload
 
     @staticmethod
     def _raise_for(op: str, status: int, payload: dict[str, Any]) -> None:
@@ -163,8 +167,8 @@ class Client:
               body: dict[str, Any] | None = None, *, op: str,
               ok: tuple[int, ...] = (200,), idempotent: bool = True
               ) -> dict[str, Any]:
-        status, payload, _ = self._request(method, path, body,
-                                           idempotent=idempotent, op=op)
+        status, payload = self._request(method, path, body,
+                                        idempotent=idempotent, op=op)
         if status not in ok:
             self._raise_for(op, status, payload)
         return payload
@@ -202,22 +206,21 @@ class Client:
 
     def tell(self, trial_uid: str, value: Any = None,
              state: str = "completed") -> dict[str, Any]:
-        status, payload, ambiguous = self._request(
+        # the key is constant across every retry of this logical tell:
+        # a resend after a lost response (or a failover replay) makes
+        # the server return the original result instead of a 409
+        return self._call(
             "POST", f"/api/v2/trials/{trial_uid}:tell",
-            {"value": value, "state": state}, op="tell")
-        if status == 409 and ambiguous:
-            # a resend after a lost response hit the duplicate-finalize
-            # guard: the first attempt landed.  Return the trial's actual
-            # final state instead of the conflict envelope.
-            return self.trial(trial_uid)
-        if status != 200:
-            self._raise_for("tell", status, payload)
-        return payload
+            {"value": value, "state": state,
+             "idempotency_key": uuid.uuid4().hex}, op="tell")
 
     def tell_batch(self, tells: list[dict[str, Any]]
                    ) -> list[dict[str, Any]]:
+        items = [dict(t) for t in tells]
+        for item in items:
+            item.setdefault("idempotency_key", uuid.uuid4().hex)
         payload = self._call("POST", "/api/v2/trials:tell_batch",
-                             {"tells": tells}, op="tell_batch")
+                             {"tells": items}, op="tell_batch")
         return payload["results"]
 
     def report(self, trial_uid: str, step: int, value: float
@@ -274,7 +277,7 @@ class Client:
     # exercises the shim end to end
     # ------------------------------------------------------------------ #
     def _post(self, endpoint: str, body: dict[str, Any]) -> dict[str, Any]:
-        status, payload, _ = self._request(
+        status, payload = self._request(
             "POST", f"/api/{endpoint}/{self.token}", body,
             op=endpoint, idempotent=False)
         if status != 200:

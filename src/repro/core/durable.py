@@ -53,10 +53,12 @@ import json
 import logging
 import os
 import re
+import socket
 import threading
 import time
 from typing import Any
 
+from . import faults
 from .storage import (CorruptJournalError, InMemoryStorage,
                       load_journal_file)
 
@@ -77,6 +79,35 @@ _SNAP_RE = re.compile(r"snapshot-(\d{8})\.json$")
 _SEG_RE = re.compile(r"wal-(\d{8})\.jsonl$")
 
 
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (PermissionError, OSError):
+        return True
+    return True
+
+
+def _describe_lock_meta(meta_path: str) -> str:
+    """Human-readable holder description from a ``LOCK.meta`` file, with
+    an explicit staleness verdict: a meta whose pid is dead describes a
+    *previous* holder, not whoever owns the flock now."""
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (OSError, ValueError):
+        return ""
+    pid = meta.get("pid")
+    host = meta.get("host", "?")
+    started = meta.get("started_at")
+    when = (time.strftime("%Y-%m-%dT%H:%M:%S", time.localtime(started))
+            if isinstance(started, (int, float)) else "?")
+    state = ("live" if isinstance(pid, int) and _pid_alive(pid)
+             else "stale: meta pid is dead")
+    return (f"; holder meta: pid {pid} on {host} since {when} ({state})")
+
+
 class FsyncMode(str, enum.Enum):
     ALWAYS = "always"       # ack after fsync (batched across writers)
     GROUP = "group"         # ack after write; fsync per commit window
@@ -85,6 +116,11 @@ class FsyncMode(str, enum.Enum):
 
 class DurableStorage(InMemoryStorage):
     """Snapshot + segmented-WAL storage engine (see module docstring)."""
+
+    # replication hooks (see attach_replicator): inert by default so a
+    # plain DurableStorage behaves exactly as before
+    _replicator = None
+    _semisync = False
 
     def __init__(self, root: str, *, fsync: str | FsyncMode = FsyncMode.GROUP,
                  segment_bytes: int = 4 * 1024 * 1024,
@@ -146,6 +182,7 @@ class DurableStorage(InMemoryStorage):
         if fcntl is None:               # pragma: no cover - non-POSIX
             return None
         lock_path = os.path.join(self.root, ".lock")
+        meta_path = os.path.join(self.root, "LOCK.meta")
         f = open(lock_path, "a+")
         try:
             fcntl.flock(f.fileno(), fcntl.LOCK_EX | fcntl.LOCK_NB)
@@ -159,12 +196,20 @@ class DurableStorage(InMemoryStorage):
             f.close()
             raise WalDirectoryLockedError(
                 f"WAL directory {self.root!r} is locked by another live "
-                f"process{f' (pid {holder})' if holder else ''}; two "
+                f"process{f' (pid {holder})' if holder else ''}"
+                f"{_describe_lock_meta(meta_path)}; two "
                 f"writers on one segment stream would corrupt the log")
         f.seek(0)
         f.truncate()
         f.write(f"{os.getpid()}\n")
         f.flush()
+        try:        # holder metadata for the refusal message above
+            with open(meta_path, "w") as mf:
+                json.dump({"pid": os.getpid(),
+                           "host": socket.gethostname(),
+                           "started_at": time.time()}, mf)
+        except OSError:                 # pragma: no cover - best effort
+            pass
         return f
 
     def _release_dir_lock(self) -> None:
@@ -178,6 +223,10 @@ class DurableStorage(InMemoryStorage):
         except OSError:                 # pragma: no cover
             pass
         f.close()
+        try:
+            os.remove(os.path.join(self.root, "LOCK.meta"))
+        except OSError:
+            pass
 
     # ------------------------------------------------------------------ #
     # paths
@@ -276,7 +325,9 @@ class DurableStorage(InMemoryStorage):
         if self._replaying:
             return
         # strict JSON: NaN/Infinity would make the segment unreadable
-        line = (json.dumps(record, allow_nan=False) + "\n").encode()
+        text = json.dumps(record, allow_nan=False)
+        line = (text + "\n").encode()
+        pub = 0
         with self._journal_lock:
             if self._closed:
                 return
@@ -289,12 +340,20 @@ class DurableStorage(InMemoryStorage):
             self._active_size += len(line)
             self._records += 1
             self._bytes += len(line)
+            if self._replicator is not None:
+                # under the journal lock: stream position order is
+                # exactly file order (publish is O(1), no I/O)
+                pub = self._replicator.publish(text)
             if self._active_size >= self.segment_bytes:
                 self._rotate_locked()
             if self.fsync_mode is FsyncMode.GROUP:
                 self._start_flusher()
         if self.fsync_mode is FsyncMode.ALWAYS:
             self._ensure_durable(seq)
+        if pub and self._semisync:
+            # the ack is only as strong as the weakest link: locally
+            # durable (above) AND held by a live follower (here)
+            self._replicator.wait_ack(pub)
 
     def _ensure_durable(self, seq: int) -> None:
         """Block until an fsync covers ``seq`` — the group-commit core.
@@ -312,7 +371,9 @@ class DurableStorage(InMemoryStorage):
                 f = self._active_file
             synced = False
             try:
+                faults.crash("crash_before_fsync")
                 os.fsync(f.fileno())
+                faults.crash("crash_after_fsync")
                 synced = True
             finally:
                 with self._durable_cv:
@@ -353,6 +414,46 @@ class DurableStorage(InMemoryStorage):
         if self.auto_compact:
             self._start_compactor()
             self._compact_event.set()
+
+    # ------------------------------------------------------------------ #
+    # replication hooks
+    # ------------------------------------------------------------------ #
+    def attach_replicator(self, hub, *, semisync: bool = False) -> None:
+        """Publish every subsequent WAL append to ``hub`` (under the
+        journal lock, so stream order equals file order).  With
+        ``semisync`` each write additionally blocks until a live
+        follower acknowledges the record, degrading to async when no
+        follower is connected (``ReplicationHub.wait_ack``)."""
+        with self._journal_lock:
+            self._replicator = hub
+            self._semisync = bool(semisync)
+
+    def replication_baseline(self) -> dict[str, Any]:
+        """Capture (stream position, immutable files) atomically: seal
+        the active segment so every record published so far lives in a
+        sealed file, pin the hub position under the journal lock, then
+        read the files under the compaction lock (same order as
+        ``compact``, so a concurrent fold cannot delete a segment
+        mid-read)."""
+        with self._compact_lock:
+            with self._journal_lock:
+                if not self._closed and self._active_size:
+                    self._rotate_locked()
+                active = self._active_index
+                pos = (self._replicator.position()
+                       if self._replicator is not None else 0)
+            covers = self._covers
+            snapshot = None
+            if covers:
+                with open(self._snapshot_path(covers), "r") as f:
+                    snapshot = f.read()
+            segments = []
+            for index in self._segment_indexes():
+                if covers < index < active:
+                    with open(self._segment_path(index), "r") as f:
+                        segments.append(f.read())
+            return {"pos": pos, "covers": covers, "snapshot": snapshot,
+                    "segments": segments}
 
     # ------------------------------------------------------------------ #
     # segment shipping (the fabric shard-handoff unit)
@@ -560,4 +661,8 @@ class DurableStorage(InMemoryStorage):
             "last_compaction": self._last_compaction,
             "last_recovery": self.last_recovery,
         })
+        if self._replicator is not None:
+            stats["replication"] = {
+                "mode": "semisync" if self._semisync else "async",
+                **self._replicator.status()}
         return stats

@@ -41,10 +41,25 @@ process boundary:
   the dead worker are requeued.  A worker that hangs mid-request trips
   the proxy's per-upstream timeout and the client sees a retryable 502
   ``bad_upstream`` instead of a hung router.
+* **Replication + failover** (``replicas > 0``, durable storage) —
+  every leader worker publishes its WAL stream through a
+  ``ReplicationHub``; per-leader follower processes subscribe with a
+  ``ReplicationClient`` and continuously replay the stream into their
+  own journaled store (``--replication semisync`` makes the leader's
+  fsync ack additionally wait for a follower ack).  When the monitor
+  declares a leader dead (process exit) or hung (control-plane pings
+  failing for ``hang_grace`` seconds), it promotes the most-caught-up
+  follower: the follower replays the dead leader's WAL directory
+  read-only as the digest authority, reconciles, bumps the lease
+  epoch, and takes over the dead leader's ring id — the routing
+  tables flip workers-first, so placement never changes.  A deposed
+  leader that comes back is *fenced*: the monitor delivers the new
+  epoch and every data-plane request it would serve answers a
+  retryable 409 ``shard_failover``.
 
-``ShardFabric(workers=1)`` collapses to the plain single-process
-event-loop service (no children, no proxy hop) so N=1 matches PR 5's
-numbers exactly.
+``ShardFabric(workers=1, replicas=0)`` collapses to the plain
+single-process event-loop service (no children, no proxy hop) so N=1
+matches PR 5's numbers exactly.
 """
 from __future__ import annotations
 
@@ -65,11 +80,14 @@ import time
 import zlib
 from typing import Any
 
+from . import faults
 from .aio import (EventLoopFrontend, _encode_body, _encode_response,
                   _study_key_of_target)
 from .api.errors import error_payload
 from .auth import AuthError, TokenManager, bearer_token
 from .durable import DurableStorage
+from .replication import (ReplicationClient, ReplicationHub,
+                          recover_dir_state, reconcile_with)
 from .server import HopaasServer
 from .storage import InMemoryStorage, record_study_key
 
@@ -701,6 +719,17 @@ class FabricWorkerServer:
         self._gate_lock = threading.Lock()
         self._frozen: set[str] = set()
         self._moved: set[str] = set()
+        # replication / failover state (wired up by _serve_worker)
+        self.role = "leader"
+        self.fenced = False
+        self.fence_epoch: int | None = None
+        self.replication_mode = "async"
+        self.hub: ReplicationHub | None = None
+        self.repl_client: ReplicationClient | None = None
+
+    @property
+    def epoch(self) -> int:
+        return int(getattr(self.storage, "lease_epoch", 0))
 
     # -- wire entry ----------------------------------------------------- #
     def handle_request(self, method: str, path: str, body: Any = None,
@@ -710,6 +739,9 @@ class FabricWorkerServer:
         if path.partition("?")[0].startswith("/fabric/"):
             return self._control(method, path.partition("?")[0], body,
                                  headers or {})
+        gated = self._role_gate(method, path)
+        if gated is not None:
+            return gated
         keys = request_study_keys(method, path, body)
         if not keys:
             return self.server.handle_request(method, path, body, headers,
@@ -736,6 +768,49 @@ class FabricWorkerServer:
                 return self._migrating(keys)
             return self.server.handle_request(method, path, body, headers,
                                               body_error)
+
+    def _role_gate(self, method: str, path: str
+                   ) -> tuple[int, dict[str, Any], dict[str, str]] | None:
+        """Data-plane admission by replication role.  Followers and
+        fenced ex-leaders answer a retryable 409 ``shard_failover`` —
+        the client's retry lands on the current leader once the routing
+        tables flip.  Health and version probes stay answerable from
+        any role (that is how lag is observed)."""
+        if self.role == "leader" and not self.fenced:
+            return None
+        p = path.partition("?")[0]
+        if method in ("GET", "HEAD") and p in ("/api/v2/health",
+                                               "/api/v2/version"):
+            return None
+        if self.fenced:
+            msg = (f"worker {self.worker_id} was deposed: lease epoch "
+                   f"{self.epoch} is fenced by epoch {self.fence_epoch}; "
+                   "retry against the current leader")
+        else:
+            msg = (f"worker {self.worker_id} is a replication follower "
+                   "(read-only replica); retry against the leader")
+        return 409, error_payload("shard_failover", msg), {
+            "Retry-After": "0.1"}
+
+    def health_extra(self) -> dict[str, Any]:
+        """``HopaasServer.health_hook``: merge the fabric role, lease
+        epoch, and live replication lag into ``GET /api/v2/health``."""
+        out: dict[str, Any] = {"epoch": self.epoch}
+        if self.fenced:
+            out["status"] = "fenced"
+            out["role"] = "leader"
+        elif self.role != "leader":
+            out["status"] = "follower"
+            out["role"] = "follower"
+        repl: dict[str, Any] = {}
+        if self.hub is not None:
+            repl["mode"] = self.replication_mode
+            repl.update(self.hub.status())
+        if self.repl_client is not None:
+            repl["client"] = self.repl_client.status()
+        if repl:
+            out["replication"] = repl
+        return out
 
     @staticmethod
     def _migrating(keys: list[str]
@@ -799,7 +874,17 @@ class FabricWorkerServer:
             if op == "ring":
                 return self._op_ring(body)
             if op == "sweep":
+                if self.role != "leader":
+                    # a follower's state is whatever the stream says —
+                    # expiring leases locally would diverge from the WAL
+                    return 200, {"expired": 0, "suppressed": True}, {}
                 return 200, {"expired": self.server.sweep_expired()}, {}
+            if op == "replication":
+                return 200, self._replication_status(), {}
+            if op == "promote":
+                return self._op_promote(body)
+            if op == "fence":
+                return self._op_fence(body)
             return 404, error_payload("not_found",
                                       f"unknown control op {op!r}"), {}
         except Exception as e:          # control bugs must not kill the gate
@@ -903,6 +988,71 @@ class FabricWorkerServer:
                           clear_overrides=bool(body.get("clear_overrides")))
         return 200, {"table": self.table.snapshot()}, {}
 
+    # -- replication control ops ---------------------------------------- #
+    def _replication_status(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"worker": self.worker_id, "pid": os.getpid(),
+                               "role": self.role, "epoch": self.epoch,
+                               "fenced": self.fenced}
+        if self.hub is not None:
+            out["mode"] = self.replication_mode
+            out["hub"] = self.hub.status()
+        if self.repl_client is not None:
+            out["client"] = self.repl_client.status()
+        return out
+
+    def _op_promote(self, body: dict[str, Any]
+                    ) -> tuple[int, dict[str, Any], dict[str, str]]:
+        """Become the leader at ``epoch``: stop following, replay the
+        dead leader's WAL directory read-only as the digest authority,
+        reconcile to it through journaled drop/adopt, journal the new
+        lease epoch, and open the data plane."""
+        epoch = int(body.get("epoch", 0))
+        if epoch <= self.epoch:
+            return 409, error_payload(
+                "stale_epoch",
+                f"promotion epoch {epoch} is not newer than the current "
+                f"lease epoch {self.epoch}"), {}
+        if self.repl_client is not None:
+            self.repl_client.stop()
+        out: dict[str, Any] = {"promoted": True, "epoch": epoch,
+                               "worker": self.worker_id}
+        leader_root = body.get("leader_root")
+        if leader_root:
+            # the dead leader's disk is a superset of every acked write
+            # (flush precedes publish; the page cache survives SIGKILL),
+            # so it is the authority the promoted state must match
+            authority, recovery = recover_dir_state(str(leader_root))
+            out["recovery"] = recovery
+            out["reconcile"] = reconcile_with(self.storage, authority)
+            out["digest_match"] = out["reconcile"]["digest_match"]
+        self.storage.note_lease(epoch)
+        if self.hub is not None:
+            # the leader write path now waits on *this* hub's followers
+            self.storage.attach_replicator(
+                self.hub, semisync=self.replication_mode == "semisync")
+        # sampler/pruner contexts built from a partially-replayed view
+        # must be rebuilt from the reconciled trials
+        for study in list(self.storage.studies()):
+            self.server.evict_context(study.key)
+        self.role = "leader"
+        self.fenced = False
+        self.fence_epoch = None
+        faults.set_context(role="leader")
+        out["digest"] = self.storage.state_digest()
+        return 200, out, {}
+
+    def _op_fence(self, body: dict[str, Any]
+                  ) -> tuple[int, dict[str, Any], dict[str, str]]:
+        epoch = int(body.get("epoch", 0))
+        if epoch <= self.epoch:
+            return 409, error_payload(
+                "stale_epoch",
+                f"fence epoch {epoch} is not newer than the current "
+                f"lease epoch {self.epoch}"), {}
+        self.fence_epoch = epoch
+        self.fenced = True
+        return 200, {"fenced": True, "epoch": epoch}, {}
+
 
 def _filter_replay(shadow: InMemoryStorage, key: str,
                    snapshot_text: str | None,
@@ -929,17 +1079,41 @@ def _filter_replay(shadow: InMemoryStorage, key: str,
 # worker process entry point
 # --------------------------------------------------------------------- #
 def _serve_worker(args) -> int:
+    faults.load_from_env()
+    role = "follower" if args.follow else "leader"
+    faults.set_context(worker=args.worker_id, role=role)
     if args.storage == "durable":
         storage: InMemoryStorage = DurableStorage(
             args.root, fsync=args.fsync, segment_bytes=args.segment_bytes)
     else:
         storage = InMemoryStorage()
+    if role == "leader" and args.epoch > storage.lease_epoch:
+        storage.note_lease(args.epoch)
+    hub = None
+    if args.repl_listen and args.storage == "durable":
+        hub = ReplicationHub(storage)
+        storage.attach_replicator(
+            hub, semisync=(role == "leader"
+                           and args.replication == "semisync"))
     secret = os.environ.get("REPRO_FABRIC_SECRET", "hopaas-secret")
     tokens = TokenManager(secret)
     server = HopaasServer(storage=storage, tokens=tokens,
                           lease_seconds=args.lease_seconds, seed=args.seed,
                           worker_name=f"fabric-{args.worker_id}")
     worker = FabricWorkerServer(server, worker_id=args.worker_id)
+    worker.role = role
+    worker.replication_mode = args.replication
+    worker.hub = hub
+    server.health_hook = worker.health_extra
+    repl_client = None
+    if args.follow:
+        fhost, _, fport = args.follow.rpartition(":")
+        follower_id = (os.path.basename(args.root) if args.root
+                       else f"worker-{args.worker_id}-f{os.getpid()}")
+        repl_client = ReplicationClient(storage, (fhost, int(fport)),
+                                        follower_id=follower_id)
+        worker.repl_client = repl_client
+        repl_client.start()
     table = RouteTable({args.worker_id: (args.host, 0)},
                        self_id=args.worker_id)
     worker.table = table
@@ -955,12 +1129,18 @@ def _serve_worker(args) -> int:
         signal.signal(sig, lambda *_a: stop_event.set())
     ready = {"worker": args.worker_id, "port": frontend.port,
              "pid": os.getpid(), "digest": storage.state_digest(),
-             "recovery": getattr(storage, "last_recovery", None)}
+             "recovery": getattr(storage, "last_recovery", None),
+             "role": role, "epoch": storage.lease_epoch,
+             "repl_port": hub.port if hub is not None else None}
     sys.stdout.write(json.dumps(ready) + "\n")
     sys.stdout.flush()
     stop_event.wait()
     frontend.stop()
     dispatcher.close()
+    if repl_client is not None:
+        repl_client.stop()
+    if hub is not None:
+        hub.stop()
     storage.close()
     return 0
 
@@ -982,6 +1162,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--lanes", type=int, default=None)
     ap.add_argument("--upstream-timeout", type=float, default=10.0)
     ap.add_argument("--reuseport-port", type=int, default=0)
+    ap.add_argument("--epoch", type=int, default=0,
+                    help="initial leader lease epoch (journaled if newer "
+                         "than the recovered one)")
+    ap.add_argument("--follow", default=None, metavar="HOST:PORT",
+                    help="run as a follower replicating from this "
+                         "leader's replication hub")
+    ap.add_argument("--replication", choices=("async", "semisync"),
+                    default="async")
+    ap.add_argument("--repl-listen", action="store_true",
+                    help="serve a replication hub (durable storage only)")
     args = ap.parse_args(argv)
     if not args.serve_worker:
         ap.error("only --serve-worker mode is supported")
@@ -995,11 +1185,14 @@ def main(argv: list[str] | None = None) -> int:
 # --------------------------------------------------------------------- #
 class _WorkerProc:
     __slots__ = ("wid", "proc", "host", "port", "pid", "root", "digest",
-                 "recovery")
+                 "recovery", "role", "epoch", "repl_port", "replica_k")
 
     def __init__(self, wid: int, proc: subprocess.Popen, host: str,
                  port: int, pid: int, root: str | None,
-                 digest: str | None, recovery: Any):
+                 digest: str | None, recovery: Any, *,
+                 role: str = "leader", epoch: int = 0,
+                 repl_port: int | None = None,
+                 replica_k: int | None = None):
         self.wid = wid
         self.proc = proc
         self.host = host
@@ -1008,6 +1201,10 @@ class _WorkerProc:
         self.root = root
         self.digest = digest             # state digest reported at ready
         self.recovery = recovery         # DurableStorage.last_recovery
+        self.role = role
+        self.epoch = epoch               # lease epoch reported at ready
+        self.repl_port = repl_port       # replication hub port, if any
+        self.replica_k = replica_k       # follower slot (None = leader)
 
 
 class ShardFabric:
@@ -1025,11 +1222,26 @@ class ShardFabric:
                  upstream_timeout: float = 10.0, respawn: bool = True,
                  respawn_poll: float = 0.2, drain_seconds: float = 5.0,
                  reuseport: bool = False, api_workers: int = 2,
-                 spawn_timeout: float = 30.0):
+                 spawn_timeout: float = 30.0,
+                 replicas: int | None = None,
+                 replication: str | None = None,
+                 hang_grace: float = 2.0):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if storage not in ("durable", "memory"):
             raise ValueError(f"unknown fabric storage {storage!r}")
+        if replicas is None:
+            try:
+                replicas = int(os.environ.get("REPRO_REPLICAS", "0") or 0)
+            except ValueError:
+                replicas = 0
+        if replication is None:
+            replication = os.environ.get("REPRO_REPLICATION",
+                                         "async") or "async"
+        if replication not in ("async", "semisync"):
+            raise ValueError(f"unknown replication mode {replication!r}")
+        if storage != "durable":
+            replicas = 0                 # nothing durable to ship
         self.n_workers = int(workers)
         self.host = host
         self._port = int(port)
@@ -1047,7 +1259,10 @@ class ShardFabric:
         self.reuseport = bool(reuseport)
         self.api_workers = max(1, int(api_workers))
         self.spawn_timeout = float(spawn_timeout)
-        self.inline = self.n_workers == 1
+        self.replicas = max(0, int(replicas))
+        self.replication = replication
+        self.hang_grace = float(hang_grace)
+        self.inline = self.n_workers == 1 and self.replicas == 0
         self.tokens = TokenManager(secret)
         self._tmp: tempfile.TemporaryDirectory | None = None
         if root is None and storage == "durable":
@@ -1067,8 +1282,16 @@ class ShardFabric:
         self._stopped = False
         self._control_token = self.tokens.issue("fabric-control")
         self.respawns = 0
+        self.failovers = 0
         self.handoffs: list[dict[str, Any]] = []
         self.events: list[dict[str, Any]] = []
+        # replication bookkeeping: leader wid -> live follower procs,
+        # monotonically numbered replica roots, deposed leaders awaiting
+        # a fence, and deposed procs to reap at stop()
+        self._followers: dict[int, list[_WorkerProc]] = {}
+        self._replica_seq: dict[int, int] = {}
+        self._fence_pending: list[dict[str, Any]] = []
+        self._deposed: list[_WorkerProc] = []
         # inline (workers=1) state
         self.storage: InMemoryStorage | None = None
         self.servers: list[HopaasServer] = []
@@ -1096,6 +1319,12 @@ class ShardFabric:
             self._table.update(endpoints=self._endpoint_map())
         self._frontend.start()
         self._push_tables()
+        if self.replicas:
+            with self._fleet_lock:
+                wids = sorted(self._workers)
+            for wid in wids:
+                self._followers[wid] = [self._spawn_follower(wid)
+                                        for _ in range(self.replicas)]
         if self.respawn:
             self._monitor = threading.Thread(target=self._monitor_loop,
                                              daemon=True,
@@ -1134,6 +1363,9 @@ class ShardFabric:
             self._dispatcher.close()
         with self._fleet_lock:
             procs = [wp.proc for wp in self._workers.values()]
+            procs += [fp.proc for fols in self._followers.values()
+                      for fp in fols]
+            procs += [wp.proc for wp in self._deposed]
         for proc in procs:
             if proc.poll() is None:
                 proc.terminate()
@@ -1189,6 +1421,9 @@ class ShardFabric:
             "workers": 1 if self.inline else len(self._workers),
             "inline": self.inline,
             "respawns": self.respawns,
+            "failovers": self.failovers,
+            "replicas": self.replicas,
+            "replication": self.replication,
             "handoffs": len(self.handoffs),
         }
         if self._frontend is not None:
@@ -1203,7 +1438,9 @@ class ShardFabric:
             return None
         return os.path.join(self.root, f"worker-{wid}")
 
-    def _spawn(self, wid: int) -> _WorkerProc:
+    def _spawn(self, wid: int, *, epoch: int = 0,
+               follow: tuple[str, int] | None = None,
+               replica_k: int | None = None) -> _WorkerProc:
         # -c instead of -m: runpy warns when the module is also imported
         # through the package __init__ (it is, for the API exports)
         entry = ("import sys; from repro.core.fabric import main; "
@@ -1215,13 +1452,25 @@ class ShardFabric:
                "--lease-seconds", str(self.lease_seconds),
                "--seed", str(self.seed + wid),
                "--upstream-timeout", str(self.upstream_timeout)]
-        root = self._worker_root(wid)
+        if replica_k is None:
+            root = self._worker_root(wid)
+        else:
+            root = (os.path.join(self.root,
+                                 f"worker-{wid}-replica-{replica_k}")
+                    if self.storage_kind == "durable" else None)
         if root is not None:
             cmd += ["--root", root]
         if self.lanes is not None:
             cmd += ["--lanes", str(self.lanes)]
-        if self.reuseport and self._frontend is not None:
+        if self.reuseport and replica_k is None \
+                and self._frontend is not None:
             cmd += ["--reuseport-port", str(self._frontend.port)]
+        if self.replicas and self.storage_kind == "durable":
+            cmd += ["--repl-listen", "--replication", self.replication]
+        if epoch:
+            cmd += ["--epoch", str(epoch)]
+        if follow is not None:
+            cmd += ["--follow", f"{follow[0]}:{follow[1]}"]
         env = dict(os.environ)
         env["REPRO_FABRIC_SECRET"] = self.secret
         src_dir = os.path.dirname(os.path.dirname(
@@ -1236,7 +1485,23 @@ class ShardFabric:
             raise
         return _WorkerProc(wid, proc, self.host, int(ready["port"]),
                            int(ready["pid"]), root, ready.get("digest"),
-                           ready.get("recovery"))
+                           ready.get("recovery"),
+                           role=ready.get("role", "leader"),
+                           epoch=int(ready.get("epoch") or 0),
+                           repl_port=ready.get("repl_port"),
+                           replica_k=replica_k)
+
+    def _spawn_follower(self, wid: int) -> _WorkerProc:
+        with self._fleet_lock:
+            leader = self._workers[wid]
+            k = self._replica_seq.get(wid, 0)
+            self._replica_seq[wid] = k + 1
+        if leader.repl_port is None:
+            raise RuntimeError(
+                f"worker {wid} serves no replication hub; cannot attach "
+                "a follower")
+        return self._spawn(wid, follow=(leader.host, leader.repl_port),
+                           replica_k=k)
 
     def _read_ready(self, proc: subprocess.Popen) -> dict[str, Any]:
         deadline = time.monotonic() + self.spawn_timeout
@@ -1398,6 +1663,9 @@ class ShardFabric:
                 self.migrate(key, src_wid, dst)
             self._push_tables(ring_ids=old_ids + [wid],
                               clear_overrides=True)
+            if self.replicas:
+                self._followers[wid] = [self._spawn_follower(wid)
+                                        for _ in range(self.replicas)]
             self.n_workers = len(self._workers)
             return wid
 
@@ -1413,13 +1681,16 @@ class ShardFabric:
             for key in self.locations().get(wid, []):
                 self.migrate(key, wid, new_ring.owner(key))
             wp = self._workers.pop(wid)
+            doomed = [wp] + self._followers.pop(wid, [])
             self._push_tables(ring_ids=remaining, clear_overrides=True)
-            wp.proc.terminate()
-            try:
-                wp.proc.wait(timeout=5.0)
-            except subprocess.TimeoutExpired:
-                wp.proc.kill()
-                wp.proc.wait(timeout=5.0)
+            for dp in doomed:
+                dp.proc.terminate()
+            for dp in doomed:
+                try:
+                    dp.proc.wait(timeout=5.0)
+                except subprocess.TimeoutExpired:
+                    dp.proc.kill()
+                    dp.proc.wait(timeout=5.0)
             self.n_workers = len(self._workers)
 
     def kill_worker(self, wid: int, sig: int = signal.SIGKILL) -> None:
@@ -1439,42 +1710,265 @@ class ShardFabric:
             time.sleep(0.05)
         raise TimeoutError(f"worker {wid} was not respawned")
 
-    # -- crash respawn --------------------------------------------------- #
+    # -- fleet health ---------------------------------------------------- #
+    def health(self) -> dict[str, Any]:
+        """Fleet-wide health: per-worker role, lease epoch, and
+        replication lag gathered over the control plane (leaders *and*
+        their followers), plus the fabric's failover counters."""
+        if self.inline:
+            h = self.servers[0].op_health()
+            h["workers"] = [{"worker": 0, "role": "leader",
+                             "epoch": h.get("epoch", 0)}]
+            return h
+        with self._fleet_lock:
+            leaders = sorted(self._workers.items())
+            followers = {wid: list(fols)
+                         for wid, fols in self._followers.items()}
+        entries: list[dict[str, Any]] = []
+        for wid, wp in leaders:
+            for peer in [wp] + followers.get(wid, []):
+                entry: dict[str, Any] = {
+                    "worker": wid, "pid": peer.pid,
+                    "endpoint": [peer.host, peer.port]}
+                try:
+                    status, payload = self._control(
+                        peer, "/fabric/replication", {}, timeout=2.0)
+                    if status == 200:
+                        entry.update(payload)
+                    else:
+                        entry["error"] = f"control status {status}"
+                except Exception as e:
+                    entry["error"] = f"{type(e).__name__}: {e}"
+                entries.append(entry)
+        return {"status": "ok", "workers": entries,
+                "replicas": self.replicas, "replication": self.replication,
+                "respawns": self.respawns, "failovers": self.failovers}
+
+    # -- crash respawn / failover ----------------------------------------- #
     def _monitor_loop(self) -> None:
+        ping_fail: dict[int, int] = {}
+        hang_ticks = max(1, int(round(self.hang_grace
+                                      / max(self.respawn_poll, 1e-3))))
         while not self._stop_event.wait(self.respawn_poll):
+            self._deliver_fences()
+            self._reap_followers()
             with self._fleet_lock:
-                dead = [(wid, wp) for wid, wp in self._workers.items()
-                        if wp.proc.poll() is not None]
-                if not dead:
-                    continue
-                for wid, old in dead:
-                    if self._stop_event.is_set():
-                        return
-                    try:
-                        # same WAL directory: recovery rebuilds the exact
-                        # pre-crash state (the ready line reports the
-                        # recovered digest + replay stats)
-                        wp = self._spawn(wid)
-                    except Exception:
-                        logger.exception("respawn of worker %d failed", wid)
+                leaders = list(self._workers.items())
+            dead = [(wid, wp) for wid, wp in leaders
+                    if wp.proc.poll() is not None]
+            hung: list[tuple[int, _WorkerProc]] = []
+            if self.replicas:
+                # a leader that stops answering control pings while its
+                # process lives (wedged, SIGSTOPped) is as gone as a dead
+                # one — but only failover can help, so only probe leaders
+                # that have followers to promote
+                for wid, wp in leaders:
+                    if wp.proc.poll() is not None:
+                        ping_fail.pop(wid, None)
                         continue
+                    with self._fleet_lock:
+                        has_followers = bool(self._followers.get(wid))
+                    if not has_followers:
+                        continue
+                    try:
+                        status, _ = self._control(wp, "/fabric/ping", {},
+                                                  timeout=0.5)
+                        ok = status == 200
+                    except Exception:
+                        ok = False
+                    if ok:
+                        ping_fail[wid] = 0
+                    else:
+                        ping_fail[wid] = ping_fail.get(wid, 0) + 1
+                        if ping_fail[wid] >= hang_ticks:
+                            hung.append((wid, wp))
+            if not dead and not hung:
+                continue
+            respawned: list[int] = []
+            for wid, old in dead:
+                if self._stop_event.is_set():
+                    return
+                if self.replicas and self._failover(wid, old,
+                                                    reason="dead"):
+                    ping_fail[wid] = 0
+                    continue
+                try:
+                    # same WAL directory: recovery rebuilds the exact
+                    # pre-crash state (the ready line reports the
+                    # recovered digest + replay stats)
+                    wp = self._spawn(wid)
+                except Exception:
+                    logger.exception("respawn of worker %d failed", wid)
+                    continue
+                with self._fleet_lock:
                     self._workers[wid] = wp
-                    self.respawns += 1
-                    self.events.append({
-                        "event": "respawn", "worker": wid,
-                        "old_pid": old.pid, "pid": wp.pid,
-                        "recovered_digest": wp.digest,
-                        "recovery": wp.recovery,
-                        "digest_match": (old.digest is not None
-                                         and wp.digest == old.digest)})
-                self._push_tables()
-                for wid, _old in dead:
-                    with contextlib.suppress(Exception):
-                        # requeue trials leased through the dead worker
-                        # whose leases already lapsed; later expiries are
-                        # caught by the normal per-ask sweep
-                        self._control(self._workers[wid], "/fabric/sweep",
-                                      {}, timeout=5.0)
+                self.respawns += 1
+                self.events.append({
+                    "event": "respawn", "worker": wid,
+                    "old_pid": old.pid, "pid": wp.pid,
+                    "recovered_digest": wp.digest,
+                    "recovery": wp.recovery,
+                    "digest_match": (old.digest is not None
+                                     and wp.digest == old.digest)})
+                respawned.append(wid)
+            for wid, old in hung:
+                if self._stop_event.is_set():
+                    return
+                with self._fleet_lock:
+                    current = self._workers.get(wid)
+                if current is not old or old.proc.poll() is not None:
+                    continue             # already handled above
+                if self._failover(wid, old, reason="hung"):
+                    ping_fail[wid] = 0
+            if not respawned:
+                continue
+            self._push_tables()
+            for wid in respawned:
+                with self._fleet_lock:
+                    wp = self._workers[wid]
+                with contextlib.suppress(Exception):
+                    # requeue trials leased through the dead worker
+                    # whose leases already lapsed; later expiries are
+                    # caught by the normal per-ask sweep
+                    self._control(wp, "/fabric/sweep", {}, timeout=5.0)
+                if self.replicas:
+                    # the old followers stream from a hub that died with
+                    # the old process; give the respawn a fresh set
+                    self._replace_followers(wid)
+
+    def _failover(self, wid: int, old: _WorkerProc, *,
+                  reason: str) -> bool:
+        """Promote the most-caught-up follower of ``wid`` to leader.
+        Returns False when no follower can take over (the caller falls
+        back to a WAL respawn)."""
+        with self._fleet_lock:
+            candidates = [fp for fp in self._followers.get(wid, ())
+                          if fp.proc.poll() is None]
+        best: _WorkerProc | None = None
+        best_pos = -1
+        for fp in candidates:
+            try:
+                st = self._control_checked(fp, "/fabric/replication")
+            except Exception:
+                continue
+            pos = int((st.get("client") or {}).get("pos") or 0)
+            if pos > best_pos:
+                best, best_pos = fp, pos
+        if best is None:
+            return False
+        new_epoch = max(old.epoch, best.epoch) + 1
+        try:
+            promoted = self._control_checked(best, "/fabric/promote", {
+                "epoch": new_epoch, "leader_root": old.root})
+        except Exception:
+            logger.exception("promotion of a worker-%d follower failed",
+                             wid)
+            return False
+        best.role = "leader"
+        best.epoch = new_epoch
+        best.digest = promoted.get("digest")
+        best.recovery = promoted.get("recovery")
+        with self._fleet_lock:
+            fols = self._followers.get(wid)
+            if fols and best in fols:
+                fols.remove(best)
+            # the promoted follower keeps the dead leader's ring id —
+            # HashRing placement is a pure function of the id set, so
+            # no shard moves; only the endpoint behind the id changes
+            self._workers[wid] = best
+            self._deposed.append(old)
+            self.failovers += 1
+        self.events.append({
+            "event": "failover", "worker": wid, "reason": reason,
+            "old_pid": old.pid, "pid": best.pid, "epoch": new_epoch,
+            "digest_match": bool(promoted.get("digest_match", True)),
+            "recovery": promoted.get("recovery"),
+            "reconcile": promoted.get("reconcile")})
+        # workers learn the cutover before the router flips to it
+        self._push_tables()
+        with contextlib.suppress(Exception):
+            self._control(best, "/fabric/sweep", {}, timeout=5.0)
+        self._replace_followers(wid)
+        if old.proc.poll() is None:
+            # STONITH-free fencing: keep delivering the new epoch until
+            # the deposed process takes it (or finally dies), so a
+            # SIGSTOPped ex-leader resuming cannot ack stale writes
+            with self._fleet_lock:
+                self._fence_pending.append(
+                    {"wid": wid, "wp": old, "epoch": new_epoch})
+        return True
+
+    def _replace_followers(self, wid: int) -> None:
+        """Tear down ``wid``'s remaining followers (their upstream hub
+        is gone) and spawn a full fresh set against the current leader."""
+        with self._fleet_lock:
+            stale = self._followers.pop(wid, [])
+        for fp in stale:
+            with contextlib.suppress(Exception):
+                fp.proc.terminate()
+        fresh: list[_WorkerProc] = []
+        for _ in range(self.replicas):
+            try:
+                fresh.append(self._spawn_follower(wid))
+            except Exception:
+                logger.exception("follower spawn for worker %d failed",
+                                 wid)
+        with self._fleet_lock:
+            self._followers[wid] = fresh
+        for fp in stale:
+            with contextlib.suppress(Exception):
+                fp.proc.wait(timeout=5.0)
+
+    def _reap_followers(self) -> None:
+        """Respawn spontaneously-dead followers so the replica count
+        holds (leader transitions rebuild their sets wholesale)."""
+        if not self.replicas:
+            return
+        with self._fleet_lock:
+            dead = [(wid, fp) for wid, fols in self._followers.items()
+                    for fp in list(fols) if fp.proc.poll() is not None]
+        for wid, fp in dead:
+            with self._fleet_lock:
+                fols = self._followers.get(wid)
+                if fols and fp in fols:
+                    fols.remove(fp)
+                leader = self._workers.get(wid)
+            if leader is None or leader.proc.poll() is not None:
+                continue                 # leader is down: failover first
+            try:
+                nfp = self._spawn_follower(wid)
+            except Exception:
+                logger.exception("follower respawn for worker %d failed",
+                                 wid)
+                continue
+            with self._fleet_lock:
+                self._followers.setdefault(wid, []).append(nfp)
+            self.events.append({"event": "follower_respawn", "worker": wid,
+                                "old_pid": fp.pid, "pid": nfp.pid})
+
+    def _deliver_fences(self) -> None:
+        with self._fleet_lock:
+            pending = list(self._fence_pending)
+        for item in pending:
+            wp: _WorkerProc = item["wp"]
+            done = wp.proc.poll() is not None
+            if not done:
+                try:
+                    status, _ = self._control(
+                        wp, "/fabric/fence", {"epoch": item["epoch"]},
+                        timeout=0.5)
+                    done = status == 200
+                except Exception:
+                    done = False
+                if done:
+                    self.events.append({"event": "fence",
+                                        "worker": item["wid"],
+                                        "pid": wp.pid,
+                                        "epoch": item["epoch"]})
+            if done:
+                with self._fleet_lock:
+                    with contextlib.suppress(ValueError):
+                        self._fence_pending.remove(item)
 
 
 if __name__ == "__main__":

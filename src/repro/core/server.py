@@ -51,10 +51,11 @@ import shutil
 import tempfile
 import threading
 import time
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
+from . import faults
 from .api import ApiError, build_openapi, build_router
 from .api.router import Router
 from .auth import TokenManager
@@ -297,8 +298,40 @@ class HopaasServer:
     # ------------------------------------------------------------------ #
     # core operations (raise ApiError on client failures)
     # ------------------------------------------------------------------ #
+    # fabric workers replace this with a callable merging their
+    # role/epoch/replication view into the health resource
+    health_hook: Callable[[], dict[str, Any]] | None = None
+
+    def _lease_deadline(self) -> float:
+        """Lease stamp for a suggested/heartbeating trial.  The
+        ``lease_skew`` fault point simulates a skewed clock here without
+        touching the system clock."""
+        return time.time() + self.lease_seconds + faults.skew("lease_skew")
+
     def op_version(self) -> dict[str, Any]:
         return {"version": HOPAAS_VERSION}
+
+    def op_health(self) -> dict[str, Any]:
+        """Machine-readable readiness (``GET /api/v2/health``): role,
+        lease epoch, replication lag, WAL/fsync stats — what a load
+        balancer or the fabric monitor needs to pick a backend."""
+        stats = self.storage.storage_stats()
+        storage_keys = ("backend", "n_studies", "fsync", "wal_records",
+                        "wal_bytes", "fsyncs", "group_commits",
+                        "active_segment", "snapshot_covers")
+        health: dict[str, Any] = {
+            "status": "ok",
+            "version": HOPAAS_VERSION,
+            "worker": self.worker_name,
+            "role": "leader",
+            "epoch": int(getattr(self.storage, "lease_epoch", 0)),
+            "replication": stats.get("replication"),
+            "storage": {k: stats[k] for k in storage_keys if k in stats},
+        }
+        hook = self.health_hook
+        if hook is not None:
+            health.update(hook() or {})
+        return health
 
     def op_version_v2(self) -> dict[str, Any]:
         """v2 version resource: adds the storage/durability stats (the v1
@@ -355,7 +388,8 @@ class HopaasServer:
         return [self.trial_resource(t) for t in trials]
 
     def op_tell(self, uid: str, value: Any = None,
-                state: str = "completed") -> dict[str, Any]:
+                state: str = "completed",
+                idempotency_key: str | None = None) -> dict[str, Any]:
         # multi-objective: value may be a list (one entry per objective)
         values = None
         if isinstance(value, (list, tuple)):
@@ -370,21 +404,39 @@ class HopaasServer:
         if trial is None:
             raise ApiError(404, "trial_not_found", f"unknown trial {uid!r}")
         with self.storage.study_lock(trial.study_key):
+            if idempotency_key:
+                prior = self.storage.idempotent_result(
+                    trial.study_key, idempotency_key)
+                if prior is not None:
+                    # a retry of a tell that already applied (lost
+                    # response, fabric resend, failover replay): return
+                    # the original result — exactly-once, never a 409
+                    return dict(prior)
             if trial.state == TrialState.PRUNED:
                 # the server already finalized this trial on a report;
                 # accept the client's value but keep the PRUNED state.
+                out = {"uid": uid, "state": trial.state.value}
                 self.storage.update_trial(
                     uid, value=(None if value is None else float(value)),
-                    values=values)
-                return {"uid": uid, "state": trial.state.value}
-            if trial.state != TrialState.RUNNING:
-                raise ApiError(409, "conflict",
-                               f"trial {uid} already {trial.state.value}")
-            self.storage.update_trial(
-                uid, value=(None if value is None else float(value)),
-                values=values, state=final_state, finished_at=time.time(),
-                lease_deadline=None)
-        return {"uid": uid, "state": final_state.value}
+                    values=values,
+                    idem=(None if not idempotency_key
+                          else (idempotency_key, out)))
+            else:
+                if trial.state != TrialState.RUNNING:
+                    raise ApiError(409, "conflict",
+                                   f"trial {uid} already {trial.state.value}")
+                out = {"uid": uid, "state": final_state.value}
+                # the dedup note rides in the finalize's own WAL record
+                # (one atomic unit through recovery, replication, and
+                # migration), so a replica can never hold the finalize
+                # without the key that makes its retry recognizable
+                self.storage.update_trial(
+                    uid, value=(None if value is None else float(value)),
+                    values=values, state=final_state,
+                    finished_at=time.time(), lease_deadline=None,
+                    idem=(None if not idempotency_key
+                          else (idempotency_key, out)))
+        return out
 
     def op_tell_batch(self, tells: list[dict[str, Any]]
                       ) -> list[dict[str, Any]]:
@@ -394,7 +446,8 @@ class HopaasServer:
             try:
                 out = self.op_tell(item.get("trial_uid", ""),
                                    item.get("value"),
-                                   item.get("state") or "completed")
+                                   item.get("state") or "completed",
+                                   item.get("idempotency_key"))
                 results.append({"status": 200, **out})
             except ApiError as e:
                 results.append({"status": e.status,
@@ -428,7 +481,7 @@ class HopaasServer:
             # heartbeat: renew the lease + record the intermediate
             self.storage.update_trial(
                 uid, intermediate=(int(step), float(value)),
-                lease_deadline=time.time() + self.lease_seconds)
+                lease_deadline=self._lease_deadline())
             prune = bool(ctx.pruner.should_prune(study, trial, int(step)))
             if prune:
                 self.storage.update_trial(
@@ -469,7 +522,7 @@ class HopaasServer:
             batch.extend((p, 0) for p in params_list)
         return [self.storage.add_trial(
                     ctx.key, params, worker_id=worker_id,
-                    lease_deadline=time.time() + self.lease_seconds,
+                    lease_deadline=self._lease_deadline(),
                     retries=retries)
                 for params, retries in batch]
 
@@ -517,7 +570,8 @@ class HopaasServer:
     def _tell(self, body: dict[str, Any]) -> tuple[int, dict[str, Any]]:
         try:
             out = self.op_tell(body.get("trial_uid", ""), body.get("value"),
-                               body.get("state") or "completed")
+                               body.get("state") or "completed",
+                               body.get("idempotency_key"))
         except ApiError as e:
             return e.status, e.payload()
         return 200, {"trial_uid": out["uid"], "state": out["state"]}

@@ -62,7 +62,8 @@ def _run_fabric(args: argparse.Namespace) -> int:
         root=args.journal_dir,
         storage="durable" if args.journal_dir else "memory",
         fsync=args.fsync, segment_bytes=args.segment_bytes,
-        lease_seconds=args.lease_seconds, lanes=args.lanes).start()
+        lease_seconds=args.lease_seconds, lanes=args.lanes,
+        replicas=args.replicas, replication=args.replication).start()
     atexit.register(fabric.stop)
     token = fabric.issue_token("cli-user",
                                ttl_seconds=args.token_ttl_hours * 3600)
@@ -70,6 +71,14 @@ def _run_fabric(args: argparse.Namespace) -> int:
     print(f"HOPAAS fabric at {fabric.url}  ({args.workers} worker "
           f"processes, storage={fabric.storage_kind})")
     print(f"worker endpoints: {eps}")
+    if fabric.replicas:
+        health = fabric.health()
+        roles = ", ".join(
+            f"w{w['worker']}:{w.get('role', '?')}@e{w.get('epoch', 0)}"
+            for w in health["workers"])
+        print(f"replication: {fabric.replicas} follower(s) per shard, "
+              f"mode={fabric.replication}  [{roles}]")
+        print(f"health: GET {fabric.url}/api/v2/health")
     print(f"API token: {token}")
     print("Ctrl-C to stop.")
     try:
@@ -117,14 +126,34 @@ def main(argv: list[str] | None = None) -> int:
                          "capped at 8)")
     ap.add_argument("--lease-seconds", type=float, default=60.0)
     ap.add_argument("--token-ttl-hours", type=float, default=24.0)
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="follower replicas per fabric worker; > 0 "
+                         "enables WAL shipping + automatic failover "
+                         "(default: $REPRO_REPLICAS or 0; needs "
+                         "--journal-dir)")
+    ap.add_argument("--replication", choices=("async", "semisync"),
+                    default=None,
+                    help="async: fsync ack never waits for followers; "
+                         "semisync: acks additionally wait for one "
+                         "follower ack (default: $REPRO_REPLICATION or "
+                         "async)")
     args = ap.parse_args(argv)
 
-    if args.workers > 1:
+    replicas = args.replicas
+    if replicas is None:
+        try:
+            replicas = int(os.environ.get("REPRO_REPLICAS", "0") or 0)
+        except ValueError:
+            replicas = 0
+    if args.workers > 1 or replicas > 0:
         if args.journal:
             ap.error("--journal (legacy single-file WAL) cannot back the "
                      "shard fabric; use --journal-dir")
         if args.frontend == "threaded":
             ap.error("the shard fabric requires the evloop frontend")
+        if replicas > 0 and not args.journal_dir:
+            ap.error("--replicas needs --journal-dir (only the durable "
+                     "engine has a WAL stream to ship)")
         return _run_fabric(args)
 
     storage = build_storage(args)

@@ -146,14 +146,24 @@ def record_study_key(rec: dict[str, Any]) -> str | None:
         return rec["study_key"]
     if op in ("adopt_shard", "drop_shard"):
         return rec["key"]
+    if op == "idem":
+        return rec["study_key"]
+    # "lease" is store-wide (leader epoch), deliberately unattributable:
+    # it must not travel with any single study on migration
     return None
+
+
+# bounded per-shard idempotency window: large enough to cover every
+# plausible in-flight retry, small enough to stay O(1) per shard.  FIFO
+# eviction is deterministic, so live state and WAL replay agree.
+_DEDUP_WINDOW = 512
 
 
 class _StudyShard:
     """Everything the storage tracks for one study, under one lock."""
 
     __slots__ = ("study", "lock", "by_uid", "state_uids", "lease_heap",
-                 "waiting", "version", "completed_log", "best_uid")
+                 "waiting", "version", "completed_log", "best_uid", "dedup")
 
     def __init__(self, study: Study):
         self.study = study
@@ -176,6 +186,10 @@ class _StudyShard:
         # incumbent: uid of the best completed trial (strictly-better
         # replacement, so ties keep the earliest completion)
         self.best_uid: str | None = None
+        # bounded idempotency-key -> tell-result window (insertion order
+        # = FIFO eviction order), journaled so retries stay exactly-once
+        # across crash recovery and replication
+        self.dedup: dict[str, dict[str, Any]] = {}
 
 
 class InMemoryStorage:
@@ -289,7 +303,9 @@ class InMemoryStorage:
         with shard.lock:
             return shard.by_uid.get(uid)
 
-    def update_trial(self, uid: str, **fields: Any) -> Trial:
+    def update_trial(self, uid: str, *,
+                     idem: tuple[str, dict[str, Any]] | list | None = None,
+                     **fields: Any) -> Trial:
         shard = self._shard(uid.partition(":")[0])
         if shard is None:
             raise KeyError(uid)
@@ -302,10 +318,18 @@ class InMemoryStorage:
             # write-ahead: a record that cannot be journaled (strict JSON
             # rejects NaN/inf) must fail *before* the in-memory apply, or
             # live state would silently diverge from the recovered one
-            self._log({"op": "update_trial", "uid": uid,
-                       "fields": {k: (list(v) if k == "intermediate" else
-                                      (v.value if isinstance(v, TrialState) else v))
-                                  for k, v in fields.items()}})
+            rec: dict[str, Any] = {
+                "op": "update_trial", "uid": uid,
+                "fields": {k: (list(v) if k == "intermediate" else
+                               (v.value if isinstance(v, TrialState) else v))
+                           for k, v in fields.items()}}
+            if idem is not None:
+                # a finalize and its idempotency-window note must be ONE
+                # WAL record: shipped separately, a leader dying between
+                # them leaves a replica where the trial is finalized but
+                # the retried tell is unrecognizable (bogus 409)
+                rec["idem"] = [idem[0], idem[1]]
+            self._log(rec)
             for k, v in fields.items():
                 if k == "intermediate":            # (step, value) append
                     step, value = v
@@ -326,6 +350,8 @@ class InMemoryStorage:
             if (not was_observation and trial.state == TrialState.COMPLETED
                     and trial.value is not None):
                 self._note_observation(shard, trial)
+            if idem is not None:
+                self._remember_idem(shard, idem[0], dict(idem[1]))
             return trial
 
     # -- indexed views ---------------------------------------------------
@@ -479,6 +505,56 @@ class InMemoryStorage:
                 return item
             return None
 
+    # -- exactly-once tells (idempotency window) --------------------------
+    def idempotent_result(self, study_key: str, key: str
+                          ) -> dict[str, Any] | None:
+        """The recorded result of a previously applied tell carrying
+        idempotency key ``key``, or None if unseen (or evicted)."""
+        shard = self._shard(study_key)
+        if shard is None:
+            return None
+        with shard.lock:
+            return shard.dedup.get(key)
+
+    def note_idempotency(self, study_key: str, key: str,
+                         result: dict[str, Any]) -> None:
+        """Record a tell's result under its idempotency key (journaled,
+        bounded FIFO window) so a retried request replays the original
+        outcome instead of double-applying."""
+        shard = self._shard(study_key)
+        if shard is None:
+            raise KeyError(study_key)
+        with shard.lock:
+            self._log({"op": "idem", "study_key": study_key,
+                       "key": key, "result": result})
+            self._remember_idem(shard, key, result)
+
+    @staticmethod
+    def _remember_idem(shard: _StudyShard, key: str,
+                       result: dict[str, Any]) -> None:
+        shard.dedup[key] = result
+        while len(shard.dedup) > _DEDUP_WINDOW:
+            shard.dedup.pop(next(iter(shard.dedup)))
+        shard.version += 1
+
+    # -- leader leases -----------------------------------------------------
+    # Store-wide leadership epoch (replication): 0 = never replicated.
+    # Persisted in the WAL on *change only*, so unreplicated deployments
+    # write no lease records at all.
+    lease_epoch = 0
+
+    def note_lease(self, epoch: int) -> int:
+        """Persist an epoch-numbered leadership lease.  A restarted
+        leader replays its WAL and sees the highest epoch it ever held —
+        if the fabric has moved on to a higher epoch, its writes stay
+        fenced (stale-epoch 409)."""
+        epoch = int(epoch)
+        with self._registry_lock:
+            if epoch != self.lease_epoch:
+                self._log({"op": "lease", "epoch": epoch})
+                self.lease_epoch = epoch
+            return self.lease_epoch
+
     # -- WAL record replay ------------------------------------------------
     # Shared by JournalStorage, the DurableStorage recovery path, and the
     # compactor's shadow replayer (a plain InMemoryStorage that records
@@ -514,7 +590,7 @@ class InMemoryStorage:
                 fields["state"] = TrialState(fields["state"])
             if "intermediate" in fields:
                 fields["intermediate"] = tuple(fields["intermediate"])
-            self.update_trial(rec["uid"], **fields)
+            self.update_trial(rec["uid"], idem=rec.get("idem"), **fields)
         elif op == "enqueue":
             self.enqueue_params(rec["study_key"], rec["params"], rec["retries"])
         elif op == "pop_waiting":
@@ -524,6 +600,29 @@ class InMemoryStorage:
         elif op == "drop_shard":
             with self._registry_lock:
                 self._shards.pop(rec["key"], None)
+        elif op == "idem":
+            shard = self._shard(rec["study_key"])
+            if shard is not None:
+                with shard.lock:
+                    self._remember_idem(shard, rec["key"], rec["result"])
+        elif op == "lease":
+            self.lease_epoch = int(rec["epoch"])
+
+    def apply_replicated(self, rec: dict[str, Any]) -> None:
+        """Apply one record arriving over the replication stream: journal
+        it verbatim first (write-ahead, exactly like a locally originated
+        mutation), then apply with re-journaling suppressed —
+        ``_apply``'s branches journal inconsistently on their own
+        (``add_trial`` replay does not log, ``update_trial`` replay
+        would double-log), so replication always persists the original
+        record and replays it."""
+        self._log(rec)
+        prev = self._replaying
+        self._replaying = True
+        try:
+            self._apply(rec)
+        finally:
+            self._replaying = prev
 
     # -- snapshots + state digest -----------------------------------------
     @staticmethod
@@ -536,6 +635,7 @@ class InMemoryStorage:
             "completed_log": list(shard.completed_log),
             "best_uid": shard.best_uid,
             "version": shard.version,
+            "dedup": dict(shard.dedup),
         }
 
     def state_record(self) -> dict[str, Any]:
@@ -586,6 +686,8 @@ class InMemoryStorage:
             shard.completed_log = list(rec["completed_log"])
             shard.best_uid = rec["best_uid"]
             shard.version = rec["version"]
+            # absent in pre-replication snapshots
+            shard.dedup = dict(rec.get("dedup", {}))
 
     def load_state(self, record: dict[str, Any]) -> None:
         """Restore a ``state_record`` snapshot into this (empty) store."""

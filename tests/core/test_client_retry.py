@@ -1,6 +1,8 @@
 """Client-side retry: exponential backoff + jitter on connection resets
-and 503s for idempotent calls; tell retries guarded by the conflict
-status (a 409 after a resend means the first attempt landed)."""
+and 503s for idempotent calls; every tell carries an idempotency key
+that is constant across retries, so a resend after a lost response
+replays the original result server-side (exactly-once) instead of
+tripping the duplicate-finalize 409."""
 import pytest
 
 from repro.core import (Client, ClientStudy, DirectTransport, HopaasError,
@@ -84,9 +86,9 @@ def test_503_exhaustion_surfaces_the_503():
 
 
 def test_tell_conflict_after_retry_is_success():
-    """The response to the first tell is lost; the retry hits the server's
-    duplicate-finalize 409 — which proves the first attempt landed and
-    must NOT surface as an error."""
+    """The response to the first tell is lost; the retry carries the
+    same idempotency key, so the server recognizes the resend and
+    replays the original result — no error, no double-apply."""
     srv = _server()
     setup = Client(DirectTransport(srv), srv.tokens.issue("u"), retry=FAST)
     study = _study(setup)
@@ -100,9 +102,9 @@ def test_tell_conflict_after_retry_is_success():
 
 
 def test_tell_conflict_after_503_retry_still_raises():
-    """A 503 means the server definitively did NOT process the tell, so a
-    409 on the retry is a genuine conflict (e.g. the lease sweeper beat
-    us), not proof our value landed — it must surface."""
+    """A 503 means the server never processed the first attempt, so the
+    retry's idempotency key is unseen: the 409 it hits is a genuine
+    conflict (someone else finalized the trial) and must surface."""
     srv = _server()
     setup = Client(DirectTransport(srv), srv.tokens.issue("u"), retry=FAST)
     study = _study(setup)

@@ -274,7 +274,9 @@ def test_concurrent_writers_group_commit(tmp_path):
         t.join()
     digest = st.state_digest()
     stats = st.storage_stats()
-    assert stats["wal_records"] == 1 + 80      # create + 40x(add+update)
+    # create + 40x(add + update); the tell's idempotency-window note
+    # rides inside the finalize record, not as a record of its own
+    assert stats["wal_records"] == 1 + 80
     st.close()
     st2 = DurableStorage(root, fsync="off")
     assert st2.state_digest() == digest
