@@ -69,7 +69,14 @@ def main() -> int:
     ap.add_argument("--out", default="experiments/benchmarks")
     args = ap.parse_args()
     if args.only:
-        only = set(args.only.split(","))
+        only = {n for n in (s.strip() for s in args.only.split(","))
+                if n}
+        unknown = only - set(TABLES)
+        if unknown or not only:
+            # a misspelled --only must not look like a green run
+            print(f"unknown table name(s): {sorted(unknown)}; "
+                  f"choose from {sorted(TABLES)}", file=sys.stderr)
+            return 2
     elif args.smoke:
         only = set(SMOKE_TABLES)
     else:
@@ -77,9 +84,11 @@ def main() -> int:
 
     os.makedirs(args.out, exist_ok=True)
     failures = []
+    ran = 0
     for name, (module, caption) in TABLES.items():
         if name not in only:
             continue
+        ran += 1
         print(f"\n=== {name}: {caption} ===", flush=True)
         t0 = time.time()
         try:
@@ -99,6 +108,10 @@ def main() -> int:
     if failures:
         print("\nFAILURES:", failures)
         return 1
+    if not ran:
+        # selection matched nothing: vacuous success is a silent CI hole
+        print("no benchmark tables selected", file=sys.stderr)
+        return 2
     print("\nall benchmark tables written to", args.out)
     return 0
 

@@ -1,0 +1,44 @@
+"""Repo-root pytest hooks: the opt-in runtime lock sanitizer.
+
+``REPRO_SANITIZE=1 pytest tests/core`` instruments every lock created
+from repro source (see ``repro.analysis.sanitize``), records the real
+acquisition order while the suite runs, and at session end cross-checks
+it against the static lock-order graph.  An observed order the static
+graph can reach in reverse is a potential deadlock and fails the run.
+"""
+from __future__ import annotations
+
+import os
+
+_SANITIZE = os.environ.get("REPRO_SANITIZE") == "1"
+
+if _SANITIZE:
+    from repro.analysis import sanitize
+
+    sanitize.install()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _SANITIZE:
+        return
+    from repro.analysis import sanitize
+
+    out = sanitize.cross_check_repo()
+    print(f"\nrepro-sanitize: {len(out['edges'])} lock-order edge(s) "
+          f"observed across {sum(out['locks_created'].values())} "
+          f"instrumented lock(s)")
+    for item in out["unknown"]:
+        print(f"repro-sanitize: note: edge {item['edge']} not in the "
+              f"static graph (observed at {item['site']})")
+    for stall in out["stalls"]:
+        print(f"repro-sanitize: STALL: {stall['thread']} waited "
+              f"{stall['waited']:.0f}s for {stall['key']}")
+    if out["inversions"]:
+        for inv in out["inversions"]:
+            print(f"repro-sanitize: INVERSION: observed {inv['edge']} "
+                  f"at {inv['site']} but the static graph orders "
+                  f"{inv['static_reverse_path']}")
+        raise RuntimeError(
+            f"repro-sanitize: {len(out['inversions'])} lock-order "
+            f"inversion(s) against the static graph — potential "
+            f"deadlock(s); see the lines above")

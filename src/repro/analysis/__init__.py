@@ -1,0 +1,19 @@
+"""repro-check: repo-specific static analysis + runtime lock sanitizer.
+
+Static side (``python -m repro.analysis``): an AST/call-graph framework
+(:mod:`.loader`, :mod:`.callgraph`, :mod:`.findings`) with five
+checkers (:mod:`.checkers`) guarding invariants the test suite cannot
+see directly — lock acquisition order, the never-block rule of the
+event-loop IO thread, write-ahead journaling order, client/server wire
+agreement, and swallowed exceptions in background threads.
+
+Runtime side (:mod:`.sanitize`, enabled by ``REPRO_SANITIZE=1``): an
+instrumented lock wrapper that records real acquisition order during
+the test suite and cross-checks it against the static graph, plus a
+watchdog that dumps every held lock and all thread stacks on a
+suspected deadlock.
+"""
+from .findings import Baseline, Finding
+from .loader import Project, load_core
+
+__all__ = ["Baseline", "Finding", "Project", "load_core"]

@@ -1,0 +1,111 @@
+"""repro-check CLI: ``python -m repro.analysis``.
+
+    PYTHONPATH=src python -m repro.analysis                 # run everything
+    PYTHONPATH=src python -m repro.analysis --checker lock-order
+    PYTHONPATH=src python -m repro.analysis --write-baseline
+    PYTHONPATH=src python -m repro.analysis --format json
+
+Exit codes: 0 = no non-baselined findings; 1 = new findings (this is
+``--fail-on-new``, which is the default and only mode — the flag is
+accepted for CI readability); 2 = usage error.
+
+Stale baseline entries (fixed findings still listed) are reported so
+debt gets deleted from the baseline, never hoarded; they do not fail
+the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .checkers import CHECKERS
+from .findings import Baseline, Finding
+from .loader import Project
+
+
+def _default_repo_root() -> Path:
+    # src/repro/analysis/cli.py -> repo root is three levels above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def run_checkers(project: Project, names: list[str] | None = None
+                 ) -> list[Finding]:
+    findings: list[Finding] = []
+    for name, checker in CHECKERS.items():
+        if names and name not in names:
+            continue
+        findings.extend(checker(project))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis: lock order, "
+                    "event-loop blocking, write-ahead ordering, "
+                    "wire-schema drift, thread hygiene")
+    ap.add_argument("--root", default=None,
+                    help="package to analyze "
+                         "(default: <repo>/src/repro/core)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file "
+                         "(default: <repo>/repro-check.baseline.json)")
+    ap.add_argument("--checker", action="append", default=None,
+                    choices=sorted(CHECKERS),
+                    help="run only this checker (repeatable)")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit non-zero on non-baselined findings "
+                         "(the default; flag kept for explicit CI steps)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    args = ap.parse_args(argv)
+
+    repo_root = _default_repo_root()
+    root = Path(args.root) if args.root else repo_root / "src/repro/core"
+    if not root.is_dir():
+        print(f"repro-check: no such package root: {root}",
+              file=sys.stderr)
+        return 2
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else repo_root / "repro-check.baseline.json")
+
+    project = Project(root, repo_root=repo_root).load()
+    findings = run_checkers(project, args.checker)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    if args.write_baseline:
+        Baseline.from_findings(findings).save(baseline_path)
+        print(f"repro-check: wrote {len(findings)} finding(s) to "
+              f"{baseline_path}")
+        return 0
+
+    baseline = Baseline.load(baseline_path)
+    new, known, stale = baseline.split(findings)
+
+    if args.format == "json":
+        print(json.dumps({
+            "new": [f.__dict__ | {"fingerprint": f.fingerprint}
+                    for f in new],
+            "baselined": [f.fingerprint for f in known],
+            "stale": stale,
+        }, indent=1))
+    else:
+        for f in new:
+            print(f.render())
+        if known:
+            print(f"repro-check: {len(known)} baselined finding(s) "
+                  f"suppressed")
+        for fp in stale:
+            print(f"repro-check: stale baseline entry {fp} "
+                  f"({baseline.entries[fp]}) — finding fixed, delete it "
+                  f"from {baseline_path.name}")
+        counts: dict[str, int] = {}
+        for f in findings:
+            counts[f.checker] = counts.get(f.checker, 0) + 1
+        ran = args.checker or sorted(CHECKERS)
+        summary = ", ".join(f"{c}: {counts.get(c, 0)}" for c in ran)
+        print(f"repro-check: {summary}; {len(new)} new")
+    return 1 if new else 0

@@ -1,0 +1,313 @@
+"""Runtime lock sanitizer (``REPRO_SANITIZE=1``).
+
+Instruments ``threading.Lock`` / ``threading.RLock`` so every lock
+*created from repro source* records the real acquisition order observed
+while the test suite runs:
+
+  * each lock instance is keyed to the same *lock class* the static
+    checker uses (``storage._StudyShard.lock``) by matching its
+    creation site against the AST lock model — the runtime edge set is
+    directly comparable to the static acquisition graph;
+  * a watchdog inside ``acquire`` dumps every held lock and all thread
+    stacks to stderr when an acquisition stalls longer than
+    ``REPRO_SANITIZE_STALL`` seconds (default 30) — a suspected
+    deadlock becomes a readable report instead of a hung CI job;
+  * at session end (see the repo-root ``conftest.py``),
+    :func:`cross_check` compares the observed edges against the static
+    graph: an observed order ``a -> b`` where the static graph can
+    reach ``a`` from ``b`` is an *inversion* — the combined evidence is
+    a cycle — and fails the run.
+
+Only locks created from files under ``src/repro`` are wrapped; the
+stdlib's own locks (``queue``, ``logging``, ``threading.Condition``
+internals created from ``threading.py``) pass through untouched.
+"""
+from __future__ import annotations
+
+import itertools
+import linecache
+import os
+import sys
+import threading
+import traceback
+from typing import Any
+
+# originals, captured before install() rebinds the factories
+_ORIG_LOCK = threading.Lock
+_ORIG_RLOCK = threading.RLock
+
+_STALL_SECONDS = float(os.environ.get("REPRO_SANITIZE_STALL", "30"))
+
+_installed = False
+_state_lock = _ORIG_LOCK()          # guards the module-global records
+_edges: dict[tuple[str, str], str] = {}   # (held, acquired) -> example
+_self_edges: dict[str, int] = {}          # key -> times nested with itself
+_keys_seen: dict[str, int] = {}           # key -> locks created
+_stalls: list[dict[str, Any]] = []
+_site_keys: dict[tuple[str, int], str] = {}
+_tls = threading.local()
+# one clock for creations and acquisitions: lets an edge recorder see
+# that the acquired lock was born inside the held lock's critical
+# section (the runtime image of the static fresh-instance rule)
+_clock = itertools.count()
+# thread ident -> (thread name, its held list) — readable cross-thread
+# by the stall dump, unlike the threading.local itself
+_held_by_thread: dict[int, tuple[str, list]] = {}
+
+
+def _held() -> list[tuple["_TrackedLock", int]]:
+    held = getattr(_tls, "held", None)
+    if held is None:
+        held = _tls.held = []
+        t = threading.current_thread()
+        with _state_lock:
+            _held_by_thread[t.ident or 0] = (t.name, held)
+    return held
+
+
+class _TrackedLock:
+    """Order-recording proxy around a real ``Lock``/``RLock``.
+
+    Implements the context-manager and ``acquire``/``release`` surface
+    plus (via delegation) the private RLock methods ``Condition``
+    needs, so ``threading.Condition(tracked_rlock)`` keeps working.
+    """
+
+    def __init__(self, inner: Any, key: str):
+        self._inner = inner
+        self.key = key
+        self.created_by = threading.get_ident()
+        self.created_seq = next(_clock)
+
+    # -- acquisition ---------------------------------------------------- #
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        if not blocking or timeout != -1:
+            got = self._inner.acquire(blocking, timeout)
+            if got:
+                self._note_acquired()
+            return got
+        waited = 0.0
+        dumped = False
+        while not self._inner.acquire(timeout=1.0):
+            waited += 1.0
+            if waited >= _STALL_SECONDS and not dumped:
+                dumped = True
+                _dump_stall(self, waited)
+        self._note_acquired()
+        return True
+
+    def release(self) -> None:
+        self._inner.release()
+        held = _held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i][0] is self:
+                del held[i]
+                break
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __getattr__(self, name: str) -> Any:
+        # Condition compatibility: _is_owned/_acquire_restore/... go to
+        # the real lock (order bookkeeping is best-effort around waits)
+        return getattr(self._inner, name)
+
+    # -- bookkeeping ---------------------------------------------------- #
+    def _note_acquired(self) -> None:
+        held = _held()
+        seq = next(_clock)
+        if any(h is self for h, _ in held):  # RLock re-entry: no new edge
+            held.append((self, seq))
+            return
+        if held:
+            me = threading.get_ident()
+            where = _caller_site()
+            with _state_lock:
+                for h, h_seq in held:
+                    if (self.created_by == me
+                            and self.created_seq > h_seq):
+                        # this lock was born inside the held lock's
+                        # critical section, on this thread: a private
+                        # instance no other thread can contend
+                        continue
+                    if h.key == self.key:
+                        _self_edges[self.key] = \
+                            _self_edges.get(self.key, 0) + 1
+                    elif (h.key, self.key) not in _edges:
+                        _edges[(h.key, self.key)] = where
+        held.append((self, seq))
+
+
+def _caller_site() -> str:
+    f: Any = sys._getframe(1)
+    while f is not None and f.f_code.co_filename == __file__:
+        f = f.f_back
+    if f is None:
+        return "?"
+    return f"{f.f_code.co_filename}:{f.f_lineno}"
+
+
+def _dump_stall(lock: _TrackedLock, waited: float) -> None:
+    lines = [
+        f"repro-sanitize: suspected deadlock — thread "
+        f"{threading.current_thread().name!r} has waited {waited:.0f}s "
+        f"for {lock.key}",
+        "repro-sanitize: locks held per thread:",
+    ]
+    with _state_lock:
+        _stalls.append({"key": lock.key, "waited": waited,
+                        "thread": threading.current_thread().name})
+        holders = {ident: (name, [h.key for h, _ in held])
+                   for ident, (name, held) in _held_by_thread.items()}
+    for ident, (name, keys) in sorted(holders.items()):
+        if keys:
+            lines.append(f"  {name} ({ident}): {keys}")
+    lines.append("repro-sanitize: all thread stacks:")
+    for tid, frame in sys._current_frames().items():
+        lines.append(f"  -- thread {tid} --")
+        lines.extend("  " + ln.rstrip()
+                     for ln in traceback.format_stack(frame))
+    print("\n".join(lines), file=sys.stderr, flush=True)
+
+
+# ----------------------------------------------------------------------- #
+# installation
+# ----------------------------------------------------------------------- #
+def _load_site_keys(repo_root: str) -> dict[tuple[str, int], str]:
+    """(abs file, lineno of the ``threading.Lock()`` assignment) ->
+    static lock-class key, from the same model the checker uses."""
+    from .checkers.lock_order import LockModel
+    from .loader import load_core
+
+    project = load_core(repo_root)
+    model = LockModel(project)
+    out: dict[tuple[str, int], str] = {}
+    for lc in model.classes.values():
+        mod = project.modules.get(lc.module)
+        if mod is None:
+            continue
+        abs_path = os.path.realpath(os.path.join(repo_root, mod.path))
+        out[(abs_path, lc.line)] = lc.key
+    return out
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/sanitize.py -> repo root three levels above src/
+    return os.path.realpath(
+        os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def _make_factory(orig: Any, src_prefix: str):
+    def factory(*args: Any, **kwargs: Any) -> Any:
+        inner = orig(*args, **kwargs)
+        frame = sys._getframe(1)
+        fname = os.path.realpath(frame.f_code.co_filename)
+        if not fname.startswith(src_prefix):
+            return inner
+        # extension code (numpy's BitGenerator, etc.) can call the
+        # factory with no Python frame of its own — the nearest repro
+        # frame would be blamed for a lock it never created.  Only wrap
+        # when the creating source line really constructs a lock.
+        if "Lock(" not in linecache.getline(fname, frame.f_lineno):
+            return inner
+        key = _site_keys.get((fname, frame.f_lineno))
+        if key is None:
+            rel = os.path.relpath(fname, _repo_root())
+            key = f"{rel}:{frame.f_lineno}"
+        with _state_lock:
+            _keys_seen[key] = _keys_seen.get(key, 0) + 1
+        return _TrackedLock(inner, key)
+    return factory
+
+
+def install(repo_root: str | None = None,
+            src_prefix: str | None = None) -> None:
+    """Patch the ``threading`` lock factories.  Idempotent."""
+    global _installed
+    if _installed:
+        return
+    root = repo_root or _repo_root()
+    prefix = src_prefix or os.path.join(root, "src", "repro")
+    _site_keys.update(_load_site_keys(root))
+    threading.Lock = _make_factory(_ORIG_LOCK, prefix)
+    threading.RLock = _make_factory(_ORIG_RLOCK, prefix)
+    _installed = True
+
+
+def installed() -> bool:
+    return _installed
+
+
+# ----------------------------------------------------------------------- #
+# reporting + static cross-check
+# ----------------------------------------------------------------------- #
+def report() -> dict[str, Any]:
+    with _state_lock:
+        return {
+            "edges": {f"{a} -> {b}": site
+                      for (a, b), site in sorted(_edges.items())},
+            "self_edges": dict(_self_edges),
+            "locks_created": dict(_keys_seen),
+            "stalls": list(_stalls),
+        }
+
+
+def cross_check(runtime_edges: dict[tuple[str, str], str],
+                static_edges: dict[tuple[str, str], str]
+                ) -> dict[str, list]:
+    """Compare observed order against the static acquisition graph.
+
+    ``inversions``: observed ``a -> b`` where the static graph reaches
+    ``a`` from ``b`` — combined, a cycle (potential deadlock).
+    ``unknown``: observed edges the static graph has no opinion on
+    (informational; usually locks below the model's resolution).
+    """
+    adj: dict[str, set[str]] = {}
+    for (a, b) in static_edges:
+        adj.setdefault(a, set()).add(b)
+
+    reach_cache: dict[str, set[str]] = {}
+
+    def reachable(src: str) -> set[str]:
+        if src in reach_cache:
+            return reach_cache[src]
+        seen: set[str] = set()
+        stack = [src]
+        while stack:
+            n = stack.pop()
+            for m in adj.get(n, ()):
+                if m not in seen:
+                    seen.add(m)
+                    stack.append(m)
+        reach_cache[src] = seen
+        return seen
+
+    inversions, unknown = [], []
+    for (a, b), site in sorted(runtime_edges.items()):
+        if a in reachable(b):
+            inversions.append({"edge": f"{a} -> {b}", "site": site,
+                               "static_reverse_path": f"{b} ~> {a}"})
+        elif (a, b) not in static_edges:
+            unknown.append({"edge": f"{a} -> {b}", "site": site})
+    return {"inversions": inversions, "unknown": unknown}
+
+
+def cross_check_repo(repo_root: str | None = None) -> dict[str, Any]:
+    """Full session-end check: observed edges vs the freshly built
+    static graph of this repo.  Returns the merged report."""
+    from .checkers.lock_order import build_lock_graph
+    from .loader import load_core
+
+    root = repo_root or _repo_root()
+    graph = build_lock_graph(load_core(root))
+    with _state_lock:
+        runtime = dict(_edges)
+    out = cross_check(runtime, graph["edges"])
+    out.update(report())
+    return out

@@ -585,6 +585,8 @@ class EventLoopFrontend:
 
     def _wake(self) -> None:
         try:
+            # repro-check: allow(blocking) -- non-blocking wake pipe;
+            # a full pipe means a wakeup is already pending
             self._wake_w.send(b"x")
         except (BlockingIOError, OSError):
             pass                 # wakeup already pending / loop gone
@@ -623,6 +625,8 @@ class EventLoopFrontend:
                     self._accept(conn)
                 elif kind == "wake":
                     try:
+                        # repro-check: allow(blocking) -- draining the
+                        # non-blocking wake pipe after readiness
                         while self._wake_r.recv(4096):
                             pass
                     except (BlockingIOError, OSError):
@@ -659,6 +663,8 @@ class EventLoopFrontend:
             listener = self._listener
         while True:
             try:
+                # repro-check: allow(blocking) -- non-blocking listener,
+                # called only after select() reported it readable
                 sock, _addr = listener.accept()
             except (BlockingIOError, OSError):
                 return
@@ -673,6 +679,8 @@ class EventLoopFrontend:
 
     def _on_read(self, conn: _Connection) -> None:
         try:
+            # repro-check: allow(blocking) -- non-blocking socket read
+            # after readiness; EWOULDBLOCK returns to the loop
             data = conn.sock.recv(_RECV_SIZE)
         except (BlockingIOError, InterruptedError):
             return
@@ -728,6 +736,10 @@ class EventLoopFrontend:
             if (self._inline_ok and len(conn.pending) == 1
                     and not lane.busy and lane.queue.empty()):
                 lane.inline += 1
+                # repro-check: allow(blocking) -- _inline_ok is set only
+                # for the pure in-memory backend with no fabric
+                # dispatcher (see __init__): nothing on this path can
+                # fsync, wait for replication, or touch a socket
                 self._execute(lane, item)
             else:
                 lane.queue.put(item)
@@ -768,6 +780,8 @@ class EventLoopFrontend:
         the connection broken for the IO thread to reap."""
         while conn.outbuf:
             try:
+                # repro-check: allow(blocking) -- non-blocking socket
+                # write; EWOULDBLOCK leaves the rest for the next round
                 sent = conn.sock.send(conn.outbuf)
             except (BlockingIOError, InterruptedError):
                 return

@@ -321,6 +321,10 @@ class DurableStorage(InMemoryStorage):
     # ------------------------------------------------------------------ #
     # WAL append + group-commit fsync
     # ------------------------------------------------------------------ #
+    # repro-check: allow(blocking-under-lock) -- the durability contract:
+    # a mutation is acknowledged only after its WAL record is fsynced
+    # (and, in semi-sync, follower-acked).  Callers hold the shard lock
+    # across _log by design; group commit amortizes the stall.
     def _log(self, record: dict[str, Any]) -> None:
         if self._replaying:
             return
@@ -384,6 +388,9 @@ class DurableStorage(InMemoryStorage):
                         self._commits += 1
                     self._durable_cv.notify_all()
 
+    # repro-check: allow(blocking-under-lock) -- sealing fsyncs the old
+    # segment under the journal lock on purpose: the swap of the active
+    # file handle must be atomic with respect to appenders.
     def _rotate_locked(self) -> None:
         """Seal the active segment and open the next (caller holds the
         journal lock).  Takes the fsync slot so no concurrent fsync can
@@ -530,6 +537,9 @@ class DurableStorage(InMemoryStorage):
     # ------------------------------------------------------------------ #
     # compaction
     # ------------------------------------------------------------------ #
+    # repro-check: allow(blocking-under-lock) -- the compaction lock
+    # serializes compaction against segment shipping only; appenders
+    # and the request path never take it, so fsyncing under it is free.
     def compact(self, min_segments: int | None = None) -> int:
         """Fold sealed segments into a fresh snapshot; delete the folded
         files.  Returns the number of segments folded (0 = nothing to do).
@@ -601,6 +611,9 @@ class DurableStorage(InMemoryStorage):
         if seq:
             self._ensure_durable(seq)
 
+    # repro-check: allow(blocking-under-lock) -- shutdown: the final
+    # fsync + file close must be atomic with setting _closed, or a
+    # racing appender could write into a closed segment.
     def close(self) -> None:
         """Flush, fsync, stop the background threads.  Idempotent."""
         with self._journal_lock:

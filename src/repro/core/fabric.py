@@ -1849,7 +1849,13 @@ class ShardFabric:
         for fp in candidates:
             try:
                 st = self._control_checked(fp, "/fabric/replication")
-            except Exception:
+            except Exception as exc:
+                # an unreachable follower just loses the election — but
+                # say so, or a fleet that silently elects a stale one
+                # looks identical to a healthy failover
+                logger.warning("promote(%s): follower worker %s "
+                               "unreachable, skipping: %s",
+                               reason, fp.wid, exc)
                 continue
             pos = int((st.get("client") or {}).get("pos") or 0)
             if pos > best_pos:

@@ -666,28 +666,33 @@ class InMemoryStorage:
     def _restore_shard(self, rec: dict[str, Any]) -> None:
         """Rebuild one shard (and every derived index) from its snapshot
         record.  The completion log and incumbent are restored verbatim —
-        they carry *completion order*, which trial order cannot recover."""
+        they carry *completion order*, which trial order cannot recover.
+
+        The shard is assembled fully in private and published into the
+        registry as the last step: no thread can observe (or lock) a
+        half-restored shard, and the registry lock never nests a shard
+        lock — the request path nests them the other way around."""
         study = Study.from_record(rec["study"])
         study._managed = True
         key = study.key
+        shard = _StudyShard(study)
+        for t in study.trials:
+            shard.by_uid[t.uid] = t
+            shard.state_uids[t.state].add(t.uid)
+            if (t.state == TrialState.RUNNING
+                    and t.lease_deadline is not None):
+                heapq.heappush(shard.lease_heap,
+                               (t.lease_deadline, t.uid))
+        shard.waiting = deque(rec["waiting"])
+        shard.completed_log = list(rec["completed_log"])
+        shard.best_uid = rec["best_uid"]
+        shard.version = rec["version"]
+        # absent in pre-replication snapshots
+        shard.dedup = dict(rec.get("dedup", {}))
         with self._registry_lock:
             if key in self._shards:
                 raise ValueError(f"shard {key!r} already loaded")
-            self._shards[key] = shard = _StudyShard(study)
-        with shard.lock:
-            for t in study.trials:
-                shard.by_uid[t.uid] = t
-                shard.state_uids[t.state].add(t.uid)
-                if (t.state == TrialState.RUNNING
-                        and t.lease_deadline is not None):
-                    heapq.heappush(shard.lease_heap,
-                                   (t.lease_deadline, t.uid))
-            shard.waiting = deque(rec["waiting"])
-            shard.completed_log = list(rec["completed_log"])
-            shard.best_uid = rec["best_uid"]
-            shard.version = rec["version"]
-            # absent in pre-replication snapshots
-            shard.dedup = dict(rec.get("dedup", {}))
+            self._shards[key] = shard
 
     def load_state(self, record: dict[str, Any]) -> None:
         """Restore a ``state_record`` snapshot into this (empty) store."""
@@ -798,6 +803,9 @@ class JournalStorage(InMemoryStorage):
 
     def __init__(self, path: str):
         self._journal_lock = threading.Lock()
+        # serializes fsync/close against each other only — appenders
+        # contend on _journal_lock alone and never wait for the disk
+        self._fsync_lock = threading.Lock()
         super().__init__()
         self._path = path
         self._file = None
@@ -826,10 +834,19 @@ class JournalStorage(InMemoryStorage):
         return n
 
     def flush(self) -> None:
+        """Force journaled records to disk.  The buffer flush happens
+        under the append lock; the fsync happens on a dedicated lock so
+        concurrent appends are never stalled behind the disk."""
         with self._journal_lock:
+            f = self._file
+            if f is None:
+                return
+            f.flush()
+        with self._fsync_lock:
             if self._file is not None:
-                self._file.flush()
-                os.fsync(self._file.fileno())
+                # repro-check: allow(blocking-under-lock) -- _fsync_lock
+                # exists to serialize fsyncers; appenders never take it
+                os.fsync(f.fileno())
 
     def storage_stats(self) -> dict[str, Any]:
         stats = super().storage_stats()
@@ -838,8 +855,12 @@ class JournalStorage(InMemoryStorage):
 
     def close(self) -> None:
         with self._journal_lock:
-            if self._file is not None:
-                self._file.flush()
-                os.fsync(self._file.fileno())
-                self._file.close()
-                self._file = None
+            f, self._file = self._file, None
+            if f is None:
+                return
+            f.flush()
+        with self._fsync_lock:
+            # repro-check: allow(blocking-under-lock) -- final fsync on
+            # the fsync-serialization lock; no appender can contend
+            os.fsync(f.fileno())
+            f.close()

@@ -1,0 +1,5 @@
+"""Finding-free fixture module (used by the stale-baseline CLI test)."""
+
+
+def add(a, b):
+    return a + b

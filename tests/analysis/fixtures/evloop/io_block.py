@@ -1,0 +1,17 @@
+"""Seeded regression fixture for the evloop-blocking checker.
+
+An ``EventLoopFrontend`` whose IO-thread entry point reaches a blocking
+``time.sleep`` through one level of indirection.  The checker (pointed
+at this module) must flag the sleep as reachable from ``_loop`` and
+report a missing-entry for any configured entry the class lost.
+"""
+import time
+
+
+class EventLoopFrontend:
+    def _loop(self):
+        while True:
+            self._step()
+
+    def _step(self):
+        time.sleep(0.01)

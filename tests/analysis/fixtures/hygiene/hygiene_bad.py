@@ -1,0 +1,31 @@
+"""Seeded regression fixture for the thread-hygiene checker.
+
+``flusher_loop`` swallows every exception silently — the background
+thread dies indistinguishably from a healthy idle one.  The annotated
+and narrowed variants must stay clean.
+"""
+
+
+def flusher_loop(queue):
+    while True:
+        item = queue.get()
+        try:
+            item()
+        except Exception:
+            pass
+
+
+def flusher_loop_annotated(queue):
+    while True:
+        item = queue.get()
+        try:
+            item()
+        except Exception:   # repro-check: allow(swallow) -- fixture
+            pass
+
+
+def close_narrow(sock):
+    try:
+        sock.close()
+    except OSError:
+        pass

@@ -1,0 +1,29 @@
+"""Seeded regression fixture for the lock-order checker.
+
+Deliberately buggy, never imported: ``ab`` and ``ba`` acquire the two
+module locks in opposite orders (a textbook deadlock cycle), and
+``hold_and_sleep`` blocks while holding a lock.  The checker must find
+exactly one lock-cycle over {A, B} and one blocking-under-lock.
+"""
+import threading
+import time
+
+A = threading.Lock()
+B = threading.Lock()
+
+
+def ab():
+    with A:
+        with B:
+            return True
+
+
+def ba():
+    with B:
+        with A:
+            return True
+
+
+def hold_and_sleep():
+    with A:
+        time.sleep(0.1)

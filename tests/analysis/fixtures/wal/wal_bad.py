@@ -1,0 +1,23 @@
+"""Seeded regression fixture for the wal-order checker.
+
+``record`` mutates in-memory state before journaling it — the exact
+crash-divergence bug the checker exists for.  ``record_ok`` is the
+correct write-ahead order and must stay clean.
+"""
+
+
+class BadStore:
+    def __init__(self):
+        self.trials = {}
+        self.count = 0
+
+    def _log(self, rec):
+        self.count += 1
+
+    def record(self, uid, rec):
+        self.trials[uid] = rec
+        self._log({"op": "record", "uid": uid})
+
+    def record_ok(self, uid, rec):
+        self._log({"op": "record", "uid": uid})
+        self.trials[uid] = rec

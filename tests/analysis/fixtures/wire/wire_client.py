@@ -1,0 +1,25 @@
+"""Seeded regression fixture: a client that drifted from the server
+surface in every way the wire-schema checker knows how to catch.
+``tell_ok`` is in-sync and must stay clean."""
+
+
+class DriftedClient:
+    def _call(self, method, path, body=None):
+        return (method, path, body)
+
+    def tell_ok(self, token, uid, value):
+        return self._call("POST", f"/api/tell/{token}",
+                          {"uid": uid, "value": value, "note": "n"})
+
+    def tell_extra(self, token, uid, value):
+        return self._call("POST", f"/api/tell/{token}",
+                          {"uid": uid, "value": value, "extra": 1})
+
+    def tell_partial(self, token, uid):
+        return self._call("POST", f"/api/tell/{token}", {"uid": uid})
+
+    def ghost_route(self, token):
+        return self._call("GET", f"/api/nope/{token}")
+
+    def should_retry(self, err):
+        return err.code == "GHOST_CODE"

@@ -1,0 +1,17 @@
+"""Seeded regression fixture: the server-side route table the
+wire-schema checker parses (``Route(...)`` literals)."""
+import wire_schemas
+
+
+class Route:
+    def __init__(self, method, template, request_schema=None):
+        self.method = method
+        self.template = template
+        self.request_schema = request_schema
+
+
+ROUTES = (
+    Route("POST", "/api/tell/{token}",
+          request_schema=wire_schemas.TellSchema),
+    Route("GET", "/api/version"),
+)

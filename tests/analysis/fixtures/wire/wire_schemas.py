@@ -1,0 +1,14 @@
+"""Seeded regression fixture: the server-side schema surface the
+wire-schema checker parses (repo ``FIELDS`` idiom)."""
+
+
+def Field(name, **spec):
+    return (name, spec)
+
+
+class TellSchema:
+    FIELDS = (
+        Field("uid", required=True),
+        Field("value", required=True),
+        Field("note", default=None),
+    )

@@ -1,0 +1,63 @@
+"""The benchmark harness must not pass vacuously (ISSUE PR 8 satellite):
+a raising scenario exits 1, and a selection that runs zero tables —
+misspelled ``--only`` or an empty list — exits 2 instead of printing a
+green summary."""
+import sys
+import types
+
+import pytest
+
+import benchmarks.run as bench_run
+
+
+def _argv(monkeypatch, tmp_path, *extra):
+    monkeypatch.setattr(sys, "argv",
+                        ["run", "--out", str(tmp_path), *extra])
+
+
+def _fake_table(monkeypatch, name, run_fn):
+    mod = types.ModuleType(f"benchmarks._fx_{name}")
+    mod.run = run_fn
+    monkeypatch.setitem(sys.modules, f"benchmarks._fx_{name}", mod)
+    monkeypatch.setattr(bench_run, "TABLES",
+                        {name: (f"_fx_{name}", "fixture table")})
+
+
+def test_unknown_only_name_is_usage_error(monkeypatch, tmp_path, capsys):
+    _argv(monkeypatch, tmp_path, "--only", "nope")
+    assert bench_run.main() == 2
+    assert "unknown table name" in capsys.readouterr().err
+
+
+def test_empty_only_selection_is_usage_error(monkeypatch, tmp_path):
+    _argv(monkeypatch, tmp_path, "--only", ",,")
+    assert bench_run.main() == 2
+
+
+def test_raising_scenario_exits_nonzero(monkeypatch, tmp_path):
+    def boom():
+        raise RuntimeError("scenario raised")
+    _fake_table(monkeypatch, "boom", boom)
+    _argv(monkeypatch, tmp_path, "--only", "boom")
+    assert bench_run.main() == 1
+
+
+def test_selection_running_zero_tables_exits_nonzero(monkeypatch, tmp_path):
+    # a stale SMOKE_TABLES list naming tables that no longer exist must
+    # not produce a green smoke run
+    _fake_table(monkeypatch, "real", lambda: [{"n": 1}])
+    monkeypatch.setattr(bench_run, "SMOKE_TABLES", ("ghost",))
+    _argv(monkeypatch, tmp_path, "--smoke")
+    assert bench_run.main() == 2
+
+
+def test_passing_table_exits_zero_and_writes_json(monkeypatch, tmp_path):
+    _fake_table(monkeypatch, "ok", lambda: [{"n": 1}])
+    _argv(monkeypatch, tmp_path, "--only", "ok")
+    assert bench_run.main() == 0
+    assert (tmp_path / "ok.json").exists()
+
+
+def test_smoke_tables_all_exist():
+    missing = [n for n in bench_run.SMOKE_TABLES if n not in bench_run.TABLES]
+    assert not missing

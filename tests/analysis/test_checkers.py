@@ -1,0 +1,91 @@
+"""Seeded regression fixtures: each checker must detect the exact bug
+class it exists for (ISSUE PR 8 acceptance).  Every fixture under
+``fixtures/`` carries one deliberate violation plus a clean variant, so
+these tests pin both detection and non-detection."""
+from pathlib import Path
+
+from repro.analysis.checkers import (evloop, lock_order, thread_hygiene,
+                                     wal_order, wire_schema)
+from repro.analysis.loader import Project
+
+REPO = Path(__file__).resolve().parents[2]
+FIX = Path(__file__).parent / "fixtures"
+
+
+def _project(sub: str) -> Project:
+    return Project(FIX / sub, repo_root=REPO).load()
+
+
+def test_lock_order_detects_cycle_and_blocking_under_lock():
+    findings = lock_order.run(_project("lockcycle"), {
+        "modules": ("lock_cycle",),
+        "critical_modules": ("lock_cycle",),
+        "aliases": {},
+    })
+    by_rule = {f.rule: f for f in findings}
+    assert set(by_rule) == {"lock-cycle", "blocking-under-lock"}
+    cycle = by_rule["lock-cycle"]
+    assert "lock_cycle.A" in cycle.message and "lock_cycle.B" in cycle.message
+    blocking = by_rule["blocking-under-lock"]
+    assert "sleep" in blocking.message
+    assert blocking.symbol.endswith("hold_and_sleep")
+
+
+def test_evloop_detects_io_thread_blocking_and_missing_entry():
+    findings = evloop.run(_project("evloop"), {
+        "module": "io_block",
+        "cls": "EventLoopFrontend",
+        # _gone pins the missing-entry rule: a renamed entry point must
+        # fail the checker, not silently shrink its coverage
+        "entries": ("_loop", "_gone"),
+        "allowed_kinds": (),
+    })
+    rules = sorted(f.rule for f in findings)
+    assert rules == ["io-thread-blocks", "missing-entry"]
+    block = next(f for f in findings if f.rule == "io-thread-blocks")
+    assert "sleep" in block.message
+    assert "_loop" in block.message        # reported with its call chain
+    assert block.symbol.endswith("_step")  # ...at the actual blocking site
+
+
+def test_wal_order_detects_mutation_before_journal():
+    findings = wal_order.run(_project("wal"), {
+        "classes": ("BadStore",),
+        "log_method": "_log",
+        "roots": ("self",),
+        "exempt_attrs": (),
+    })
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "mutate-before-journal"
+    assert f.symbol.endswith("BadStore.record")   # record_ok stays clean
+    assert "self.trials[uid] = rec" in f.message
+
+
+def test_wire_schema_detects_every_drift_class():
+    findings = wire_schema.run(_project("wire"), {
+        "client_module": "wire_client",
+        "schemas_module": "wire_schemas",
+        "routes_modules": ("wire_routes",),
+        "code_modules": None,
+        "extra_codes": (),
+    })
+    by_rule = {f.rule: f for f in findings}
+    assert set(by_rule) == {"client-route-mismatch", "client-field-unknown",
+                            "client-missing-required", "error-code-drift"}
+    assert "/api/nope/{x}" in by_rule["client-route-mismatch"].message
+    assert "'extra'" in by_rule["client-field-unknown"].message
+    assert "'value'" in by_rule["client-missing-required"].message
+    assert "GHOST_CODE" in by_rule["error-code-drift"].message
+    # tell_ok matches the route and schema exactly: 4 findings total
+    assert len(findings) == 4
+
+
+def test_thread_hygiene_detects_swallow_and_honours_annotation():
+    findings = thread_hygiene.run(_project("hygiene"),
+                                  {"modules": ("hygiene_bad",)})
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "swallowed-exception"
+    # the annotated and the narrowed (OSError) handlers stay clean
+    assert f.symbol.endswith("flusher_loop")

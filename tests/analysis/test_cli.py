@@ -1,0 +1,76 @@
+"""repro-check CLI contract: exit codes, baseline lifecycle, and the
+tier-1 guarantee that ``src/repro/core`` is clean against the committed
+baseline."""
+import json
+from pathlib import Path
+
+from repro.analysis import cli
+from repro.analysis.findings import Baseline
+from repro.analysis.loader import load_core
+
+REPO = Path(__file__).resolve().parents[2]
+FIX = Path(__file__).parent / "fixtures"
+
+
+def test_core_has_no_findings_beyond_committed_baseline():
+    """The enforced invariant: every checker over the real core package
+    yields nothing outside repro-check.baseline.json (which this PR
+    commits empty — the debt ledger starts at zero)."""
+    findings = cli.run_checkers(load_core(REPO))
+    baseline = Baseline.load(REPO / "repro-check.baseline.json")
+    new, _known, _stale = baseline.split(findings)
+    assert not new, "\n".join(f.render() for f in new)
+
+
+def test_committed_baseline_is_empty():
+    baseline = Baseline.load(REPO / "repro-check.baseline.json")
+    assert baseline.entries == {}
+
+
+def test_cli_clean_run_exits_zero():
+    assert cli.main([]) == 0
+
+
+def test_cli_fails_on_seeded_findings(tmp_path, capsys):
+    rc = cli.main(["--root", str(FIX / "lockcycle"),
+                   "--baseline", str(tmp_path / "b.json"),
+                   "--checker", "lock-order"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "lock-cycle" in out and "1 new" in out
+
+
+def test_cli_json_format(tmp_path, capsys):
+    rc = cli.main(["--root", str(FIX / "lockcycle"),
+                   "--baseline", str(tmp_path / "b.json"),
+                   "--checker", "lock-order", "--format", "json"])
+    assert rc == 1
+    data = json.loads(capsys.readouterr().out)
+    assert data["new"] and data["new"][0]["rule"] == "lock-cycle"
+    assert data["baselined"] == [] and data["stale"] == []
+
+
+def test_cli_write_baseline_then_suppressed(tmp_path, capsys):
+    baseline = tmp_path / "b.json"
+    root = str(FIX / "lockcycle")
+    common = ["--root", root, "--baseline", str(baseline),
+              "--checker", "lock-order"]
+    assert cli.main(common + ["--write-baseline"]) == 0
+    capsys.readouterr()
+    assert cli.main(common) == 0        # known debt: reported, not fatal
+    assert "baselined finding(s) suppressed" in capsys.readouterr().out
+
+
+def test_cli_reports_stale_baseline_entries(tmp_path, capsys):
+    baseline = tmp_path / "b.json"
+    cli.main(["--root", str(FIX / "lockcycle"), "--baseline", str(baseline),
+              "--checker", "lock-order", "--write-baseline"])
+    capsys.readouterr()
+    rc = cli.main(["--root", str(FIX / "clean"), "--baseline", str(baseline),
+                   "--checker", "lock-order"])
+    assert rc == 0                      # stale debt never fails the run...
+    assert "stale baseline entry" in capsys.readouterr().out  # ...but nags
+
+
+def test_cli_bad_root_is_usage_error(tmp_path):
+    assert cli.main(["--root", str(tmp_path / "missing")]) == 2

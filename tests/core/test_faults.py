@@ -1,0 +1,166 @@
+"""Fault-injection harness (ISSUE PR 8 satellite): every named injector
+site compiled into the production paths is (a) reachable from normal
+operation and (b) deterministic under a fixed seed.
+
+Sites under test (see ``repro.core.faults``):
+  crash_before_fsync / crash_after_fsync  -> durable._ensure_durable
+  torn_ship (torn | bitflip)              -> replication hub _ship
+  partition_follower                      -> ReplicationClient._sync_once
+  lease_skew                              -> server._lease_deadline
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (Client, ClientStudy, DirectTransport, DurableStorage,
+                        HopaasServer, InMemoryStorage, ReplicationClient,
+                        ReplicationHub, recover_dir_state, suggestions)
+from repro.core import faults
+from repro.core.faults import FaultInjector
+
+_SPACE = {"x": suggestions.uniform(0.0, 1.0)}
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.install({})
+    yield
+    faults.install({})
+
+
+# --------------------------------------------------------------------- #
+# injector semantics: seeded determinism
+# --------------------------------------------------------------------- #
+def test_torn_mangle_deterministic_under_fixed_seed():
+    data = bytes(range(256))
+    spec = {"torn_ship": {"mode": "always", "arg": "torn"}}
+    a = FaultInjector(spec, seed=11).mangle("torn_ship", data)
+    b = FaultInjector(spec, seed=11).mangle("torn_ship", data)
+    assert a == b                        # replayable chaos
+    assert a == data[:len(a)] and len(a) < len(data)   # strict prefix
+
+
+def test_bitflip_mangle_flips_exactly_one_bit():
+    data = bytes(range(256))
+    spec = {"torn_ship": {"mode": "always", "arg": "bitflip"}}
+    a = FaultInjector(spec, seed=3).mangle("torn_ship", data)
+    b = FaultInjector(spec, seed=3).mangle("torn_ship", data)
+    assert a == b and len(a) == len(data)
+    diffs = [(x, y) for x, y in zip(a, data) if x != y]
+    assert len(diffs) == 1 and diffs[0][0] ^ diffs[0][1] == 0x40
+
+
+def test_nth_mode_counts_every_arrival():
+    inj = FaultInjector({"f": {"mode": "nth", "n": 3}})
+    assert [inj.fire("f") for _ in range(5)] == [False, False, True,
+                                                False, False]
+    assert inj.stats()["arrivals"]["f"] == 5
+
+
+def test_once_mode_fires_exactly_once():
+    inj = FaultInjector({"f": {"mode": "once"}})
+    assert [inj.fire("f") for _ in range(4)] == [True, False, False, False]
+
+
+def test_context_filter_gates_firing():
+    inj = FaultInjector({"f": {"mode": "always", "worker": 1,
+                               "role": "leader"}})
+    assert not inj.fire("f")             # no context set
+    inj.set_context(worker=1, role="follower")
+    assert not inj.fire("f")             # wrong role
+    inj.set_context(role="leader")
+    assert inj.fire("f")
+    # arrivals counted even while filtered: nth stays deterministic
+    assert inj.stats()["arrivals"]["f"] == 3
+
+
+def test_skew_returns_armed_arg_else_zero():
+    inj = FaultInjector({"lease_skew": {"mode": "always", "arg": -30.0}})
+    assert inj.skew("lease_skew") == -30.0
+    assert FaultInjector().skew("lease_skew") == 0.0
+
+
+def test_env_spec_arms_process_injector():
+    env = {faults.ENV_VAR: json.dumps(
+        {"seed": 3, "faults": {"lease_skew": {"mode": "always",
+                                              "arg": 1.5}}})}
+    inj = faults.load_from_env(env)
+    assert inj is faults.injector()
+    assert inj.stats()["armed"] == ["lease_skew"]
+    assert faults.skew("lease_skew") == 1.5
+
+
+# --------------------------------------------------------------------- #
+# reachability: normal operation routes through every site
+# --------------------------------------------------------------------- #
+def test_every_injection_site_is_reached_by_normal_operation(tmp_path):
+    """Disarmed injectors still count arrivals, so one end-to-end drive
+    (durable server + replicated follower) proves each named site sits
+    on a live code path — a renamed site fails here, not in a chaos run
+    that silently stops injecting."""
+    storage = DurableStorage(str(tmp_path / "leader"), fsync="always",
+                             auto_compact=False)
+    hub = ReplicationHub(storage)
+    storage.attach_replicator(hub)
+    srv = HopaasServer(storage=storage, seed=0, lease_seconds=60.0)
+    cl = Client(DirectTransport(srv), srv.tokens.issue("t"))
+    study = ClientStudy(name="sites", client=cl, properties=dict(_SPACE),
+                        sampler={"name": "random"})
+    shadow = InMemoryStorage()
+    client = ReplicationClient(shadow, ("127.0.0.1", hub.port)).start()
+    try:
+        t = study.ask()
+        study.tell(t, value=abs(t.x))
+        assert client.wait_position(hub.position(), timeout=15.0)
+    finally:
+        client.stop()
+        hub.stop()
+        storage.close()
+    arrivals = faults.injector().stats()["arrivals"]
+    for site in ("crash_before_fsync", "crash_after_fsync", "lease_skew",
+                 "torn_ship", "partition_follower"):
+        assert arrivals.get(site, 0) >= 1, (site, arrivals)
+
+
+# --------------------------------------------------------------------- #
+# crash_after_fsync: the durable sibling of the existing
+# crash-before test in test_replication.py
+# --------------------------------------------------------------------- #
+def test_crash_after_fsync_recovers_everything_acked(tmp_path):
+    """Dying right *after* the fsync syscall is the friendliest crash:
+    the synced batch is on stable storage, so recovery must cover every
+    acknowledged write — and the process must still die with the
+    injector's exit code, proving the site fired (not just counted)."""
+    root = str(tmp_path / "crashy")
+    prog = (
+        "import repro.core.faults as f\n"
+        "f.load_from_env()\n"
+        "from repro.core import HopaasServer, DurableStorage\n"
+        "srv = HopaasServer(storage=DurableStorage(%r, fsync='always',"
+        " auto_compact=False), seed=0)\n"
+        "cfg = {'name': 'c', 'properties': {'x': {'type': 'uniform',"
+        " 'low': 0, 'high': 1}}, 'sampler': {'name': 'random'}}\n"
+        "_created, res = srv.op_create_study(cfg)\n"
+        "key = res['key']\n"
+        "for i in range(50):\n"
+        "    (t,) = srv.op_ask(key, 'w', 1)\n"
+        "    srv.op_tell(t['uid'], float(i), 'completed')\n"
+        "    print(t['uid'], flush=True)\n"
+    ) % root
+    import repro.core
+    src_dir = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(repro.core.__file__))))
+    env = dict(os.environ, REPRO_FAULTS=json.dumps(
+        {"faults": {"crash_after_fsync": {"mode": "nth", "n": 30}}}))
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", prog], env=env,
+                          capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 137, proc.stderr
+    acked = [ln for ln in proc.stdout.splitlines() if ln.strip()]
+    assert acked
+    store, _meta = recover_dir_state(root)
+    have = {t.uid for s in store.studies() for t in s.trials}
+    assert set(acked) <= have, sorted(set(acked) - have)
