@@ -1,21 +1,30 @@
-"""Repo-root pytest hooks: the opt-in runtime lock sanitizer.
+"""Repo-root pytest hooks: the opt-in runtime sanitizers.
 
 ``REPRO_SANITIZE=1 pytest tests/core`` instruments every lock created
 from repro source (see ``repro.analysis.sanitize``), records the real
 acquisition order while the suite runs, and at session end cross-checks
 it against the static lock-order graph.  An observed order the static
 graph can reach in reverse is a potential deadlock and fails the run.
+
+``REPRO_SANITIZE=race`` additionally runs the Eraser-style shared-state
+sanitizer: the concurrency-bearing core classes record (thread, field,
+held-lockset) samples on every attribute write, and a field observed
+written from two threads with an empty lockset intersection fails the
+session.
 """
 from __future__ import annotations
 
 import os
 
-_SANITIZE = os.environ.get("REPRO_SANITIZE") == "1"
+_MODE = os.environ.get("REPRO_SANITIZE", "")
+_SANITIZE = _MODE in ("1", "race")
 
 if _SANITIZE:
     from repro.analysis import sanitize
 
     sanitize.install()
+    if _MODE == "race":
+        sanitize.install_race()
 
 
 def pytest_sessionfinish(session, exitstatus):
@@ -42,3 +51,19 @@ def pytest_sessionfinish(session, exitstatus):
             f"repro-sanitize: {len(out['inversions'])} lock-order "
             f"inversion(s) against the static graph — potential "
             f"deadlock(s); see the lines above")
+
+    if sanitize.race_installed():
+        race = sanitize.race_report()
+        print(f"repro-sanitize: race mode tracked "
+              f"{race['fields_tracked']} shared field(s) across "
+              f"{len(race['instrumented_classes'])} class(es) "
+              f"({race['fields_allowed']} audited allow-listed)")
+        if race["violations"]:
+            for v in race["violations"]:
+                print(f"repro-sanitize: RACE: {v['class']}.{v['field']} "
+                      f"written by threads {v['threads']} with empty "
+                      f"lockset intersection (last write at {v['site']})")
+            raise RuntimeError(
+                f"repro-sanitize: {len(race['violations'])} shared-state "
+                f"race(s) observed — unlocked cross-thread field "
+                f"write(s); see the lines above")

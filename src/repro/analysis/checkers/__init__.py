@@ -5,7 +5,8 @@ Each checker is a callable ``run(project, config=None) -> list[Finding]``.
 """
 from __future__ import annotations
 
-from . import evloop, lock_order, thread_hygiene, wal_order, wire_schema
+from . import (evloop, lock_order, shared_state, thread_hygiene,
+               wal_order, wire_schema)
 
 CHECKERS = {
     "lock-order": lock_order.run,
@@ -13,6 +14,7 @@ CHECKERS = {
     "wal-order": wal_order.run,
     "wire-schema": wire_schema.run,
     "thread-hygiene": thread_hygiene.run,
+    "shared-state": shared_state.run,
 }
 
 __all__ = ["CHECKERS"]

@@ -22,6 +22,18 @@ client cannot handle fails `repro-check` instead of a production call:
     an error code the client branches on (retry policy, equality
     checks) that no server-side code path raises.
 
+``probe-route-mismatch``
+    a literal ``/api/...`` path used by an *internal* probe (the fabric
+    router's fast-path classifiers, the health scatter-gather, the
+    service launcher) that matches no registered route — the fabric
+    would 404 its own monitoring;
+
+``health-field-drift``
+    a payload key a scatter-gather consumer reads (``x.get("k")`` /
+    ``x["k"]``) that no producer function on that surface ever emits —
+    renaming a health field silently turns a consumer read into
+    ``None``.
+
 All parsing is AST-level; nothing is imported.
 """
 from __future__ import annotations
@@ -41,6 +53,23 @@ DEFAULT_CONFIG = {
     "code_modules": None,        # None = every loaded module
     # codes produced outside the scanned sources (none today)
     "extra_codes": (),
+    # modules whose literal "/api/..." strings are internal probes that
+    # must match a registered route (trailing-slash prefixes exempt)
+    "probe_modules": ("fabric", "aio", "service"),
+    # scatter-gather surfaces: consumer key reads ⊆ producer key emits
+    "health_surfaces": (
+        {"name": "replication-status",
+         "producers": ("replication.ReplicationHub.status",
+                       "replication.ReplicationClient.status",
+                       "fabric.FabricWorkerServer._replication_status",
+                       "fabric.FabricWorkerServer._op_promote"),
+         "consumers": ("fabric.ShardFabric._failover",)},
+        {"name": "health-endpoint",
+         "producers": ("server.HopaasServer.op_health",
+                       "fabric.FabricWorkerServer.health_extra",
+                       "fabric.FabricWorkerServer._replication_status"),
+         "consumers": ("fabric.ShardFabric.health",)},
+    ),
 }
 
 
@@ -244,6 +273,76 @@ def _client_codes(mod: Module) -> list[tuple[str, int]]:
     return out
 
 
+def _probe_paths(mod: Module) -> list[tuple[str, int]]:
+    """Literal ``/api/...`` strings used as internal probe paths.
+    Trailing-slash values are prefix constants (``startswith`` guards,
+    URL builders), not full paths — those are exempt.  Fragments inside
+    an f-string are judged as the whole joined text, not per part."""
+    joined_parts: set[int] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.JoinedStr):
+            joined_parts.update(id(v) for v in node.values)
+    out: list[tuple[str, int]] = []
+    for node in ast.walk(mod.tree):
+        if id(node) in joined_parts:
+            continue
+        if not isinstance(node, (ast.Constant, ast.JoinedStr)):
+            continue
+        text = _path_text(node)
+        if (text and text.startswith("/api/")
+                and not text.partition("?")[0].endswith("/")):
+            out.append((text, node.lineno))
+    return out
+
+
+def _produced_keys(project: Project, quals: tuple) -> set[str]:
+    """String keys a producer function can emit: dict-literal keys plus
+    ``out["key"] = ...`` subscript stores.  ``update(other.status())``
+    composition is covered by listing every producer on the surface."""
+    keys: set[str] = set()
+    for qual in quals:
+        fn = project.functions.get(qual)
+        if fn is None:
+            continue
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Dict):
+                keys.update(k.value for k in node.keys
+                            if isinstance(k, ast.Constant)
+                            and isinstance(k.value, str))
+            elif (isinstance(node, ast.Subscript)
+                  and isinstance(node.ctx, (ast.Store, ast.Del))
+                  and isinstance(node.slice, ast.Constant)
+                  and isinstance(node.slice.value, str)):
+                keys.add(node.slice.value)
+    return keys
+
+
+def _consumed_keys(project: Project, quals: tuple
+                   ) -> list[tuple[str, int, str, Module]]:
+    """(key, line, consumer qual, module) for every constant-string
+    ``x.get("k")`` call or ``x["k"]`` load in the consumer functions."""
+    out: list[tuple[str, int, str, Module]] = []
+    for qual in quals:
+        fn = project.functions.get(qual)
+        if fn is None:
+            continue
+        for node in ast.walk(fn.node):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "get" and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                out.append((node.args[0].value, node.lineno, qual,
+                            fn.module))
+            elif (isinstance(node, ast.Subscript)
+                  and isinstance(node.ctx, ast.Load)
+                  and isinstance(node.slice, ast.Constant)
+                  and isinstance(node.slice.value, str)):
+                out.append((node.slice.value, node.lineno, qual,
+                            fn.module))
+    return out
+
+
 def _server_codes(project: Project, modules: tuple | None) -> set[str]:
     codes: set[str] = set()
     for mod in project.modules.values():
@@ -340,6 +439,49 @@ def run(project: Project, config: dict | None = None) -> list[Finding]:
                             f"{route['template']} omits required field "
                             f"{name!r} of schema {schema_name}",
                     detail=f"{route['template']}|missing|{name}"))
+
+    for mod_name in cfg["probe_modules"]:
+        mod = project.modules.get(mod_name)
+        if mod is None:
+            continue
+        for path, line in _probe_paths(mod):
+            if any(_path_match(path, r["template"]) for r in routes):
+                continue
+            if mod.is_allowed(line, "wire"):
+                continue
+            findings.append(Finding(
+                checker="wire-schema", rule="probe-route-mismatch",
+                path=mod.path, line=line, symbol="",
+                message=f"internal probe uses path {path!r} but no "
+                        f"registered route matches it",
+                detail=f"probe|{mod_name}|{path}"))
+
+    for surface in cfg["health_surfaces"]:
+        produced = _produced_keys(project, surface["producers"])
+        if not produced:
+            # every producer renamed/moved: the surface silently reads
+            # as fully drifted — report the coverage loss, not N keys
+            findings.append(Finding(
+                checker="wire-schema", rule="health-field-drift",
+                path="", line=0, symbol=surface["name"],
+                message=f"health surface {surface['name']!r}: no "
+                        f"producer function found "
+                        f"({', '.join(surface['producers'])})",
+                detail=f"surface-empty|{surface['name']}"))
+            continue
+        for key, line, qual, mod in _consumed_keys(
+                project, surface["consumers"]):
+            if key in produced:
+                continue
+            if mod.is_allowed(line, "wire"):
+                continue
+            findings.append(Finding(
+                checker="wire-schema", rule="health-field-drift",
+                path=mod.path, line=line, symbol=qual,
+                message=f"{qual} reads payload key {key!r} but no "
+                        f"producer on the {surface['name']!r} surface "
+                        f"emits it",
+                detail=f"{surface['name']}|{qual}|{key}"))
 
     server_codes = _server_codes(project, cfg["code_modules"])
     server_codes.update(cfg["extra_codes"])

@@ -40,6 +40,53 @@ def run_checkers(project: Project, names: list[str] | None = None
     return findings
 
 
+def print_stats(project: Project) -> int:
+    """Per-checker coverage counts (``--stats``).  Returns non-zero when
+    thread-root discovery comes up empty for any required subsystem —
+    a rename that silently shrinks coverage must fail CI, because zero
+    roots reads exactly like a clean run."""
+    from .checkers import lock_order, shared_state, wire_schema
+
+    print(f"repro-check: project: {len(project.modules)} module(s), "
+          f"{len(project.functions)} function(s), "
+          f"{len(project.classes)} class(es) loaded")
+
+    graph = lock_order.build_lock_graph(project)
+    print(f"repro-check: lock-order: {len(graph['keys'])} lock "
+          f"class(es), {len(graph['edges'])} static acquisition edge(s)")
+
+    routes = 0
+    for name in wire_schema.DEFAULT_CONFIG["routes_modules"]:
+        mod = project.modules.get(name)
+        if mod is not None:
+            routes += len(wire_schema._routes(mod))
+    client = project.modules.get(wire_schema.DEFAULT_CONFIG["client_module"])
+    calls = len(wire_schema._client_calls(client)) if client else 0
+    print(f"repro-check: wire-schema: {routes} route(s), "
+          f"{calls} client call(s) cross-checked")
+
+    ss = shared_state.stats(project)
+    per_sub = ", ".join(f"{sub}: {n}" for sub, n
+                        in ss["roots_by_subsystem"].items())
+    print(f"repro-check: shared-state: {ss['roots']} thread root(s) "
+          f"({per_sub}); {ss['classes_found']}/"
+          f"{ss['classes_configured']} configured class(es) found; "
+          f"{ss['fields_examined']} field(s) examined, "
+          f"{ss['fields_escaped']} escaped to >=2 roots, "
+          f"{ss['fields_allowed']} allow-audited, "
+          f"{ss['fields_flagged']} flagged")
+
+    empty = [sub for sub in ss["required_subsystems"]
+             if not ss["roots_by_subsystem"].get(sub)]
+    if empty:
+        print(f"repro-check: FAIL: zero thread roots discovered in "
+              f"subsystem(s): {', '.join(empty)} — root discovery "
+              f"coverage collapsed (a spawn-site rename reads as "
+              f"'clean')", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -61,6 +108,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="rewrite the baseline from current findings")
     ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-checker coverage counts instead of "
+                         "findings; fails when thread-root discovery is "
+                         "empty for a required subsystem")
     args = ap.parse_args(argv)
 
     repo_root = _default_repo_root()
@@ -73,6 +124,8 @@ def main(argv: list[str] | None = None) -> int:
                      else repo_root / "repro-check.baseline.json")
 
     project = Project(root, repo_root=repo_root).load()
+    if args.stats:
+        return print_stats(project)
     findings = run_checkers(project, args.checker)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
 

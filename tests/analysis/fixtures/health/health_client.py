@@ -1,0 +1,2 @@
+"""Fixture client: intentionally empty — the health fixture exercises
+the probe/scatter-gather rules, not the client-route rules."""

@@ -1,0 +1,37 @@
+"""Seeded health scatter-gather drift.
+
+``Fleet.gather`` reads one key its producers renamed away
+(``lag_records``), and ``Fleet.probe`` hits one path no route
+registers (``/api/v2/healthz``) — each must produce exactly one
+finding, while the clean reads/probes and the annotated compat probe
+stay silent.
+"""
+
+
+class Hub:
+    def __init__(self):
+        self.role = "leader"
+        self.epoch = 0
+
+    def status(self):
+        return {"role": self.role, "epoch": self.epoch}
+
+
+class Fleet:
+    def health(self):
+        out = {}
+        out["workers"] = []
+        return out
+
+    def gather(self, payload):
+        ok = payload.get("role")           # produced by Hub.status: clean
+        lag = payload.get("lag_records")   # drift: no producer emits it
+        pinned = payload["epoch"]          # produced by Hub.status: clean
+        return ok, lag, pinned
+
+    def probe(self, conn):
+        conn.request("GET", "/api/v2/health")    # registered: clean
+        conn.request("GET", "/api/v2/healthz")   # drift: no such route
+        conn.request("GET", "/api/v2/legacy")    # repro-check: allow(wire) -- compat probe kept for old fleets
+        prefix = "/api/v2/studies/"              # prefix constant: exempt
+        return prefix

@@ -1,0 +1,14 @@
+"""Fixture route table: what the fixture server actually registers."""
+
+
+class Route:
+    def __init__(self, *args, **kwargs):
+        self.args = args
+        self.kwargs = kwargs
+
+
+ROUTES = [
+    Route("GET", "/api/v2/health", None),
+    Route("GET", "/api/v2/version", None),
+    Route("GET", "/api/v2/studies/{key}", None),
+]

@@ -1,0 +1,1 @@
+"""Fixture schemas: no request schemas needed for GET probes."""

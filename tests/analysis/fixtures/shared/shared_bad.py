@@ -1,0 +1,34 @@
+"""Seeded shared-state race for the lockset checker.
+
+``Worker.counter`` is written both by the spawned worker thread and by
+the external ``poke`` entry with no lock held anywhere — the empty
+lockset intersection must be flagged.  ``safe`` is touched by the same
+two roots but always under ``self.lock`` (non-empty intersection), and
+``audited`` carries an allow(shared-state) annotation: both stay clean.
+"""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.counter = 0       # racy: written from 2 roots, never locked
+        self.safe = 0          # clean: every access under self.lock
+        # torn reads acceptable: lossy stats counter, display only
+        self.audited = 0  # repro-check: allow(shared-state)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def start(self):
+        self._thread.start()
+
+    def _run(self):
+        self.counter += 1
+        with self.lock:
+            self.safe += 1
+        self.audited += 1
+
+    def poke(self):
+        self.counter += 1
+        with self.lock:
+            self.safe += 1
+        self.audited += 1

@@ -4,8 +4,8 @@ class it exists for (ISSUE PR 8 acceptance).  Every fixture under
 these tests pin both detection and non-detection."""
 from pathlib import Path
 
-from repro.analysis.checkers import (evloop, lock_order, thread_hygiene,
-                                     wal_order, wire_schema)
+from repro.analysis.checkers import (evloop, lock_order, shared_state,
+                                     thread_hygiene, wal_order, wire_schema)
 from repro.analysis.loader import Project
 
 REPO = Path(__file__).resolve().parents[2]
@@ -69,6 +69,8 @@ def test_wire_schema_detects_every_drift_class():
         "routes_modules": ("wire_routes",),
         "code_modules": None,
         "extra_codes": (),
+        "probe_modules": (),
+        "health_surfaces": (),
     })
     by_rule = {f.rule: f for f in findings}
     assert set(by_rule) == {"client-route-mismatch", "client-field-unknown",
@@ -79,6 +81,71 @@ def test_wire_schema_detects_every_drift_class():
     assert "GHOST_CODE" in by_rule["error-code-drift"].message
     # tell_ok matches the route and schema exactly: 4 findings total
     assert len(findings) == 4
+
+
+def test_wire_schema_detects_health_probe_and_field_drift():
+    findings = wire_schema.run(_project("health"), {
+        "client_module": "health_client",
+        "schemas_module": "health_schemas",
+        "routes_modules": ("health_routes",),
+        "code_modules": None,
+        "extra_codes": (),
+        "probe_modules": ("health_impl",),
+        "health_surfaces": (
+            {"name": "fleet-health",
+             "producers": ("health_impl.Hub.status",
+                           "health_impl.Fleet.health"),
+             "consumers": ("health_impl.Fleet.gather",)},
+            # every producer renamed away: coverage loss must be loud
+            {"name": "ghost-surface",
+             "producers": ("health_impl.Gone.status",),
+             "consumers": ("health_impl.Fleet.gather",)},
+        ),
+    })
+    by_rule: dict[str, list] = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    assert set(by_rule) == {"probe-route-mismatch", "health-field-drift"}
+    # the unregistered probe is flagged; the registered one, the
+    # trailing-slash prefix, and the allow-annotated compat probe are not
+    probes = by_rule["probe-route-mismatch"]
+    assert len(probes) == 1
+    assert "/api/v2/healthz" in probes[0].message
+    drifts = by_rule["health-field-drift"]
+    assert {d.detail for d in drifts} == {
+        "fleet-health|health_impl.Fleet.gather|lag_records",
+        "surface-empty|ghost-surface",
+    }
+
+
+def test_shared_state_detects_unlocked_field_and_honours_annotation():
+    cfg = {
+        "classes": ("Worker", "Gone"),   # Gone pins the missing-class rule
+        "root_subsystems": ("shared_bad",),
+        "dispatch_edges": (),
+        "extra_roots": (),
+        "aliases": {},
+    }
+    findings = shared_state.run(_project("shared"), cfg)
+    by_rule: dict[str, list] = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    assert set(by_rule) == {"unlocked-shared-field", "missing-class"}
+    assert [f.symbol for f in by_rule["missing-class"]] == ["Gone"]
+    flagged = by_rule["unlocked-shared-field"]
+    # counter is the only hit: safe is consistently locked, audited is
+    # allow-annotated, lock/_thread are synchronization plumbing
+    assert len(flagged) == 1
+    assert flagged[0].symbol == "shared_bad.Worker.counter"
+    assert "empty lockset intersection" in flagged[0].message
+
+    stats = shared_state.stats(_project("shared"), cfg)
+    assert stats["roots_by_subsystem"] == {"shared_bad": 1}
+    assert stats["fields_flagged"] == 1
+    assert stats["fields_allowed"] == 1
+    # the annotation feeds the runtime sanitizer's allowlist too
+    assert shared_state.allowed_fields(_project("shared"), cfg) == {
+        ("Worker", "audited")}
 
 
 def test_thread_hygiene_detects_swallow_and_honours_annotation():

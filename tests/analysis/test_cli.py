@@ -74,3 +74,24 @@ def test_cli_reports_stale_baseline_entries(tmp_path, capsys):
 
 def test_cli_bad_root_is_usage_error(tmp_path):
     assert cli.main(["--root", str(tmp_path / "missing")]) == 2
+
+
+def test_cli_stats_reports_coverage_and_exits_zero_on_core(capsys):
+    rc = cli.main(["--stats"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "thread root(s)" in out
+    # every required subsystem discovered at least one concurrent root
+    for sub in ("aio:", "durable:", "fabric:", "replication:"):
+        assert sub in out and f"{sub} 0" not in out
+    assert "lock class(es)" in out and "route(s)" in out
+
+
+def test_cli_stats_fails_when_root_discovery_collapses(capsys):
+    """The coverage guard: on a package with none of the core spawn
+    sites, zero discovered roots for a required subsystem must be a
+    non-zero exit, not a quiet 'clean' run."""
+    rc = cli.main(["--stats", "--root", str(FIX / "clean")])
+    captured = capsys.readouterr()
+    assert rc == 1
+    assert "zero thread roots" in captured.err

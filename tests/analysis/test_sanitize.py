@@ -116,3 +116,105 @@ def test_sanitizer_observes_consistent_real_lock_orders(tmp_path):
     assert any(k.startswith("storage.") for k in data["keys"]), data["keys"]
     assert data["inversions"] == []     # runtime order agrees with static
     assert data["stalls"] == []
+
+
+# --------------------------------------------------------------------- #
+# race mode: the live twin of the static shared-state checker
+# --------------------------------------------------------------------- #
+def _run_prog(prog: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", prog], env=env,
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_race_mode_catches_seeded_unlocked_write_live():
+    """Same bug class the static fixture seeds, observed at runtime: an
+    instrumented core class gets a field written from two threads with
+    no common lock.  The consistently-locked field and the
+    allow(shared-state)-audited field must stay clean — the sanitizer
+    derives its allowlist from the same annotations the checker reads."""
+    prog = textwrap.dedent("""
+        import json
+        import threading
+        from repro.analysis import sanitize
+        sanitize.install_race()
+        from repro.core.fabric import FabricDispatcher, RouteTable
+
+        d = FabricDispatcher(RouteTable())
+
+        def worker():
+            d.seeded_racy = 2        # unlocked cross-thread write: flagged
+            with d._conns_lock:
+                d.seeded_locked = 2  # consistent lockset: clean
+            d.proxied += 1           # allow-annotated in fabric.py: clean
+
+        d.seeded_racy = 1
+        with d._conns_lock:
+            d.seeded_locked = 1
+        d.proxied += 1
+        t = threading.Thread(target=worker, name="hot")
+        t.start()
+        t.join()
+
+        rep = sanitize.race_report()
+        print(json.dumps({
+            "flagged": sorted([v["class"], v["field"], sorted(v["threads"])]
+                              for v in rep["violations"]),
+            "classes": rep["instrumented_classes"],
+            "tracked": rep["fields_tracked"],
+            "allowed": rep["fields_allowed"],
+        }))
+    """)
+    proc = _run_prog(prog)
+    assert proc.returncode == 0, proc.stderr
+    data = json.loads(proc.stdout.splitlines()[-1])
+    assert data["flagged"] == [
+        ["FabricDispatcher", "seeded_racy", ["MainThread", "hot"]]]
+    assert "FabricDispatcher" in data["classes"]
+    assert data["tracked"] > 0
+    assert data["allowed"] > 0          # annotations reached the allowlist
+
+
+def test_race_mode_fails_pytest_session_on_seeded_bug(tmp_path):
+    """REPRO_SANITIZE=race end-to-end through conftest: a pytest run
+    whose tests perform an unlocked cross-thread write must fail at
+    session finish even though every test body passed."""
+    import shutil
+    import tempfile
+
+    seed_dir = Path(tempfile.mkdtemp(prefix="race_seed_",
+                                     dir=REPO / "tests"))
+    (seed_dir / "test_seeded_race.py").write_text(textwrap.dedent("""
+        import threading
+
+        from repro.core.fabric import FabricDispatcher, RouteTable
+
+
+        def test_unlocked_cross_thread_write_passes_but_is_recorded():
+            d = FabricDispatcher(RouteTable())
+            d.seeded_racy = 1
+            t = threading.Thread(
+                target=lambda: setattr(d, "seeded_racy", 2))
+            t.start()
+            t.join()
+            assert d.seeded_racy == 2
+    """))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["REPRO_SANITIZE"] = "race"
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+             str(seed_dir / "test_seeded_race.py")],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    finally:
+        shutil.rmtree(seed_dir, ignore_errors=True)
+    out = proc.stdout + proc.stderr
+    assert proc.returncode != 0, out
+    assert "repro-sanitize: RACE: FabricDispatcher.seeded_racy" in out
+    # the test body itself was green: the failure comes from the session-
+    # finish hook (which aborts before pytest's own summary line)
+    assert "[100%]" in out and "1 failed" not in out

@@ -639,3 +639,80 @@ def test_fabric_health_reports_followers_and_lag():
         assert payload["replication"]["client"]["connected"] is True
     finally:
         fab.stop()
+
+
+@pytest.mark.chaos
+def test_cold_start_adopts_highest_epoch_replica_root(tmp_path):
+    """ROADMAP item 6 regression: after an in-flight failover (follower
+    promoted, epoch bumped, writes landing in ``worker-N-replica-M/``),
+    a full-fleet SIGKILL + restart on the same journal root must boot
+    the shard from the highest journaled epoch — every acked
+    post-failover tell is served by the reborn fleet, digest-verified,
+    not silently dropped by an epoch-0 boot from ``worker-N/``."""
+    root = str(tmp_path)
+    fab = ShardFabric(workers=2, replicas=1, replication="semisync",
+                      fsync="always", respawn_poll=0.1, root=root).start()
+    told: list[str] = []
+    try:
+        cl, _tok = _fab_client(fab)
+        study = _fab_study(cl, "coldstart")
+        key = study._ensure_key()
+        wid = fab.owner_of(key)
+        for _ in range(4):
+            t = study.ask()
+            study.tell(t, value=abs(t.x))
+            told.append(t.uid)
+
+        # in-flight failover: the follower takes over at a bumped epoch
+        old_pid = fab._workers[wid].pid
+        fab.kill_worker(wid, sig=signal.SIGKILL)
+        fab.wait_respawn(wid, old_pid, timeout=30)
+        assert any(e["event"] == "failover" for e in fab.events)
+        promoted_epoch = fab._workers[wid].epoch
+        assert promoted_epoch >= 1
+        # acked post-failover tells: these land in a replica-M root
+        for _ in range(4):
+            t = study.ask()
+            study.tell(t, value=abs(t.x))
+            told.append(t.uid)
+    finally:
+        # full-fleet kill: no graceful drain, the page cache + fsynced
+        # WALs are all that survives
+        fab._stop_event.set()
+        if fab._monitor is not None:
+            fab._monitor.join(timeout=10.0)
+        with fab._fleet_lock:
+            procs = [wp.proc for wp in fab._workers.values()]
+            procs += [fp.proc for fols in fab._followers.values()
+                      for fp in fols]
+            procs += [wp.proc for wp in fab._deposed]
+        for proc in procs:
+            if proc.poll() is None:
+                proc.kill()
+        fab.stop()
+
+    fab2 = ShardFabric(workers=2, replicas=1, replication="semisync",
+                       fsync="always", respawn_poll=0.1, root=root).start()
+    try:
+        adopts = [e for e in fab2.events if e["event"] == "cold_start_adopt"]
+        assert adopts, "cold start ignored the higher-epoch replica root"
+        event = next(e for e in adopts if e["worker"] == wid)
+        assert event["epoch"] > promoted_epoch
+        assert event["digest_match"] is True
+        assert fab2._workers[wid].epoch == event["epoch"]
+
+        # every acked tell — before and after the in-flight failover —
+        # is served by the reborn fleet
+        cl2, _tok2 = _fab_client(fab2)
+        completed = {t["uid"] for t in cl2.iter_trials(key,
+                                                       state="completed")}
+        assert set(told) <= completed
+        assert cl2.study(key)["n_completed"] == len(completed)
+
+        # the fleet keeps working at the adopted epoch (new followers
+        # get fresh replica roots, no collision with the adopted one)
+        study2 = _fab_study(cl2, "coldstart")
+        t = study2.ask()
+        study2.tell(t, value=abs(t.x))
+    finally:
+        fab2.stop()
