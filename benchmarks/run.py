@@ -20,8 +20,8 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 # tables fast enough (and dependency-light enough) for the CI smoke run
-SMOKE_TABLES = ("api", "campaign", "ask_latency", "storage", "transport",
-                "fabric", "replication")
+SMOKE_TABLES = ("api", "campaign", "ask_latency", "parallel_ask", "storage",
+                "transport", "fabric", "replication")
 
 TABLES = {
     "api": ("bench_api", "paper sec.3: transports + horizontal scaling"),
@@ -34,15 +34,27 @@ TABLES = {
     "replication": ("bench_replication",
                     "PR 7: WAL-shipping replication — throughput vs "
                     "replication mode + measured failover gap"),
-    "samplers": ("bench_samplers", "paper sec.1/2: BO beats random"),
-    "ask_latency": ("bench_sampler",
+    "convergence": ("bench_convergence", "paper sec.1/2: BO beats random"),
+    "ask_latency": ("bench_ask_latency",
                     "PR 2: ask latency vs history (obs cache + fused kernels)"),
+    "parallel_ask": ("bench_parallel_ask",
+                     "PR 10: speculative ask pipeline — contended ask/tell "
+                     "throughput + constant-liar batch quality"),
     "storage": ("bench_storage",
                 "PR 4: fsync-mode throughput + snapshot/segment recovery"),
     "pruners": ("bench_pruners", "paper sec.2: pruning saves compute"),
     "campaign": ("bench_campaign", "paper sec.4: elastic multi-worker campaign"),
     "hpo_train": ("bench_hpo_train", "end-to-end: HOPAAS steering JAX training"),
     "roofline": ("bench_roofline", "dry-run roofline terms (deliverable g)"),
+}
+
+# the bench_sampler/bench_samplers near-twin pair was consolidated into
+# names that say what each table measures; keep the old spellings as
+# hard errors (not aliases) so stale scripts fail loudly, not silently
+RENAMED = {
+    "samplers": "convergence",
+    "bench_samplers": "convergence",
+    "bench_sampler": "ask_latency",
 }
 
 
@@ -71,6 +83,13 @@ def main() -> int:
     if args.only:
         only = {n for n in (s.strip() for s in args.only.split(","))
                 if n}
+        renamed = only & set(RENAMED)
+        if renamed:
+            for old in sorted(renamed):
+                print(f"benchmark table '{old}' was renamed to "
+                      f"'{RENAMED[old]}'; use --only {RENAMED[old]}",
+                      file=sys.stderr)
+            return 2
         unknown = only - set(TABLES)
         if unknown or not only:
             # a misspelled --only must not look like a green run

@@ -37,7 +37,7 @@ _LOCK_FACTORIES = {"Lock", "RLock", "Condition", "BoundedSemaphore",
 DEFAULT_CONFIG = {
     # modules whose lock spans are analyzed (project-relative names)
     "modules": ("storage", "durable", "aio", "fabric", "replication",
-                "server"),
+                "server", "speculate"),
     # lock classes defined in these modules are "shard or WAL" locks:
     # blocking while holding one is a finding
     "critical_modules": ("storage", "durable"),

@@ -55,10 +55,12 @@ DEFAULT_CONFIG = {
     # name missing from the project is itself a finding (coverage pin)
     "classes": ("_StudyShard", "DurableStorage", "ReplicationHub",
                 "ReplicationClient", "FabricDispatcher",
-                "EventLoopFrontend"),
+                "EventLoopFrontend", "SpeculativeQueue",
+                "SpeculativeWorker"),
     # subsystems (top-level module names) that must contribute at least
     # one discovered thread root — used by the --stats coverage guard
-    "root_subsystems": ("aio", "durable", "fabric", "replication"),
+    "root_subsystems": ("aio", "durable", "fabric", "replication",
+                        "speculate"),
     # dynamic dispatch the AST cannot resolve: the router calls handler
     # closures registered at construction time, so handler bodies (which
     # live in the register_* functions) run on whatever thread dispatches

@@ -248,6 +248,12 @@ class AskRequest(Schema):
     NAME = "AskRequest"
     FIELDS = (
         Field("worker_id", "str", nullable=True),
+        Field("parallelism", "int", nullable=True, min_value=1,
+              max_value=4096,
+              doc="worker-fleet size hint: the speculative precompute "
+                  "sizes its proposal buffer to cover one wave of this "
+                  "many concurrent asks (ignored when speculation is "
+                  "disabled)"),
     )
 
 
@@ -259,6 +265,12 @@ class AskBatchRequest(Schema):
         Field("n", "int", default=1, min_value=1, max_value=4096,
               doc="number of trials to suggest in one round trip"),
         Field("worker_id", "str", nullable=True),
+        Field("parallelism", "int", nullable=True, min_value=1,
+              max_value=4096,
+              doc="worker-fleet size hint: the speculative precompute "
+                  "sizes its proposal buffer to cover one wave of this "
+                  "many concurrent asks (ignored when speculation is "
+                  "disabled)"),
     )
 
 
@@ -492,6 +504,10 @@ class HealthResponse(Schema):
         Field("storage", "dict", nullable=True,
               doc="WAL/fsync stats subset (backend, fsync mode, wal "
                   "records/bytes, fsyncs, group commits)"),
+        Field("speculation", "dict", nullable=True,
+              doc="speculative ask pipeline counters: queue hit/stale/"
+                  "miss, published buffers, pending-trial count, "
+                  "precompute rounds/errors"),
         Field("workers", "list", nullable=True, item_kind="dict",
               doc="fabric router only: per-worker health"),
     )

@@ -74,12 +74,14 @@ def register_v2(router: Router, server: Any) -> None:
         return {"trials": trials, "next_cursor": next_cursor}
 
     def ask(req: Request):
-        (trial,) = server.op_ask(req.path_params["key"], _worker_id(req), 1)
+        (trial,) = server.op_ask(req.path_params["key"], _worker_id(req), 1,
+                                 parallelism=req.body.get("parallelism"))
         return trial
 
     def ask_batch(req: Request):
         trials = server.op_ask(req.path_params["key"], _worker_id(req),
-                               req.body["n"])
+                               req.body["n"],
+                               parallelism=req.body.get("parallelism"))
         return {"trials": trials, "study_key": req.path_params["key"]}
 
     def get_trial(req: Request):

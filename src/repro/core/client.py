@@ -190,18 +190,28 @@ class Client:
                              op="create_study", ok=(200, 201))
         return payload["study"]["key"], payload["created"]
 
-    def ask(self, study_key: str, worker_id: str | None = None
-            ) -> dict[str, Any]:
+    def ask(self, study_key: str, worker_id: str | None = None,
+            parallelism: int | None = None) -> dict[str, Any]:
+        # parallelism = how many workers share this study; the server's
+        # speculative precompute sizes its proposal buffer to cover one
+        # wave of that many concurrent asks
+        body: dict[str, Any] = {"worker_id": worker_id or self.worker_id}
+        if parallelism is not None:
+            body["parallelism"] = parallelism
         return self._call(
             "POST", f"/api/v2/studies/{study_key}/trials:ask",
-            {"worker_id": worker_id or self.worker_id}, op="ask")
+            body, op="ask")
 
     def ask_batch(self, study_key: str, n: int,
-                  worker_id: str | None = None) -> list[dict[str, Any]]:
+                  worker_id: str | None = None,
+                  parallelism: int | None = None) -> list[dict[str, Any]]:
+        body: dict[str, Any] = {"n": n,
+                                "worker_id": worker_id or self.worker_id}
+        if parallelism is not None:
+            body["parallelism"] = parallelism
         payload = self._call(
             "POST", f"/api/v2/studies/{study_key}/trials:ask_batch",
-            {"n": n, "worker_id": worker_id or self.worker_id},
-            op="ask_batch")
+            body, op="ask_batch")
         return payload["trials"]
 
     def tell(self, trial_uid: str, value: Any = None,

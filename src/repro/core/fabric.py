@@ -1003,6 +1003,7 @@ class FabricWorkerServer:
             out["hub"] = self.hub.status()
         if self.repl_client is not None:
             out["client"] = self.repl_client.status()
+        out["speculation"] = self.server.speculation_stats()
         return out
 
     def _op_promote(self, body: dict[str, Any]
@@ -1188,6 +1189,25 @@ def main(argv: list[str] | None = None) -> int:
 # --------------------------------------------------------------------- #
 # the fabric: spawn, route, rebalance, respawn
 # --------------------------------------------------------------------- #
+def _merge_speculation(entries: list[dict[str, Any]]) -> dict[str, Any]:
+    """Sum per-worker speculative-ask counters into one fleet block.
+
+    Each worker's ``/fabric/replication`` payload carries the
+    ``speculation`` dict from ``HopaasServer.speculation_stats()``;
+    workers that failed the control ping (or predate the field) simply
+    don't contribute."""
+    blocks = [e["speculation"] for e in entries
+              if isinstance(e.get("speculation"), dict)]
+    merged: dict[str, Any] = {
+        "enabled": any(b.get("enabled") for b in blocks),
+        "workers_reporting": len(blocks)}
+    for key in ("hits", "stale_hits", "misses", "published", "rejected",
+                "discarded", "queued", "pending_trials", "rounds",
+                "errors"):
+        merged[key] = sum(int(b.get(key, 0)) for b in blocks)
+    return merged
+
+
 class _WorkerProc:
     __slots__ = ("wid", "proc", "host", "port", "pid", "root", "digest",
                  "recovery", "role", "epoch", "repl_port", "replica_k")
@@ -1816,6 +1836,7 @@ class ShardFabric:
                     entry["error"] = f"{type(e).__name__}: {e}"
                 entries.append(entry)
         return {"status": "ok", "workers": entries,
+                "speculation": _merge_speculation(entries),
                 "replicas": self.replicas, "replication": self.replication,
                 "respawns": self.respawns, "failovers": self.failovers}
 

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import matern52_cross
+from ..obs_cache import check_liar
+from ..obs_cache import liar_value as _liar_value
 from ..obs_cache import pad_pow2 as _pad_pow2
 from ..space import SearchSpace
 from ..types import Direction, Trial
@@ -59,39 +61,105 @@ def _gp_ei(X: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
 
 class GPSampler(Sampler):
     uses_cache = True
+    pending_aware = True
+
+    # GP is O(n^3); beyond this many observations defer to quasirandom
+    # exploration (TPE is the scalable default anyway).
+    MAX_OBSERVATIONS = 512
 
     def __init__(self, n_startup_trials: int = 8, n_candidates: int = 256,
-                 lengthscale: float = 0.25, seed: int = 0):
+                 lengthscale: float = 0.25, seed: int = 0,
+                 liar: str = "mean"):
         self.n_startup_trials = int(n_startup_trials)
         self.n_candidates = int(n_candidates)
         self.lengthscale = float(lengthscale)
+        self.liar = check_liar(liar)
         self._startup = QuasiRandomSampler(seed=seed)
 
-    def suggest(self, space: SearchSpace, trials: list[Trial],
-                direction: Direction, rng: np.random.Generator,
-                cache: Any = None) -> dict[str, Any]:
+    def _padded_obs(self, space: SearchSpace, trials: list[Trial],
+                    direction: Direction, cache: Any
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int,
+                               float | None]:
+        """(Xp, yp, mp, n_obs, liar) — pow-2 padded posterior evidence
+        including the constant-liar fantasy rows for RUNNING trials."""
         if cache is not None:
             n_obs = cache.count
-        else:
-            X, y = self.observations(space, trials, direction)
-            n_obs = len(y)
-        if n_obs < self.n_startup_trials or space.dim == 0 or n_obs > 512:
-            # GP is O(n^3); beyond 512 observations defer to quasirandom
-            # exploration (TPE is the scalable default anyway).
-            return self._startup.suggest(space, trials, direction, rng)
+            if self.liar != "none":
+                Xp, yp, mp = cache.padded_augmented()
+                lv = cache.liar_value()
+            else:
+                Xp, yp, mp = cache.padded()
+                lv = None
+            return Xp, yp, mp, n_obs, lv
+        X, y, n_obs = self.observations_pending(
+            space, trials, direction, liar=self.liar)
+        total = len(y)
+        n = _pad_pow2(total)
+        Xp = np.zeros((n, space.dim)); Xp[:total] = X
+        yp = np.zeros(n); yp[:total] = y
+        mp = np.zeros(n); mp[:total] = 1.0
+        lv = (_liar_value(y[:n_obs], self.liar)
+              if self.liar != "none" and n_obs else None)
+        return Xp, yp, mp, n_obs, lv
 
-        if cache is not None:
-            Xp, yp, mp = cache.padded()     # pre-padded, pow-2 capacity
-        else:
-            n = _pad_pow2(n_obs)
-            Xp = np.zeros((n, space.dim)); Xp[:n_obs] = X
-            mp = np.zeros(n); mp[:n_obs] = 1.0
-            yp = np.zeros(n); yp[:n_obs] = y
-
+    def _ei_argmax(self, space: SearchSpace, rng: np.random.Generator,
+                   Xp: np.ndarray, yp: np.ndarray, mp: np.ndarray
+                   ) -> np.ndarray:
+        """Unit-cube point maximizing EI over one fresh Halton pool."""
         # one batched Halton draw — no per-candidate sampler construction
         qr = QuasiRandomSampler(seed=int(rng.integers(0, 2**31 - 1)))
         cands = qr.points(0, self.n_candidates, space.dim)
         ls = jnp.full((space.dim,), self.lengthscale)
         ei = _gp_ei(jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mp),
                     jnp.asarray(cands), ls)
-        return space.from_unit_vector(cands[int(np.argmax(np.asarray(ei)))])
+        return cands[int(np.argmax(np.asarray(ei)))]
+
+    def speculative_ready(self, cache: Any) -> bool:
+        return (self.liar != "none"
+                and self.n_startup_trials <= cache.count
+                <= self.MAX_OBSERVATIONS)
+
+    def suggest(self, space: SearchSpace, trials: list[Trial],
+                direction: Direction, rng: np.random.Generator,
+                cache: Any = None) -> dict[str, Any]:
+        Xp, yp, mp, n_obs, _ = self._padded_obs(
+            space, trials, direction, cache)
+        if n_obs < self.n_startup_trials or space.dim == 0 \
+                or n_obs > self.MAX_OBSERVATIONS:
+            return self._startup.suggest(space, trials, direction, rng)
+        return space.from_unit_vector(
+            self._ei_argmax(space, rng, Xp, yp, mp))
+
+    def suggest_batch(self, space: SearchSpace, trials: list[Trial],
+                      direction: Direction, rng: np.random.Generator,
+                      n: int, cache: Any = None, chunk: int | None = None,
+                      **kwargs: Any) -> list[dict[str, Any]]:
+        """Fantasy-accumulating batch: after each pick the point is
+        appended as a liar-valued observation, so the next EI round is
+        repelled from it — n distinct proposals, not n argmax copies.
+        ``chunk`` (the speculative streaming hint) is accepted for API
+        parity with TPE and ignored: GP batches are inherently
+        per-point fantasy updates."""
+        Xp, yp, mp, n_obs, lv = self._padded_obs(
+            space, trials, direction, cache)
+        if lv is None or n_obs < self.n_startup_trials or space.dim == 0 \
+                or n_obs > self.MAX_OBSERVATIONS:
+            return super().suggest_batch(space, trials, direction, rng, n,
+                                         cache=cache, **kwargs)
+        # private copies: the padded views may be the cache's memoized
+        # buffers and must not see our fantasy rows
+        Xc, yc, mc = np.array(Xp), np.array(yp), np.array(mp)
+        total = int(mc.sum())
+        out: list[np.ndarray] = []
+        for _ in range(n):
+            pick = self._ei_argmax(space, rng, Xc, yc, mc)
+            out.append(pick)
+            if total == len(yc):          # grow to the next pow-2 shape
+                cap = _pad_pow2(total + 1)
+                Xg = np.zeros((cap, space.dim)); Xg[:total] = Xc[:total]
+                yg = np.zeros(cap); yg[:total] = yc[:total]
+                mg = np.zeros(cap); mg[:total] = mc[:total]
+                Xc, yc, mc = Xg, yg, mg
+            Xc[total], yc[total], mc[total] = pick, lv, 1.0
+            total += 1
+        return space.from_unit_matrix(np.stack(out))

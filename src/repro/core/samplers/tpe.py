@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import parzen_log_density
+from ..obs_cache import check_liar, liar_value
 from ..obs_cache import pad_pow2 as _pad_pow2
 from ..space import SearchSpace
 from ..types import Direction, Trial
@@ -92,19 +93,27 @@ def _tpe_propose(xg: jnp.ndarray, mg: jnp.ndarray,
 
 class TPESampler(Sampler):
     uses_cache = True
+    pending_aware = True
 
     def __init__(self, n_startup_trials: int = 10, gamma: float | None = None,
-                 n_candidates: int = 64, seed: int = 0):
+                 n_candidates: int = 64, seed: int = 0, liar: str = "mean",
+                 liar_chunk: int = 4):
         self.n_startup_trials = int(n_startup_trials)
         self.gamma = gamma                 # None -> Optuna default schedule
         self.n_candidates = int(n_candidates)
+        self.liar = check_liar(liar)
+        # batched asks re-split after every `liar_chunk` fantasy appends:
+        # within a chunk the proposals are distinct top-scored candidates
+        # of one fused evaluation, across chunks the liar rows push the
+        # next chunk away from what the batch already claimed
+        self.liar_chunk = max(1, int(liar_chunk))
         self._startup = QuasiRandomSampler(seed=seed)
         # good/bad split of the cached observations, memoized on the
-        # cache state: observations are append-only, so the split (and
-        # the padded device buffers) only change when a tell lands —
-        # repeat asks against an unchanged history skip straight to the
-        # jitted proposal
-        self._split_key: tuple[int, int] | None = None
+        # cache token (observed count + pending-set fingerprint): the
+        # split (and the padded device buffers) only changes when a tell
+        # lands or the in-flight set churns — repeat asks against an
+        # unchanged history skip straight to the jitted proposal
+        self._split_key: tuple | None = None
         self._split: tuple | None = None
 
     def _n_good(self, n: int) -> int:
@@ -112,16 +121,9 @@ class TPESampler(Sampler):
             return max(2, int(math.ceil(self.gamma * n)))
         return max(2, min(int(math.ceil(0.1 * n)), 25))   # Optuna default_gamma
 
-    def _split_observations(self, space: SearchSpace, trials: list[Trial],
-                            direction: Direction, cache: Any) -> tuple | None:
-        """Padded (xg, mg, xb, mb) device buffers, or None in startup."""
-        memo_key = None if cache is None else (id(cache), cache.count)
-        if memo_key is not None and memo_key == self._split_key:
-            return self._split
-        X, y = self.observations(space, trials, direction, cache=cache)
-        if len(y) < self.n_startup_trials or space.dim == 0:
-            return None
-
+    def _split_xy(self, space: SearchSpace, X: np.ndarray, y: np.ndarray
+                  ) -> tuple:
+        """Good/bad Parzen split of (X, y) as padded device buffers."""
         n_good = self._n_good(len(y))
         order = np.argsort(y)
         good, bad = X[order[:n_good]], X[order[n_good:]]
@@ -133,11 +135,27 @@ class TPESampler(Sampler):
         mg = np.zeros(ng); mg[: len(good)] = 1.0
         xb = np.zeros((nb, space.dim)); xb[: len(bad)] = bad
         mb = np.zeros(nb); mb[: len(bad)] = 1.0
-        split = (jnp.asarray(xg), jnp.asarray(mg),
-                 jnp.asarray(xb), jnp.asarray(mb))
+        return (jnp.asarray(xg), jnp.asarray(mg),
+                jnp.asarray(xb), jnp.asarray(mb))
+
+    def _split_observations(self, space: SearchSpace, trials: list[Trial],
+                            direction: Direction, cache: Any) -> tuple | None:
+        """Padded (xg, mg, xb, mb) device buffers, or None in startup."""
+        memo_key = None if cache is None else (id(cache), cache.token)
+        if memo_key is not None and memo_key == self._split_key:
+            return self._split
+        X, y, n_obs = self.observations_pending(
+            space, trials, direction, cache=cache, liar=self.liar)
+        if n_obs < self.n_startup_trials or space.dim == 0:
+            return None
+        split = self._split_xy(space, X, y)
         if memo_key is not None:
             self._split_key, self._split = memo_key, split
         return split
+
+    def speculative_ready(self, cache: Any) -> bool:
+        return (self.liar != "none"
+                and cache.count >= self.n_startup_trials)
 
     def _propose(self, space: SearchSpace, trials: list[Trial],
                  direction: Direction, rng: np.random.Generator,
@@ -148,11 +166,15 @@ class TPESampler(Sampler):
             return None
         xg, mg, xb, mb = split
         key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
-        # pow-of-two pool growth keeps the jit cache small when k varies
-        pool = (self.n_candidates if k <= self.n_candidates
-                else _pad_pow2(k, self.n_candidates))
-        u = _tpe_propose(xg, mg, xb, mb, key, pool)
+        u = _tpe_propose(xg, mg, xb, mb, key, self._pool(k))
         return np.asarray(u[:k])
+
+    def _pool(self, k: int) -> int:
+        """Candidate-pool size for a top-``k`` draw: at least 4x the
+        ask so the acquisition keeps selection pressure (top-k of a
+        k-sized pool is just the pool, ranked), pow-2-padded so the jit
+        cache stays small when k varies."""
+        return max(self.n_candidates, _pad_pow2(4 * k))
 
     def suggest(self, space: SearchSpace, trials: list[Trial],
                 direction: Direction, rng: np.random.Generator,
@@ -164,13 +186,56 @@ class TPESampler(Sampler):
 
     def suggest_batch(self, space: SearchSpace, trials: list[Trial],
                       direction: Direction, rng: np.random.Generator,
-                      n: int, cache: Any = None,
+                      n: int, cache: Any = None, chunk: int | None = None,
                       **kwargs: Any) -> list[dict[str, Any]]:
-        """Vectorized batch proposal: one fused KDE evaluation scores the
-        shared candidate pool and the top-n candidates become the batch,
-        decoded in one batched codec call."""
-        u = self._propose(space, trials, direction, rng, n, cache=cache)
-        if u is None:           # startup: fall back to the sequential path
+        """Batch proposal with incremental constant-liar updates.
+
+        The batch is built in chunks of ``liar_chunk``: each chunk takes
+        the top-scored candidates of one fused KDE evaluation (distinct
+        points, not copies of the argmax), then the chunk is appended to
+        the history as fantasy rows at the liar value and the split is
+        recomputed — so later chunks are repelled from what the batch
+        already claimed, the same way concurrent workers repel each
+        other through the pending view.  With ``liar="none"`` this
+        degrades to the legacy single fused top-n draw.
+
+        ``chunk`` overrides the adaptive chunk size — the speculative
+        precompute streams a round as slices whose liar chaining happens
+        in the caller (``CacheSnapshot.with_fantasies``), so each slice
+        must be exactly one fused evaluation, not re-chunked here.
+        """
+        if self.liar == "none":
+            u = self._propose(space, trials, direction, rng, n, cache=cache)
+            if u is None:       # startup: fall back to the sequential path
+                return super().suggest_batch(space, trials, direction, rng,
+                                             n, cache=cache, **kwargs)
+            return space.from_unit_matrix(u)
+
+        X, y, n_obs = self.observations_pending(
+            space, trials, direction, cache=cache, liar=self.liar)
+        if n_obs < self.n_startup_trials or space.dim == 0:
             return super().suggest_batch(space, trials, direction, rng, n,
                                          cache=cache, **kwargs)
-        return space.from_unit_matrix(u)
+        lv = liar_value(y[:n_obs], self.liar)
+        # large batches (speculative precompute at high parallelism) cap
+        # the split count at 8: re-splitting every `liar_chunk` rows
+        # would make a 256-proposal round ~64 KDE rebuilds, slow enough
+        # to starve the queue it is meant to fill
+        if chunk is None:
+            chunk = max(self.liar_chunk, -(-n // 8))
+        else:
+            chunk = max(1, int(chunk))
+        chunks: list[np.ndarray] = []
+        got = 0
+        while got < n:
+            k = min(chunk, n - got)
+            xg, mg, xb, mb = self._split_xy(space, X, y)
+            key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+            u = np.asarray(_tpe_propose(xg, mg, xb, mb, key,
+                                        self._pool(k))[:k])
+            chunks.append(u)
+            got += k
+            if got < n:
+                X = np.concatenate([X, u])
+                y = np.concatenate([y, np.full(k, lv)])
+        return space.from_unit_matrix(np.concatenate(chunks))

@@ -63,6 +63,7 @@ from .obs_cache import ObservationCache
 from .pruners import make_pruner
 from .samplers import make_sampler
 from .space import SearchSpace
+from .speculate import SpeculativeQueue, SpeculativeWorker
 from .storage import InMemoryStorage
 from .types import Direction, StudyConfig, Trial, TrialState
 
@@ -95,6 +96,18 @@ def _default_storage() -> InMemoryStorage:
     return InMemoryStorage()
 
 
+def _default_speculate_depth() -> int:
+    """Depth of the per-study speculative proposal buffer, from the
+    ``REPRO_SPECULATE`` env (0 = off).  Off by default: a bare server's
+    proposals must not depend on background-thread timing — speculation
+    is opted into per deployment (``--speculate-depth``), per server
+    (ctor arg), or per fleet (env, inherited by fabric workers)."""
+    try:
+        return max(0, int(os.environ.get("REPRO_SPECULATE", "0") or 0))
+    except ValueError:
+        return 0
+
+
 def _require_finite_value(value: float | None, field: str = "value") -> None:
     """Non-finite objectives never reach storage: NaN corrupts incumbent
     comparisons and bare NaN/Infinity is invalid strict JSON for the WAL.
@@ -122,13 +135,39 @@ class StudyContext:
     # synced from the storage's completion log under the shard lock, so
     # ask cost no longer scales with history length
     cache: ObservationCache
+    # speculative ask pipeline (None when speculation is off or the
+    # sampler cannot precompute): version-tagged proposal buffer drained
+    # by op_ask, refilled off-lock by the server's SpeculativeWorker
+    spec: SpeculativeQueue | None = None
+    # dedicated sampler instance for the precompute thread (built
+    # lazily): the request path's sampler memos must never be touched
+    # from two threads
+    spec_sampler: Any = None
+    # precompute round counter — seeds a dedicated rng stream per round,
+    # disjoint from ctx.rng (which stays single-threaded on the request
+    # path); guarded by ctx.lock
+    spec_round: int = 0
+    # largest worker-fleet size hint seen on an ask (the v2
+    # ``parallelism`` field): raises the effective precompute depth so
+    # the buffer covers one full wave of concurrent asks
+    parallelism: int = 0
 
 
 class HopaasServer:
+    # precompute rounds publish in slices of at least this many
+    # proposals so the first supply lands in the queue while the tail
+    # of the round is still computing; each slice is one fused sampler
+    # evaluation, so fewer/larger slices also mean faster rounds (the
+    # background thread is GIL-starved under a contended fleet and
+    # supply rate, not latency, bounds the queue hit rate)
+    _SPECULATE_SLICE = 32
+
     def __init__(self, storage: InMemoryStorage | None = None,
                  tokens: TokenManager | None = None,
                  lease_seconds: float = 60.0, max_retries: int = 3,
-                 seed: int = 0, worker_name: str = "worker-0"):
+                 seed: int = 0, worker_name: str = "worker-0",
+                 speculate_depth: int | None = None,
+                 speculate_staleness: int | None = None):
         self.storage = storage or _default_storage()
         self.tokens = tokens or TokenManager()
         self.lease_seconds = float(lease_seconds)
@@ -138,6 +177,28 @@ class HopaasServer:
         self._contexts: dict[str, StudyContext] = {}
         self._ctx_lock = threading.Lock()      # guards context creation only
         self._router: Router | None = None
+        self.speculate_depth = (_default_speculate_depth()
+                                if speculate_depth is None
+                                else max(0, int(speculate_depth)))
+        # proposals computed <= this many storage versions ago still
+        # drain (the liar rows already anticipated the in-flight trials
+        # behind most bumps — registrations, lease renewals, tells).
+        # None -> dynamic: scales with the fleet-size hint, since a
+        # 256-worker wave legitimately bumps the version ~512 times
+        # between a proposal's compute and its drain
+        self.speculate_staleness = (None if speculate_staleness is None
+                                    else max(0, int(speculate_staleness)))
+        self._speculator: SpeculativeWorker | None = None
+        if self.speculate_depth > 0:
+            self._speculator = SpeculativeWorker(
+                self._precompute_study,
+                name=f"speculate-{worker_name}")
+
+    def close(self) -> None:
+        """Stop the speculative precompute thread (no-op when off)."""
+        if self._speculator is not None:
+            self._speculator.stop()
+            self._speculator = None
 
     # ------------------------------------------------------------------ #
     # wire entry points
@@ -169,15 +230,25 @@ class HopaasServer:
     # ------------------------------------------------------------------ #
     def _build_context(self, key: str, config: StudyConfig) -> StudyContext:
         space = SearchSpace.from_properties(config.properties)
+        sampler = make_sampler(config.sampler)
+        # the cache maintains the pending (constant-liar) view only for
+        # samplers that consume it — everyone else keeps the exact
+        # pre-liar behaviour and sync cost
+        liar = (getattr(sampler, "liar", "none")
+                if getattr(sampler, "pending_aware", False) else "none")
+        speculative = (self._speculator is not None
+                       and getattr(sampler, "uses_cache", False)
+                       and liar != "none")
         return StudyContext(
             key=key, config=config, space=space,
-            sampler=make_sampler(config.sampler),
+            sampler=sampler,
             pruner=make_pruner(config.pruner),
             lock=self.storage.study_lock(key),
             # per-study stream: concurrent asks on different studies must
             # not share one (non-thread-safe) Generator
             rng=np.random.default_rng([self._seed, int(key[:8], 16)]),
-            cache=ObservationCache(space, config.direction))
+            cache=ObservationCache(space, config.direction, liar=liar),
+            spec=SpeculativeQueue() if speculative else None)
 
     def _context(self, config: StudyConfig) -> tuple[StudyContext, bool]:
         study, created = self.storage.get_or_create_study(config)
@@ -327,6 +398,7 @@ class HopaasServer:
             "epoch": int(getattr(self.storage, "lease_epoch", 0)),
             "replication": stats.get("replication"),
             "storage": {k: stats[k] for k in storage_keys if k in stats},
+            "speculation": self.speculation_stats(),
         }
         hook = self.health_hook
         if hook is not None:
@@ -336,8 +408,9 @@ class HopaasServer:
     def op_version_v2(self) -> dict[str, Any]:
         """v2 version resource: adds the storage/durability stats (the v1
         payload is byte-frozen to ``{"version": ...}``)."""
-        return {"version": HOPAAS_VERSION,
-                "storage": self.storage.storage_stats()}
+        stats = dict(self.storage.storage_stats())
+        stats["speculation"] = self.speculation_stats()
+        return {"version": HOPAAS_VERSION, "storage": stats}
 
     def op_create_study(self, spec: dict[str, Any]
                         ) -> tuple[bool, dict[str, Any]]:
@@ -375,14 +448,22 @@ class HopaasServer:
             raise ApiError(404, "trial_not_found", f"unknown trial {uid!r}")
         return self.trial_resource(trial)
 
-    def op_ask(self, study_key: str, worker_id: str | None, n: int = 1
-               ) -> list[dict[str, Any]]:
-        """Suggest ``n`` trials for an *existing* study (v2 path)."""
+    def op_ask(self, study_key: str, worker_id: str | None, n: int = 1,
+               parallelism: int | None = None) -> list[dict[str, Any]]:
+        """Suggest ``n`` trials for an *existing* study (v2 path).
+
+        ``parallelism`` is the client's fleet-size hint: the speculative
+        precompute sizes its proposal buffer to cover one full wave of
+        that many concurrent asks (capped; ignored when speculation is
+        off)."""
         ctx = self._context_for_key(study_key)
         if ctx is None:
             raise ApiError(404, "study_not_found",
                            f"unknown study {study_key!r}")
         with ctx.lock:
+            if parallelism:
+                ctx.parallelism = max(ctx.parallelism,
+                                      min(int(parallelism), 4096))
             self._sweep_study(ctx.key, time.time())
             trials = self._start_trials(ctx, n, worker_id)
         return [self.trial_resource(t) for t in trials]
@@ -436,6 +517,9 @@ class HopaasServer:
                     finished_at=time.time(), lease_deadline=None,
                     idem=(None if not idempotency_key
                           else (idempotency_key, out)))
+        # a finalize is exactly the event that invalidates precomputed
+        # proposals: new observation, smaller pending set
+        self._notify_speculator(self._peek_context(trial.study_key))
         return out
 
     def op_tell_batch(self, tells: list[dict[str, Any]]
@@ -487,6 +571,8 @@ class HopaasServer:
                 self.storage.update_trial(
                     uid, state=TrialState.PRUNED, finished_at=time.time(),
                     lease_deadline=None)
+        if prune:
+            self._notify_speculator(ctx)
         return {"uid": uid, "should_prune": prune}
 
     # ------------------------------------------------------------------ #
@@ -503,6 +589,19 @@ class HopaasServer:
                 break
             batch.append((waiting["params"], waiting["retries"]))
         remaining = n - len(batch)
+        if remaining and ctx.spec is not None:
+            # speculative fast path: drain precomputed proposals.  The
+            # version is stable while we hold the shard lock, and a
+            # drained proposal is registered through the same journaled
+            # add_trial as an inline one — nothing moves off-WAL.
+            version = self.storage.data_version(ctx.key)
+            bound = self._staleness_bound(ctx)
+            while remaining:
+                params = ctx.spec.take(version, bound)
+                if params is None:
+                    break                     # miss -> inline, never block
+                batch.append((params, 0))
+                remaining -= 1
         if remaining:
             kwargs: dict[str, Any] = {}
             if getattr(ctx.sampler, "multi_objective", False):
@@ -511,20 +610,150 @@ class HopaasServer:
                 # O(1) when nothing completed since the last ask; O(new)
                 # otherwise — never a rescan of the trial list
                 kwargs["cache"] = ctx.cache.sync(self.storage, ctx.key)
-            if remaining == 1:
+            # cooperative overprovisioning: a miss already pays the
+            # lock + KDE cost for a top-1 draw, and widening the same
+            # fused evaluation to top-(1+extra) is nearly free — the
+            # surplus publishes at the current version, so the next
+            # wave of asks drains exact hits instead of missing too.
+            # This is what keeps the queue fed under heavy contention:
+            # the lone background thread is GIL-starved by the very
+            # fleet it serves, while the miss path's compute budget
+            # scales with demand by construction.
+            extra = 0
+            if (ctx.spec is not None and "cache" in kwargs
+                    and ctx.sampler.speculative_ready(kwargs["cache"])):
+                extra = max(4, min(32, ctx.parallelism // 8))
+                if remaining == 1:
+                    # single-ask miss (the contended hot path): one
+                    # fused draw, no intra-batch re-chunking
+                    kwargs["chunk"] = remaining + extra
+            if remaining == 1 and not extra:
                 params_list = [ctx.sampler.suggest(
                     ctx.space, study.trials, ctx.config.direction, ctx.rng,
                     **kwargs)]
             else:
                 params_list = ctx.sampler.suggest_batch(
                     ctx.space, study.trials, ctx.config.direction, ctx.rng,
-                    remaining, **kwargs)
+                    remaining + extra, **kwargs)
+            if extra:
+                ctx.spec.publish(self.storage.data_version(ctx.key),
+                                 params_list[remaining:])
+                params_list = params_list[:remaining]
             batch.extend((p, 0) for p in params_list)
-        return [self.storage.add_trial(
-                    ctx.key, params, worker_id=worker_id,
-                    lease_deadline=self._lease_deadline(),
-                    retries=retries)
-                for params, retries in batch]
+        trials = [self.storage.add_trial(
+                      ctx.key, params, worker_id=worker_id,
+                      lease_deadline=self._lease_deadline(),
+                      retries=retries)
+                  for params, retries in batch]
+        # every ask changes the pending set (and possibly drained the
+        # buffer) -> wake the precompute worker to refill against the
+        # new view.  The dirty set dedups bursts.
+        self._notify_speculator(ctx)
+        return trials
+
+    # ------------------------------------------------------------------ #
+    # speculative precompute (off-lock proposal pipeline)
+    # ------------------------------------------------------------------ #
+    def _notify_speculator(self, ctx: StudyContext | None) -> None:
+        if ctx is not None and ctx.spec is not None \
+                and self._speculator is not None:
+            self._speculator.notify(ctx.key)
+
+    def _peek_context(self, study_key: str) -> StudyContext | None:
+        """Already-built context, or None — never builds one (the tell/
+        sweep notify path must stay allocation-free)."""
+        with self._ctx_lock:
+            return self._contexts.get(study_key)
+
+    def _staleness_bound(self, ctx: StudyContext) -> int:
+        """Max proposal age (in storage versions) the drain accepts.
+        A wave of K concurrent asks bumps the version ~2K times (one
+        registration + one tell each) between a proposal's compute and
+        its drain, so the dynamic bound tracks the fleet-size hint."""
+        if self.speculate_staleness is not None:
+            return self.speculate_staleness
+        return max(64, 8 * max(self.speculate_depth, ctx.parallelism))
+
+    def _precompute_study(self, study_key: str) -> None:
+        """SpeculativeWorker callback: regenerate one study's proposal
+        buffer.  Snapshot under the shard lock, sample off it."""
+        ctx = self._context_for_key(study_key)
+        if ctx is None or ctx.spec is None:
+            return
+        with ctx.lock:
+            cache = ctx.cache.sync(self.storage, ctx.key)
+            snap = cache.snapshot()
+            depth = max(self.speculate_depth, ctx.parallelism)
+            round_no = ctx.spec_round
+            ctx.spec_round += 1
+            sampler = ctx.spec_sampler
+            if sampler is None:
+                sampler = make_sampler(ctx.config.sampler)
+                ctx.spec_sampler = sampler
+        if ctx.spec.depth() >= depth:
+            # queue already holds a full wave — don't burn sampler
+            # compute on proposals the next publish would only age out;
+            # the next drain re-notifies and refills
+            return
+        if not sampler.speculative_ready(snap):
+            # startup (or a size-gated model) falls back to index-based
+            # proposals that need the live trial count — inline only
+            return
+        rng = np.random.default_rng(
+            [self._seed, int(study_key[:8], 16), 0x5bec, round_no])
+        # stream the round in slices: each slice is one fused sampler
+        # evaluation published as soon as it lands (same version -> the
+        # queue merges them), then appended to the snapshot as fantasy
+        # rows so the next slice is liar-repelled from it.  Total
+        # compute matches the monolithic chunked batch — only the
+        # publish granularity changes, so contended asks drain the
+        # early slices while the tail is still computing instead of
+        # missing to inline for the whole round.
+        slice_n = max(self._SPECULATE_SLICE, -(-depth // 4))
+        view = snap
+        done = 0
+        while done < depth:
+            k = min(slice_n, depth - done)
+            proposals = sampler.suggest_batch(
+                ctx.space, [], ctx.config.direction, rng, k,
+                cache=view, chunk=k)
+            if not proposals:
+                break
+            if not ctx.spec.publish(snap.version, proposals):
+                break                         # a newer round already landed
+            done += len(proposals)
+            if done < depth:
+                view = view.with_fantasies(
+                    ctx.space.to_unit_matrix(proposals))
+
+    def speculation_stats(self) -> dict[str, Any]:
+        """Aggregated speculative-pipeline counters across studies —
+        surfaced in ``/api/v2/version`` storage stats and ``/health``."""
+        with self._ctx_lock:
+            ctxs = list(self._contexts.values())
+        out: dict[str, Any] = {
+            "enabled": self._speculator is not None,
+            "depth": self.speculate_depth,
+            # the per-drain bound additionally scales with each study's
+            # parallelism hint; this is the floor
+            "staleness_limit": (self.speculate_staleness
+                                if self.speculate_staleness is not None
+                                else max(64, 8 * self.speculate_depth)),
+            "hits": 0, "stale_hits": 0, "misses": 0, "published": 0,
+            "rejected": 0, "discarded": 0, "queued": 0,
+            "pending_trials": 0, "rounds": 0, "errors": 0,
+        }
+        if self._speculator is not None:
+            w = self._speculator.stats()
+            out["rounds"], out["errors"] = w["rounds"], w["errors"]
+        for ctx in ctxs:
+            out["pending_trials"] += ctx.cache.pending_count
+            if ctx.spec is not None:
+                s = ctx.spec.stats()
+                for k in ("hits", "stale_hits", "misses", "published",
+                          "rejected", "discarded", "queued"):
+                    out[k] += s[k]
+        return out
 
     # ------------------------------------------------------------------ #
     # v1 compat endpoints (byte-compatible success payloads; also the
@@ -627,6 +856,8 @@ class HopaasServer:
                 if t.retries < self.max_retries:
                     self.storage.enqueue_params(
                         study_key, t.params, t.retries + 1)
+        if expired:
+            self._notify_speculator(self._peek_context(study_key))
         return len(expired)
 
     def sweep_expired(self, study_key: str | None = None) -> int:

@@ -137,7 +137,19 @@ def main(argv: list[str] | None = None) -> int:
                          "semisync: acks additionally wait for one "
                          "follower ack (default: $REPRO_REPLICATION or "
                          "async)")
+    ap.add_argument("--speculate-depth", type=int, default=None,
+                    help="proposals to precompute off-lock per study "
+                         "(constant-liar speculative ask pipeline); 0 "
+                         "disables (default: $REPRO_SPECULATE or 0)")
     args = ap.parse_args(argv)
+
+    if args.speculate_depth is not None:
+        if args.speculate_depth < 0:
+            ap.error("--speculate-depth must be >= 0")
+        # the fabric's worker processes build their own HopaasServer and
+        # read the depth from the environment, so export it before any
+        # server (in-process or spawned) is constructed
+        os.environ["REPRO_SPECULATE"] = str(args.speculate_depth)
 
     replicas = args.replicas
     if replicas is None:

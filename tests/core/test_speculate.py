@@ -1,0 +1,359 @@
+"""Speculative ask pipeline — constant-liar pending view + off-lock queue.
+
+The pending-aware ``ObservationCache`` must keep its liar rows exactly
+in step with the trial lifecycle (lease -> replace-on-tell ->
+vanish-on-requeue), reproduce bit-identical augmented buffers across a
+WAL replay, and the speculative queue must never move study state
+off-WAL: the ``state_digest`` after a crash mid-speculation matches a
+clean recovery (the queue is a cache; it restarts empty).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.auth import TokenManager
+from repro.core.durable import DurableStorage
+from repro.core.obs_cache import (LIAR_MODES, ObservationCache, check_liar,
+                                  liar_value)
+from repro.core.server import HopaasServer
+from repro.core.space import SearchSpace
+from repro.core.speculate import SpeculativeQueue
+from repro.core.types import Direction
+
+PROPS = {"x": {"type": "uniform", "low": -5, "high": 5},
+         "lr": {"type": "loguniform", "low": 1e-5, "high": 1e-1},
+         "c": {"type": "categorical", "choices": ["a", "b", "c"]}}
+
+SPEC = {"name": "spec-study", "properties": PROPS,
+        "sampler": {"name": "tpe", "n_startup_trials": 4, "liar": "mean"}}
+
+
+def _server(**kw):
+    return HopaasServer(tokens=TokenManager(), seed=11, **kw)
+
+
+def _fill(server, key, n, worker="w0"):
+    """n completed trials through the public ask/tell path."""
+    rng = np.random.default_rng(3)
+    for _ in range(n):
+        (t,) = server.op_ask(key, worker, 1)
+        server.op_tell(t["uid"], float(rng.uniform(0, 10)), "completed")
+
+
+# --------------------------------------------------------------------- #
+# liar imputation values
+# --------------------------------------------------------------------- #
+def test_liar_value_modes():
+    y = np.array([3.0, 1.0, 2.0])
+    assert liar_value(y, "min") == 1.0
+    assert liar_value(y, "max") == 3.0
+    # mean is computed as sum/len over the id-ordered vector — the exact
+    # expression the cache uses, so replay equality is bit-exact
+    assert liar_value(y, "mean") == float(np.sum(y) / len(y))
+    for mode in LIAR_MODES:
+        assert check_liar(mode) == mode
+    with pytest.raises(ValueError):
+        check_liar("median")
+
+
+# --------------------------------------------------------------------- #
+# pending-view lifecycle
+# --------------------------------------------------------------------- #
+def test_pending_row_appears_on_lease_and_is_replaced_on_tell():
+    server = _server()
+    _, study = server.op_create_study(SPEC)
+    key = study["key"]
+    _fill(server, key, 6)
+    ctx = server._context_for_key(key)
+    cache = ctx.cache.sync(server.storage, key)
+    X0, y0 = cache.observations()
+    assert cache.pending_count == 0
+
+    (t,) = server.op_ask(key, "w1", 1)
+    cache.sync(server.storage, key)
+    assert cache.pending_count == 1
+    Xa, ya = cache.augmented()
+    assert Xa.shape[0] == len(y0) + 1
+    lv = liar_value(y0, "mean")
+    assert ya[-1] == lv and cache.liar_value() == lv
+    # observed rows are untouched by the fantasy row
+    assert np.array_equal(Xa[:len(y0)], X0)
+    assert np.array_equal(ya[:len(y0)], y0)
+
+    server.op_tell(t["uid"], 4.25, "completed")
+    cache.sync(server.storage, key)
+    assert cache.pending_count == 0
+    Xb, yb = cache.augmented()
+    # replaced, not duplicated: same row count, real value present
+    assert Xb.shape[0] == len(y0) + 1
+    assert 4.25 in yb
+    server.close()
+
+
+def test_pending_row_vanishes_on_fail_and_on_lease_expiry():
+    server = _server(lease_seconds=0.05)
+    _, study = server.op_create_study(SPEC)
+    key = study["key"]
+    _fill(server, key, 5)
+    ctx = server._context_for_key(key)
+
+    (t,) = server.op_ask(key, "w1", 1)
+    cache = ctx.cache.sync(server.storage, key)
+    assert cache.pending_count == 1
+    server.op_tell(t["uid"], None, "failed")
+    cache.sync(server.storage, key)
+    assert cache.pending_count == 0
+
+    (t2,) = server.op_ask(key, "w2", 1)
+    cache.sync(server.storage, key)
+    assert cache.pending_count == 1
+    time.sleep(0.08)
+    with ctx.lock:
+        server._sweep_study(key, time.time())     # expired -> requeued
+    cache.sync(server.storage, key)
+    assert cache.pending_count == 0
+    assert cache.count == 5                       # nothing fake completed
+    server.close()
+
+
+def test_pending_fingerprint_tracks_set_not_syncs():
+    server = _server()
+    _, study = server.op_create_study(SPEC)
+    key = study["key"]
+    _fill(server, key, 4)
+    ctx = server._context_for_key(key)
+    cache = ctx.cache.sync(server.storage, key)
+    tok = cache.token
+    cache.sync(server.storage, key)               # no-op sync
+    assert cache.token == tok                     # memo keys stay valid
+    server.op_ask(key, "w1", 1)
+    cache.sync(server.storage, key)
+    assert cache.token != tok
+    server.close()
+
+
+def test_wal_replay_reproduces_bit_identical_augmented_buffers(tmp_path):
+    root = str(tmp_path / "wal")
+    storage = DurableStorage(root, fsync="always", auto_compact=False)
+    server = _server(storage=storage)
+    _, study = server.op_create_study(SPEC)
+    key = study["key"]
+    _fill(server, key, 7)
+    server.op_ask(key, "w1", 2)                   # leave 2 RUNNING
+    space = SearchSpace.from_properties(PROPS)
+
+    live = ObservationCache(space, Direction.MINIMIZE, liar="mean")
+    live.sync(storage, key)
+    Xl, yl = live.augmented()
+    Pl = live.padded_augmented()
+    storage.close()                               # crash-equivalent: WAL is
+                                                  # fsynced, no snapshot step
+
+    replayed = DurableStorage(root, fsync="off")
+    again = ObservationCache(space, Direction.MINIMIZE, liar="mean")
+    again.sync(replayed, key)
+    Xr, yr = again.augmented()
+    Pr = again.padded_augmented()
+    assert again.pending_count == 2
+    assert np.array_equal(Xl, Xr) and np.array_equal(yl, yr)
+    for a, b in zip(Pl, Pr):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    replayed.close()
+
+
+# --------------------------------------------------------------------- #
+# queue semantics
+# --------------------------------------------------------------------- #
+def test_queue_staleness_policy_and_cas():
+    q = SpeculativeQueue()
+    assert q.take(0, 8) is None and q.stats()["misses"] == 1
+
+    assert q.publish(10, [{"x": 1.0}, {"x": 2.0}])
+    assert q.take(10, 8) == {"x": 2.0}            # exact version: hit
+    assert q.take(14, 8) == {"x": 1.0}            # within bound: stale hit
+    assert q.publish(20, [{"x": 3.0}])
+    assert q.take(40, 8) is None                  # age 20 > 8: discarded
+    s = q.stats()
+    assert (s["hits"], s["stale_hits"], s["misses"]) == (1, 1, 2)
+    assert s["discarded"] == 1 and s["queued"] == 0
+
+    # CAS: an older compute can never land above a newer buffer
+    assert q.publish(50, [{"x": 4.0}])
+    assert not q.publish(30, [{"x": 5.0}])
+    assert q.stats()["rejected"] == 1
+    assert q.take(50, 0) == {"x": 4.0}
+
+
+def test_queue_retains_previous_round_leftovers():
+    q = SpeculativeQueue()
+    q.publish(10, [{"x": 1.0}, {"x": 2.0}])
+    q.publish(12, [{"x": 3.0}])               # leftovers of v10 survive
+    assert q.depth() == 3
+    assert q.take(12, 64) == {"x": 3.0}       # newest-first
+    assert q.take(12, 64) == {"x": 2.0}       # then the older buffer
+    q.publish(12, [{"x": 4.0}])
+    q.publish(12, [{"x": 5.0}])               # same-version merge
+    assert q.depth() == 3
+    s = q.stats()
+    assert s["published"] == 4 and s["queued"] == 3
+
+
+# --------------------------------------------------------------------- #
+# end-to-end pipeline
+# --------------------------------------------------------------------- #
+def _wait_for(pred, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return pred()
+
+
+def test_speculative_pipeline_precomputes_and_drains():
+    server = _server(speculate_depth=6)
+    try:
+        _, study = server.op_create_study(SPEC)
+        key = study["key"]
+        _fill(server, key, 8)                     # past n_startup -> ready
+        ctx = server._context_for_key(key)
+        assert ctx.spec is not None
+        assert _wait_for(lambda: ctx.spec.depth() > 0)
+
+        trials = server.op_ask(key, "w0", 3, parallelism=12)
+        assert len(trials) == 3
+        stats = server.speculation_stats()
+        assert stats["enabled"] and stats["published"] >= 1
+        assert stats["hits"] + stats["stale_hits"] >= 1
+        assert ctx.parallelism == 12              # hint raises the depth
+        # the wire surfaces carry the same counters
+        assert server.op_health()["speculation"]["enabled"]
+        assert "speculation" in server.op_version_v2()["storage"]
+    finally:
+        server.close()
+
+
+def test_miss_path_overprovisions_the_queue():
+    """An inline miss widens its fused draw and publishes the surplus —
+    the queue refills from the demand side even with the background
+    worker stopped (it is GIL-starved under a real contended fleet)."""
+    server = _server(speculate_depth=6)
+    try:
+        _, study = server.op_create_study(SPEC)
+        key = study["key"]
+        _fill(server, key, 8)                     # past n_startup -> ready
+        ctx = server._context_for_key(key)
+        server._speculator.stop()                 # only the miss path left
+        with ctx.lock:
+            ctx.spec._bufs.clear()                # force the next ask to miss
+        before = ctx.spec.stats()
+        (t,) = server.op_ask(key, "w0", 1)
+        after = ctx.spec.stats()
+        assert after["misses"] == before["misses"] + 1
+        assert after["queued"] >= 4               # surplus landed
+        # and the very next ask drains one of them without missing
+        (t2,) = server.op_ask(key, "w1", 1)
+        final = ctx.spec.stats()
+        assert final["misses"] == after["misses"]
+        assert final["hits"] + final["stale_hits"] > \
+            after["hits"] + after["stale_hits"]
+        assert t2["params"] != t["params"]
+    finally:
+        server.close()
+
+
+def test_parallelism_hint_accepted_over_the_wire():
+    server = _server(speculate_depth=4)
+    try:
+        _, study = server.op_create_study(SPEC)
+        key = study["key"]
+        tok = server.tokens.issue("t")
+        status, payload, _ = server.handle_request(
+            "POST", f"/api/v2/studies/{key}/trials:ask",
+            {"worker_id": "w", "parallelism": 32},
+            {"authorization": f"Bearer {tok}"})
+        assert status == 200, payload
+        assert server._context_for_key(key).parallelism == 32
+        status, payload, _ = server.handle_request(
+            "POST", f"/api/v2/studies/{key}/trials:ask",
+            {"worker_id": "w", "parallelism": 0},
+            {"authorization": f"Bearer {tok}"})
+        assert status == 422                      # min_value=1 enforced
+    finally:
+        server.close()
+
+
+def test_batched_ask_is_not_k_copies():
+    server = _server()
+    try:
+        _, study = server.op_create_study(SPEC)
+        key = study["key"]
+        _fill(server, key, 10)
+        trials = server.op_ask(key, "w0", 8)
+        pts = {tuple(sorted(t["params"].items())) for t in trials}
+        assert len(pts) == 8, "constant-liar batch collapsed to duplicates"
+    finally:
+        server.close()
+
+
+def test_speculation_never_moves_state_off_wal(tmp_path):
+    """state_digest across a crash mid-speculation == clean recovery."""
+    root = str(tmp_path / "wal")
+    storage = DurableStorage(root, fsync="always", auto_compact=False)
+    server = _server(storage=storage, speculate_depth=6)
+    try:
+        _, study = server.op_create_study(SPEC)
+        key = study["key"]
+        _fill(server, key, 8)
+        ctx = server._context_for_key(key)
+        assert _wait_for(lambda: ctx.spec.depth() > 0)
+        server.op_ask(key, "w0", 2)               # drain mid-flight
+        assert _wait_for(lambda: ctx.spec.depth() > 0)  # refilled
+        digest = storage.state_digest()
+    finally:
+        server.close()                            # stops the precompute
+    storage.close()
+
+    replayed = DurableStorage(root, fsync="off")
+    try:
+        assert replayed.state_digest() == digest
+    finally:
+        replayed.close()
+
+
+def test_fabric_workers_inherit_depth_and_fleet_health_aggregates(
+        monkeypatch):
+    """REPRO_SPECULATE propagates to fabric worker processes; the fleet
+    health rolls their per-worker counters into one block."""
+    from repro.core.fabric import ShardFabric
+    monkeypatch.setenv("REPRO_SPECULATE", "4")
+    fab = ShardFabric(workers=2, storage="memory").start()
+    try:
+        spec = fab.health()["speculation"]
+        assert spec["enabled"] is True
+        assert spec["workers_reporting"] == 2
+    finally:
+        fab.stop()
+
+
+def test_speculation_off_by_default_and_proposals_deterministic():
+    a, b = _server(), _server()
+    try:
+        assert a._speculator is None              # REPRO_SPECULATE unset
+        for srv in (a, b):
+            _, study = srv.op_create_study(SPEC)
+        key = study["key"]
+        seqs = []
+        for srv in (a, b):
+            rng = np.random.default_rng(5)
+            out = []
+            for _ in range(6):
+                (t,) = srv.op_ask(key, "w", 1)
+                srv.op_tell(t["uid"], float(rng.uniform(0, 10)), "completed")
+                out.append(tuple(sorted(t["params"].items())))
+            seqs.append(out)
+        assert seqs[0] == seqs[1]
+    finally:
+        a.close()
+        b.close()
